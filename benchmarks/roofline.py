@@ -1,0 +1,118 @@
+"""Roofline analysis from the dry-run artifacts (brief: ROOFLINE ANALYSIS).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), computes the
+three roofline terms per (arch x shape x mesh) from PER-DEVICE quantities
+(XLA cost_analysis reports the partitioned per-device program - calibrated
+in EXPERIMENTS.md §Dry-run), and emits a CSV + markdown table.
+
+    T_compute    = flops_dev / 197e12          (bf16 peak per chip)
+    T_memory     = bytes_dev / 819e9           (HBM bw per chip)
+    T_collective = coll_bytes_dev / 50e9       (ICI per-link bw)
+
+Loop-corrected values (scan bodies counted once by XLA) are used when the
+cell provides them.  MODEL_FLOPS / HLO_FLOPS uses GLOBAL model flops vs
+flops_dev * n_chips.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(results_dir: str = RESULTS) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("skipped"):
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "skipped": rec["reason"]}
+    if not rec.get("ok"):
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh"], "error": rec.get("error", "?")}
+    corr = rec.get("corrected", {})
+    ca = rec.get("cost_analysis", {})
+    co = rec.get("collectives", {})
+    flops = corr.get("flops", ca.get("flops", 0.0))
+    byts = corr.get("bytes_accessed", ca.get("bytes_accessed", 0.0))
+    coll = corr.get("collective_total", co.get("total", 0))
+    n = rec["n_chips"]
+    t_c = flops / PEAK
+    t_m = byts / HBM
+    t_x = coll / ICI
+    dominant = max((("compute", t_c), ("memory", t_m),
+                    ("collective", t_x)), key=lambda kv: kv[1])[0]
+    model_flops = rec.get("meta", {}).get("model_flops", 0.0)
+    hlo_global = flops * n
+    t_bound = max(t_c, t_m, t_x)
+    # roofline fraction: useful model compute / (chips * peak * bound time)
+    frac = (model_flops / (n * PEAK * t_bound)) if t_bound > 0 else 0.0
+    mem = rec.get("memory_analysis", {})
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec.get("kind", "?"),
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": model_flops / hlo_global if hlo_global else 0.0,
+        "roofline_frac": frac,
+        "temp_gb": mem.get("temp_size_in_bytes", 0) / 1e9,
+        "arg_gb": mem.get("argument_size_in_bytes", 0) / 1e9,
+    }
+
+
+def full_table(results_dir: str = RESULTS) -> list[dict]:
+    rows = [roofline_row(r) for r in load_records(results_dir)]
+    return [r for r in rows if r is not None]
+
+
+def markdown_table(rows: list[dict], mesh: str = "16x16") -> str:
+    """EXPERIMENTS.md §Roofline table (single-pod per the brief)."""
+    hdr = ("| arch | shape | T_comp (ms) | T_mem (ms) | T_coll (ms) | "
+           "dominant | useful | roofline frac | temp GB |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"SKIP | - | - | - |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"ERROR | - | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} | "
+            f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2%} | {r['temp_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = full_table()
+    for r in rows:
+        if "skipped" in r or "error" in r:
+            continue
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute_s']:.6f},{r['t_memory_s']:.6f},"
+              f"{r['t_collective_s']:.6f},{r['dominant']},"
+              f"{r['roofline_frac']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Benchmark harness: one function per paper table/figure + serving
+micro-latency + roofline summary.  Prints ``name,us_per_call,derived``
+CSV rows (plus per-table columns), per the repo skeleton contract.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _emit(rows: list[dict], wall_s: float):
+    per = 1e6 * wall_s / max(1, len(rows))
+    for r in rows:
+        name = r.pop("name")
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{per:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def bench_serving_latency(exp, reward_params, reward_cfg) -> list[dict]:
+    """us_per_call of the online/nearline hot paths on THIS host (CPU;
+    TPU latency derives from the roofline table instead)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.primal_dual import allocate, dual_descent
+    from repro.core.reward_model import reward_matrix
+
+    chains = exp.chains
+    ctx = jnp.asarray(exp.ctx_eval[:256])
+    mo = jnp.asarray(chains.model_onehot)
+    sh = jnp.asarray(chains.scale_multihot)
+    costs = jnp.asarray(chains.costs, jnp.float32)
+
+    score = jax.jit(lambda p, c: reward_matrix(p, reward_cfg, c, mo, sh))
+    r = score(reward_params, ctx).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        r = score(reward_params, ctx).block_until_ready()
+    score_us = (time.perf_counter() - t0) / 20 * 1e6
+
+    dd = jax.jit(lambda rw: dual_descent(rw, costs, float(np.median(
+        chains.costs)) * rw.shape[0], 0.0, max_iters=100))
+    lam, _ = dd(r)
+    lam.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        lam, _ = dd(r)
+        lam.block_until_ready()
+    dual_us = (time.perf_counter() - t0) / 20 * 1e6
+
+    al = jax.jit(lambda rw, l: allocate(rw, costs, l))
+    d = al(r, lam).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(50):
+        d = al(r, lam).block_until_ready()
+    alloc_us = (time.perf_counter() - t0) / 50 * 1e6
+
+    return [
+        {"name": "serve_reward_score_256req", "us": round(score_us, 1),
+         "us_per_req": round(score_us / 256, 2)},
+        {"name": "nearline_dual_100iter", "us": round(dual_us, 1)},
+        {"name": "serve_allocate_256req", "us": round(alloc_us, 1),
+         "us_per_req": round(alloc_us / 256, 3)},
+    ]
+
+
+def bench_kernels() -> list[dict]:
+    """Interpret-mode wall time is NOT TPU perf; reported for harness
+    completeness with the jnp-reference ratio as `derived`."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    feats = jax.random.normal(key, (256, 27, 64))
+    for name, fn, rfn in (
+        ("dot_interact_256x27x64",
+         lambda: ops.dot_interact(feats, block_b=64),
+         lambda: ref.dot_interact_ref(feats)),
+    ):
+        fn().block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            fn().block_until_ready()
+        k_us = (time.perf_counter() - t0) / 5 * 1e6
+        rref = jax.jit(rfn)
+        rref().block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            rref().block_until_ready()
+        r_us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append({"name": f"kernel_{name}", "us": round(k_us, 1),
+                     "interpret_vs_jnp": round(k_us / max(r_us, 1e-9), 2)})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller world (CI-sized)")
+    ap.add_argument("--skip-tables", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import roofline, tables
+    from repro.data.synthetic import WorldConfig
+    from repro.experiments import ExperimentConfig, train_reward_model
+
+    print("name,us_per_call,derived")
+
+    cfg = tables.BENCH_CFG
+    if args.fast:
+        cfg = ExperimentConfig(
+            world=WorldConfig(n_users=800, n_items=200, hist_len=10, seed=7),
+            expose=8, n_scales=4, cascade_steps=100, reward_steps=200,
+            batch=48)
+
+    t0 = time.time()
+    exp = tables.get_experiment(cfg)
+    print(f"setup_experiment,{(time.time()-t0)*1e6:.0f},"
+          f"users={cfg.world.n_users};items={cfg.world.n_items};"
+          f"chains={exp.chains.n_chains}")
+
+    t0 = time.time()
+    rp, rc = train_reward_model(exp)
+    print(f"train_reward_model,{(time.time()-t0)*1e6:.0f},"
+          f"steps={cfg.reward_steps}")
+
+    if not args.skip_tables:
+        for fn, needs_reward in (
+            (tables.fig4_budget_curves, True),
+            (tables.table2_stage_ablation, True),
+            (tables.table3_model_ablation, True),
+            (tables.table4_reward_ablation, False),
+            (tables.fig5_traffic_spikes, True),
+            (tables.pfec_summary, True),
+        ):
+            t0 = time.time()
+            rows = fn(exp, rp, rc) if needs_reward else fn(exp)
+            _emit(rows, time.time() - t0)
+
+    _emit(bench_serving_latency(exp, rp, rc), 0.0)
+    _emit(bench_kernels(), 0.0)
+
+    # roofline summary (requires a completed dry-run; silent if absent)
+    try:
+        rows = roofline.full_table()
+        ok = [r for r in rows if "error" not in r and "skipped" not in r]
+        if ok:
+            for r in ok:
+                print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0,"
+                      f"dominant={r['dominant']};"
+                      f"t_comp_ms={r['t_compute_s']*1e3:.3f};"
+                      f"t_mem_ms={r['t_memory_s']*1e3:.3f};"
+                      f"t_coll_ms={r['t_collective_s']*1e3:.3f};"
+                      f"frac={r['roofline_frac']:.4f}")
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline_summary,0,unavailable={type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

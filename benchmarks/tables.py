@@ -1,0 +1,259 @@
+"""One benchmark per paper table/figure (offline protocol, §5.2).
+
+Each function returns a list of CSV-able dicts; run.py prints them.
+The experiment world is scaled down (DESIGN.md §8) but follows the
+paper's split/protocol; the budget axis stays in paper FLOPs units
+(Table 1 per-item costs).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+import numpy as np
+
+from repro.core.budget import BudgetController
+from repro.core.pfec import pfec_report
+from repro.data.synthetic import WorldConfig
+from repro.experiments import (ExperimentConfig, budget_at, build_experiment,
+                               cras_stage_rewards, evaluate_methods,
+                               predicted_rewards, reward_model_metrics,
+                               train_reward_model)
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "cache")
+
+BENCH_CFG = ExperimentConfig(
+    world=WorldConfig(n_users=2500, n_items=400, hist_len=12, seed=7),
+    expose=10, n_scales=6, cascade_steps=220, reward_steps=500, batch=64)
+
+
+def get_experiment(cfg: ExperimentConfig = BENCH_CFG, *, verbose=True):
+    """Build (or load cached) the benchmark experiment."""
+    os.makedirs(CACHE, exist_ok=True)
+    key = (f"exp_u{cfg.world.n_users}_i{cfg.world.n_items}"
+           f"_h{cfg.world.hist_len}_s{cfg.seed}_c{cfg.cascade_steps}.pkl")
+    path = os.path.join(CACHE, key)
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    exp = build_experiment(cfg, verbose=verbose)
+    with open(path, "wb") as f:
+        pickle.dump(exp, f)
+    return exp
+
+
+# ---------------------------------------------------------------------------
+# Figure 4: revenue vs budget, all methods
+# ---------------------------------------------------------------------------
+
+
+def fig4_budget_curves(exp, reward_params, reward_cfg) -> list[dict]:
+    pred = predicted_rewards(exp, reward_params, reward_cfg, exp.ctx_eval)
+    sr = cras_stage_rewards(exp)
+    rows = evaluate_methods(exp, budgets_frac=(0.3, 0.45, 0.6, 0.75, 0.9),
+                            rewards_pred=pred, stage_rewards=sr)
+    out = []
+    for r in rows:
+        out.append({"name": f"fig4_budget_{r['budget_frac']:.2f}",
+                    "greenflow": r["greenflow"], "oracle": r["oracle"],
+                    "cras_din": r["cras_din"], "cras_dien": r["cras_dien"],
+                    "equal_din": r["equal_din"],
+                    "equal_dien": r["equal_dien"],
+                    "budget_flops": r["budget_flops"]})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 2: single-stage vs multi-stage allocation
+# ---------------------------------------------------------------------------
+
+
+def table2_stage_ablation(exp, reward_params, reward_cfg) -> list[dict]:
+    """Single-stage = only the ranking action varies (prerank fixed at its
+    median scale); multi-stage = full chain space."""
+    chains = exp.chains
+    pred = predicted_rewards(exp, reward_params, reward_cfg, exp.ctx_eval)
+    sr = cras_stage_rewards(exp)
+
+    # single-stage subset: n2 fixed to the median scale
+    k_pre = 1
+    med_scale = chains.stages[k_pre].n_scales // 2
+    sub = np.where(chains.chain_idx[:, k_pre, 1] == med_scale)[0]
+
+    out = []
+    for frac in (0.45, 0.6, 0.75):
+        n = exp.revenue_eval.shape[0]
+        budget = budget_at(exp, frac)
+        from repro.core.primal_dual import allocate, dual_bisect
+        import jax.numpy as jnp
+
+        # multi-stage (full space)
+        lam = dual_bisect(jnp.asarray(pred), jnp.asarray(chains.costs,
+                                                         jnp.float32), budget)
+        dec = np.asarray(allocate(jnp.asarray(pred),
+                                  jnp.asarray(chains.costs, jnp.float32), lam))
+        multi = exp.revenue_eval[np.arange(n), dec].sum()
+
+        # single-stage (restricted chain subset)
+        lam = dual_bisect(jnp.asarray(pred[:, sub]),
+                          jnp.asarray(chains.costs[sub], jnp.float32), budget)
+        dec_s = np.asarray(allocate(jnp.asarray(pred[:, sub]),
+                                    jnp.asarray(chains.costs[sub],
+                                                jnp.float32), lam))
+        single = exp.revenue_eval[np.arange(n), sub[dec_s]].sum()
+
+        from repro.core.baselines import StageActionSpace, cras_allocation
+        spaces = [StageActionSpace.from_chains(chains, k) for k in range(3)]
+        dec_c = cras_allocation(sr, spaces, chains, budget)
+        cras = exp.revenue_eval[np.arange(n), dec_c].sum()
+
+        out.append({"name": f"table2_budget_{frac:.2f}",
+                    "ours_multi_stage": float(multi),
+                    "ours_single_stage": float(single),
+                    "cras": float(cras)})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 3: single-model vs multi-model ranking pools
+# ---------------------------------------------------------------------------
+
+
+def table3_model_ablation(exp, reward_params, reward_cfg) -> list[dict]:
+    import jax.numpy as jnp
+    from repro.core.primal_dual import allocate, dual_bisect
+
+    chains = exp.chains
+    pred = predicted_rewards(exp, reward_params, reward_cfg, exp.ctx_eval)
+    k_rank = chains.n_stages - 1
+    names = [m.name for m in chains.stages[k_rank].models]
+    subsets = {
+        "only_din": np.where(chains.chain_idx[:, k_rank, 0]
+                             == names.index("DIN"))[0],
+        "only_dien": np.where(chains.chain_idx[:, k_rank, 0]
+                              == names.index("DIEN"))[0],
+        "both": np.arange(chains.n_chains),
+    }
+    out = []
+    n = exp.revenue_eval.shape[0]
+    for frac in (0.4, 0.55, 0.7, 0.85):
+        budget = budget_at(exp, frac)
+        row = {"name": f"table3_budget_{frac:.2f}"}
+        for label, sub in subsets.items():
+            lam = dual_bisect(jnp.asarray(pred[:, sub]),
+                              jnp.asarray(chains.costs[sub], jnp.float32),
+                              budget)
+            dec = np.asarray(allocate(jnp.asarray(pred[:, sub]),
+                                      jnp.asarray(chains.costs[sub],
+                                                  jnp.float32), lam))
+            row[label] = float(exp.revenue_eval[np.arange(n),
+                                                sub[dec]].sum())
+        out.append(row)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 4: reward-model ablation (recursive x multi-basis)
+# ---------------------------------------------------------------------------
+
+
+def table4_reward_ablation(exp) -> list[dict]:
+    import jax.numpy as jnp
+    from repro.core.primal_dual import allocate, dual_bisect
+
+    out = []
+    n = exp.revenue_eval.shape[0]
+    budget = budget_at(exp, 0.6)
+    for recursive in (True, False):
+        for multi_basis in (True, False):
+            params, rcfg = train_reward_model(
+                exp, recursive=recursive, multi_basis=multi_basis)
+            m = reward_model_metrics(exp, params, rcfg)
+            pred = predicted_rewards(exp, params, rcfg, exp.ctx_eval)
+            lam = dual_bisect(jnp.asarray(pred),
+                              jnp.asarray(exp.chains.costs, jnp.float32),
+                              budget)
+            dec = np.asarray(allocate(jnp.asarray(pred),
+                                      jnp.asarray(exp.chains.costs,
+                                                  jnp.float32), lam))
+            rev = float(exp.revenue_eval[np.arange(n), dec].sum())
+            out.append({
+                "name": f"table4_rec{int(recursive)}_mb{int(multi_basis)}",
+                "recursive": recursive, "multi_basis": multi_basis,
+                "field_rce": round(m["field_rce"], 4),
+                "revenue": rev})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Figure 5: budget adherence through traffic spikes
+# ---------------------------------------------------------------------------
+
+
+def fig5_traffic_spikes(exp, reward_params, reward_cfg) -> list[dict]:
+    chains = exp.chains
+    rng = np.random.default_rng(5)
+    n_eval = exp.ctx_eval.shape[0]
+    base_req = max(64, n_eval // 2)
+    budget = budget_at(exp, 0.6, n=base_req)
+    ctl = BudgetController(chains, budget)
+    pred_eval = predicted_rewards(exp, reward_params, reward_cfg,
+                                  exp.ctx_eval)
+
+    traffic = [1.0, 1.0, 1.0, 2.5, 3.0, 2.5, 1.0, 1.0]  # spike windows
+    floor_per_req = float(chains.costs[chains.cheapest()])
+    out = []
+    for t, mult in enumerate(traffic):
+        n_t = int(base_req * mult)
+        idx = rng.integers(0, n_eval, n_t)
+        decisions = ctl.step_window(pred_eval[idx])
+        s = ctl.stats[-1]
+        # the guard's guarantee: spend <= max(budget, n_t * cheapest) -
+        # Eq. 3b serves every request, so the floor scales with traffic
+        cap = max(s.budget, n_t * floor_per_req)
+        out.append({"name": f"fig5_window_{t}", "traffic_mult": mult,
+                    "spend": s.spend, "budget": s.budget,
+                    "cap_incl_floor": cap,
+                    "overshoot_vs_cap": max(0.0, s.spend / cap - 1.0),
+                    "lam": round(s.lam, 6), "downgraded": s.downgraded})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PFEC summary (paper §3.2) at the paper's operating point
+# ---------------------------------------------------------------------------
+
+
+def pfec_summary(exp, reward_params, reward_cfg) -> list[dict]:
+    import jax.numpy as jnp
+    from repro.core.primal_dual import allocate, dual_bisect
+
+    chains = exp.chains
+    n = exp.revenue_eval.shape[0]
+    pred = predicted_rewards(exp, reward_params, reward_cfg, exp.ctx_eval)
+    rows = []
+    # EQUAL at full budget vs GreenFlow at 59% (paper: -41% computation)
+    j_eq = np.argmax(chains.costs)
+    eq_rev = exp.revenue_eval[:, j_eq].sum()
+    eq_flops = chains.costs[j_eq] * n
+    rows.append(pfec_report(clicks=float(eq_rev), flops=float(eq_flops),
+                            name="pfec_equal_full").as_row())
+    budget = 0.59 * eq_flops
+    lam = dual_bisect(jnp.asarray(pred), jnp.asarray(chains.costs,
+                                                     jnp.float32), budget)
+    dec = np.asarray(allocate(jnp.asarray(pred),
+                              jnp.asarray(chains.costs, jnp.float32), lam))
+    gf_rev = exp.revenue_eval[np.arange(n), dec].sum()
+    gf_flops = chains.costs[dec].sum()
+    rows.append(pfec_report(clicks=float(gf_rev), flops=float(gf_flops),
+                            name="pfec_greenflow_59pct").as_row())
+    r0, r1 = rows
+    rows.append({"name": "pfec_delta",
+                 "clicks_delta_pct": 100 * (r1["performance"]
+                                            / max(r0["performance"], 1e-9)
+                                            - 1),
+                 "flops_delta_pct": 100 * (r1["flops"] / r0["flops"] - 1),
+                 "energy_delta_kwh": r1["energy_kwh"] - r0["energy_kwh"],
+                 "carbon_delta_g": r1["carbon_g"] - r0["carbon_g"]})
+    return rows

@@ -1,0 +1,18 @@
+"""Online serving simulation with traffic spikes (paper Fig. 5).
+
+    PYTHONPATH=src python examples/serve_allocation.py [--small]
+
+Thin wrapper over the production driver ``repro.launch.serve`` - the
+hybrid online/nearline allocator + cascade server + downgrade guard.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--small" not in sys.argv:
+        sys.argv.append("--small")
+    raise SystemExit(main())

@@ -1,0 +1,71 @@
+"""Train a small LM with the full substrate (data pipeline, AdamW + WSD,
+microbatching, checkpoint/resume).
+
+    PYTHONPATH=src python examples/train_lm.py            # ~20M params, CPU
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+        # the deliverable-(b) scale; sized for real hardware
+
+The 100m preset is the gemma2-style architecture at d_model=768/12L - on
+TPU it trains a few hundred steps in minutes; on this CPU container use
+the default small preset.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import DeterministicPipeline, lm_token_batch_fn
+from repro.models import lm
+from repro.training.optimizer import AdamW, wsd_schedule
+from repro.training.trainer import (Trainer, TrainerConfig, build_train_step,
+                                    init_state)
+
+PRESETS = {
+    "small": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                  d_head=64, d_ff=1024, vocab=4096, padded_vocab=4096,
+                  seq=256, batch=8),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_head=64, d_ff=3072, vocab=32768, padded_vocab=32768,
+                 seq=1024, batch=32),
+}
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--preset", choices=PRESETS, default="small")
+ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--ckpt-dir", default=None)
+args = ap.parse_args()
+
+p = PRESETS[args.preset]
+cfg = lm.LMConfig(name=f"lm-{args.preset}", n_layers=p["n_layers"],
+                  d_model=p["d_model"], n_heads=p["n_heads"],
+                  n_kv_heads=p["n_kv_heads"], d_head=p["d_head"],
+                  d_ff=p["d_ff"], vocab=p["vocab"],
+                  padded_vocab=p["padded_vocab"], dtype="float32",
+                  remat=False, fsdp=False)
+params = lm.init(jax.random.PRNGKey(0), cfg)
+n = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+print(f"[train_lm] {cfg.name}: {n/1e6:.1f}M params, seq={p['seq']}, "
+      f"batch={p['batch']}, steps={args.steps}")
+
+opt = AdamW(weight_decay=0.01)
+sched = wsd_schedule(3e-4, warmup=max(2, args.steps // 10),
+                     stable=int(args.steps * 0.7), decay=args.steps // 5)
+step = build_train_step(lambda pp, b: lm.loss_fn(pp, cfg, b), opt, sched,
+                        donate=False)
+pipe = DeterministicPipeline(lm_token_batch_fn(cfg.vocab, p["seq"]),
+                             p["batch"], seed=0)
+trainer = Trainer(
+    TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                  ckpt_every=max(20, args.steps // 3),
+                  log_every=max(1, args.steps // 10)),
+    step, init_state(params, opt), pipe)
+out = trainer.run()
+h = out["history"]
+print(f"[train_lm] loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} "
+      f"in {out['wall_s']:.0f}s")
+assert h[-1]["loss"] < h[0]["loss"], "loss must decrease"
+print("train_lm OK")

@@ -1,0 +1,7 @@
+"""Cascade serving engine: recall -> prerank -> rank with action chains."""
+from repro.cascade.engine import (CascadeModels, CascadeServer,
+                                  precompute_stage_scores, run_chain,
+                                  simulate_revenue_matrix)
+
+__all__ = ["CascadeModels", "CascadeServer", "precompute_stage_scores",
+           "run_chain", "simulate_revenue_matrix"]

@@ -1,0 +1,177 @@
+"""Cascade execution engine (paper §5.1 protocol).
+
+Offline protocol: per evaluation user, every stage model scores the whole
+corpus ONCE (jitted, batched); evaluating an action chain is then pure
+ranking arithmetic over precomputed score vectors - exactly the paper's
+"simulate different action chains for each user" procedure, and it makes
+the J=128-chain sweep cheap.
+
+Online serving (`CascadeServer`): requests are grouped by allocated chain
+and each group executes the (statically-shaped) bucketed pipeline - the
+TPU-idiomatic form of per-request item scales (DESIGN.md §3).
+
+Scoring truncated candidate sets uses TOP-K SELECTION ON SCORES from the
+upstream stage; clicks are ground-truth sampled once per (user, item) so
+revenue@e is deterministic given the seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.action_chain import ActionChainSet
+from repro.models.recsys import dien, din, dssm, ydnn
+
+
+@dataclass
+class CascadeModels:
+    """Trained stage models + their configs."""
+
+    dssm_params: dict
+    dssm_cfg: dssm.DSSMConfig
+    ydnn_params: dict
+    ydnn_cfg: ydnn.YDNNConfig
+    din_params: dict
+    din_cfg: din.DINConfig
+    dien_params: dict
+    dien_cfg: dien.DIENConfig
+
+
+def _user_batch(world, users: np.ndarray) -> dict:
+    return {
+        "user_fields": jnp.asarray(world.user_fields[users], jnp.int32),
+        "hist_ids": jnp.asarray(world.hist_ids[users], jnp.int32),
+        "hist_cats": jnp.asarray(world.item_cat[world.hist_ids[users]],
+                                 jnp.int32),
+        "hist_mask": jnp.asarray(world.hist_mask[users], jnp.float32),
+    }
+
+
+def precompute_stage_scores(models: CascadeModels, world, users: np.ndarray,
+                            *, item_block: int = 256) -> dict:
+    """Score the full corpus with every stage model -> {name: (U, I)}."""
+    n_items = world.cfg.n_items
+    item_ids = jnp.arange(n_items, dtype=jnp.int32)
+    item_cats = jnp.asarray(world.item_cat, jnp.int32)
+    ub = _user_batch(world, users)
+
+    # user fields for the recall/prerank towers use the raw field ids
+    dssm_item_fields = jnp.stack([item_ids, item_cats], axis=-1)  # (I, 2)
+
+    @jax.jit
+    def dssm_all(uf):
+        v = dssm.item_tower(models.dssm_params, models.dssm_cfg,
+                            dssm_item_fields)
+        u = dssm.user_tower(models.dssm_params, models.dssm_cfg, uf)
+        return u @ v.T
+
+    @jax.jit
+    def ydnn_all(hist, mask, uf):
+        u = ydnn.user_vector(models.ydnn_params, models.ydnn_cfg, hist, mask,
+                             uf)
+        v = models.ydnn_params["out_emb"]["table"][:n_items]
+        return u @ v.T
+
+    scores = {
+        "DSSM": np.asarray(dssm_all(ub["user_fields"])),
+        "YDNN": np.asarray(ydnn_all(ub["hist_ids"], ub["hist_mask"],
+                                    ub["user_fields"])),
+    }
+
+    @jax.jit
+    def din_block(batch, cand_ids, cand_cats):
+        return din.score(models.din_params, models.din_cfg, batch,
+                         cand_ids, cand_cats)
+
+    @jax.jit
+    def dien_block(batch, cand_ids, cand_cats):
+        return dien.score(models.dien_params, models.dien_cfg, batch,
+                          cand_ids, cand_cats)
+
+    for name, fn in (("DIN", din_block), ("DIEN", dien_block)):
+        rows = []
+        for lo in range(0, n_items, item_block):
+            hi = min(n_items, lo + item_block)
+            ids = jnp.broadcast_to(item_ids[lo:hi], (len(users), hi - lo))
+            cats = jnp.broadcast_to(item_cats[lo:hi], (len(users), hi - lo))
+            rows.append(np.asarray(fn(ub, ids, cats)))
+        scores[name] = np.concatenate(rows, axis=1)
+    return scores
+
+
+def run_chain(stage_scores: dict, chain_desc: tuple, clicks: np.ndarray,
+              *, expose: int = 20) -> np.ndarray:
+    """One chain for all users.
+
+    chain_desc = (n1, n2, n3, rank_model_name); clicks (U, I) ground truth.
+    Returns per-user revenue@expose (clicks among exposed items).
+    """
+    n1, n2, n3, rank_name = chain_desc
+    u = clicks.shape[0]
+    s1 = stage_scores["DSSM"]
+    # stage 1 keeps top-n2 (it scored n1 = corpus)
+    keep2 = np.argpartition(-s1, kth=min(n2, s1.shape[1] - 1), axis=1)[:, :n2]
+    s2 = np.take_along_axis(stage_scores["YDNN"], keep2, axis=1)
+    # stage 2 keeps top-n3 of its n2
+    k3 = min(n3, n2)
+    idx3 = np.argpartition(-s2, kth=min(k3, s2.shape[1] - 1) - 1,
+                           axis=1)[:, :k3]
+    keep3 = np.take_along_axis(keep2, idx3, axis=1)
+    s3 = np.take_along_axis(stage_scores[rank_name], keep3, axis=1)
+    # final exposure: top-`expose` of the n3
+    e = min(expose, k3)
+    idx_e = np.argsort(-s3, axis=1)[:, :e]
+    exposed = np.take_along_axis(keep3, idx_e, axis=1)
+    return np.take_along_axis(clicks, exposed, axis=1).sum(axis=1)
+
+
+def simulate_revenue_matrix(stage_scores: dict, chains: ActionChainSet,
+                            clicks: np.ndarray, *, expose: int = 20):
+    """Ground-truth revenue of EVERY chain for every user -> (U, J).
+
+    This is the paper's training-sample generation for the reward model
+    (and the oracle for evaluating allocations)."""
+    u = clicks.shape[0]
+    out = np.zeros((u, chains.n_chains), np.float32)
+    k_rank = chains.n_stages - 1
+    for j in range(chains.n_chains):
+        n1 = int(chains.scale_value[j, 0])
+        n2 = int(chains.scale_value[j, 1])
+        n3 = int(chains.scale_value[j, 2])
+        mi = int(chains.chain_idx[j, k_rank, 0])
+        rank_name = chains.stages[k_rank].models[mi].name
+        out[:, j] = run_chain(stage_scores, (n1, n2, n3, rank_name), clicks,
+                              expose=expose)
+    return out
+
+
+@dataclass
+class CascadeServer:
+    """Online path: execute allocated chains, grouped by chain id."""
+
+    stage_scores: dict  # precomputed for the serving user universe
+    chains: ActionChainSet
+    clicks: np.ndarray
+    expose: int = 20
+
+    def serve(self, user_rows: np.ndarray, decisions: np.ndarray):
+        """user_rows: indices into the score matrices; decisions: (B,)
+        chain ids.  Returns (revenue (B,), flops (B,))."""
+        revenue = np.zeros(len(user_rows), np.float32)
+        k_rank = self.chains.n_stages - 1
+        for j in np.unique(decisions):
+            sel = decisions == j
+            rows = user_rows[sel]
+            n1 = int(self.chains.scale_value[j, 0])
+            n2 = int(self.chains.scale_value[j, 1])
+            n3 = int(self.chains.scale_value[j, 2])
+            mi = int(self.chains.chain_idx[j, k_rank, 0])
+            rank_name = self.chains.stages[k_rank].models[mi].name
+            sub_scores = {k: v[rows] for k, v in self.stage_scores.items()}
+            revenue[sel] = run_chain(sub_scores, (n1, n2, n3, rank_name),
+                                     self.clicks[rows], expose=self.expose)
+        flops = self.chains.costs[decisions]
+        return revenue, flops

@@ -1,0 +1,4 @@
+"""Per-architecture configs + registry (see base.ARCH_IDS)."""
+from repro.configs.base import ARCH_IDS, all_cells, get_arch
+
+__all__ = ["ARCH_IDS", "all_cells", "get_arch"]

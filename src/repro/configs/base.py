@@ -1,0 +1,314 @@
+"""Config/registry layer: every assigned architecture exposes the same
+surface so the launcher, dry-run, smoke tests and benchmarks are generic.
+
+Per-arch module contract:
+    ARCH_ID: str;  FAMILY: "lm"|"gnn"|"recsys";  SHAPES: tuple[str,...]
+    SKIPPED_SHAPES: dict[shape, reason]      (e.g. long_500k on full attn)
+    full_config() / smoke_config()           model config objects
+    make_cell(shape, multi_pod=False) -> DryRunCell
+    smoke_batch(rng, cfg) -> batch dict      (reduced shapes, CPU-sized)
+    init_smoke(key, cfg) / smoke_loss(params, cfg, batch)
+
+A DryRunCell is everything ``launch/dryrun.py`` needs to lower+compile one
+(arch x shape x mesh) combination: a pure ``fn``, ShapeDtypeStruct inputs,
+and PartitionSpec trees for inputs/outputs.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import lm
+from repro.training.optimizer import AdamW
+from repro.training.trainer import TrainState, init_state
+
+BATCH = ("pod", "data")  # logical batch axes (multi-pod collapses onto both)
+
+
+@dataclass
+class DryRunCell:
+    arch_id: str
+    shape_name: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    fn: Callable  # pure; positional args mirror arg_specs
+    arg_specs: tuple  # pytree of ShapeDtypeStruct per positional arg
+    in_shardings: tuple  # pytree of PartitionSpec per positional arg
+    out_shardings: Any = None  # None -> let GSPMD choose
+    donate: tuple = ()  # positional indices to donate
+    meta: dict = field(default_factory=dict)  # model_flops etc.
+    # XLA cost_analysis counts a while-loop body ONCE.  Cells whose main
+    # compute sits in a lax.scan provide (variant_fn, trips, period):
+    # lowering variant_fn(period) and variant_fn(2*period) yields the
+    # per-period delta, and corrected = m(p) + (trips/p - 1) * delta.
+    variant_fn: Callable | None = None
+    loop_trips: int = 0  # e.g. n_layers
+    loop_period: int = 1  # e.g. len(window_pattern) for gemma2
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def replicated_like(tree):
+    return jax.tree_util.tree_map(lambda _: P(), tree)
+
+
+def eval_shape_of(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+# ---------------------------------------------------------------------------
+# LM family cells (shared by the five assigned LM archs)
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def _adam_specs(param_specs):
+    """AdamState(step, mu, nu) sharded like the params."""
+    from repro.training.optimizer import AdamState
+    return AdamState(step=P(), mu=param_specs,
+                     nu=jax.tree_util.tree_map(lambda s: s, param_specs))
+
+
+def lm_state_specs(cfg: lm.LMConfig):
+    pspec = lm.param_shardings(cfg)
+    return TrainState(step=P(), params=pspec, opt_state=_adam_specs(pspec))
+
+
+def lm_abstract_state(cfg: lm.LMConfig):
+    """TrainState of ShapeDtypeStructs without allocating anything."""
+    opt = AdamW()
+    params = jax.eval_shape(lambda k: lm.init(k, cfg), jax.random.PRNGKey(0))
+    state = jax.eval_shape(lambda p: init_state(p, opt), params)
+    return state
+
+
+# per-arch gradient-accumulation microbatches for train_4k: sized so the
+# per-device live set (saved layer carries + logits + attention blocks)
+# fits v5e's 16 GB HBM.  Python-loop accumulation -> exact HLO flop counts.
+LM_TRAIN_MICRO = {
+    "granite-moe-1b-a400m": 2,
+    "olmoe-1b-7b": 4,
+    "glm4-9b": 8,
+    "gemma2-2b": 4,
+    "minicpm-2b": 8,
+}
+
+
+def lm_train_cell(arch_id: str, cfg: lm.LMConfig, shape_name: str,
+                  *, n_micro: int | None = None) -> DryRunCell:
+    info = LM_SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    opt = AdamW(weight_decay=0.1)
+    if n_micro is None:
+        n_micro = LM_TRAIN_MICRO.get(arch_id, 1)
+
+    pspec = lm.param_shardings(cfg)
+
+    def pin(grads):
+        # ZeRO-2-style: keep accumulated grads in the params' (FSDP x TP)
+        # layout - forces reduce-scatter instead of replicated all-reduce
+        # and caps the fp32 grad buffer at params_bytes / n_shards.
+        from repro.distributed.sharding import constrain, current_mesh
+        if current_mesh() is None:
+            return grads
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, pspec)
+
+    def step(state: TrainState, batch: dict):
+        if n_micro == 1:
+            l, grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(p, cfg, batch))(state.params)
+            grads = pin(grads)
+        else:
+            mb_rows = b // n_micro
+            l, grads = 0.0, None
+            for m in range(n_micro):
+                mb = {k: jax.lax.dynamic_slice_in_dim(v, m * mb_rows,
+                                                      mb_rows, axis=0)
+                      for k, v in batch.items()}
+                lm_, g = jax.value_and_grad(
+                    lambda p: lm.loss_fn(p, cfg, mb))(state.params)
+                g = pin(g)
+                l = l + lm_ / n_micro
+                grads = g if grads is None else jax.tree_util.tree_map(
+                    jnp.add, grads, g)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        new_params, new_opt = opt.update(grads, state.opt_state,
+                                         state.params, 3e-4)
+        return TrainState(state.step + 1, new_params, new_opt), l
+
+    state = lm_abstract_state(cfg)
+    batch = {
+        "tokens": sds((b, s), jnp.int32),
+        "targets": sds((b, s), jnp.int32),
+        "mask": sds((b, s), jnp.float32),
+    }
+    batch_specs = {k: P(BATCH, None) for k in batch}
+    n_tokens = b * s
+    return DryRunCell(
+        arch_id=arch_id, shape_name=shape_name, kind="train",
+        fn=step, arg_specs=(state, batch),
+        in_shardings=(lm_state_specs(cfg), batch_specs),
+        donate=(0,),
+        meta={"model_flops": 6.0 * cfg.n_active_params() * n_tokens,
+              "n_tokens": n_tokens, "n_microbatches": n_micro},
+    )
+
+
+def lm_prefill_cell(arch_id: str, cfg: lm.LMConfig, shape_name: str) -> DryRunCell:
+    import dataclasses
+    info = LM_SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    if cfg.attn_chunk_q:
+        cfg = dataclasses.replace(cfg, attn_chunk_q=2048)
+
+    def step(params, tokens):
+        return lm.prefill(params, cfg, tokens, max_len=s)
+
+    params = jax.eval_shape(lambda k: lm.init(k, cfg), jax.random.PRNGKey(0))
+    # the produced cache is SEQ-sharded over 'model' - the exact layout
+    # decode consumes (SPerf iteration 4: stacking the cache unsharded on
+    # seq left minicpm/glm4 prefill temps at 52/35 GB per device)
+    cache_spec = {"k": P(None, BATCH, "model", None, None),
+                  "v": P(None, BATCH, "model", None, None),
+                  "length": P()}
+    return DryRunCell(
+        arch_id=arch_id, shape_name=shape_name, kind="prefill",
+        fn=step,
+        arg_specs=(params, sds((b, s), jnp.int32)),
+        in_shardings=(lm.param_shardings(cfg), P(BATCH, None)),
+        out_shardings=(P(BATCH, "model"), cache_spec),
+        meta={"model_flops": 2.0 * cfg.n_active_params() * b * s,
+              "n_tokens": b * s},
+    )
+
+
+def lm_decode_cell(arch_id: str, cfg: lm.LMConfig, shape_name: str,
+                   *, seq_sharded: bool = False) -> DryRunCell:
+    info = LM_SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+
+    def step(params, token, cache):
+        return lm.decode_step(params, cfg, token, cache)
+
+    params = jax.eval_shape(lambda k: lm.init(k, cfg), jax.random.PRNGKey(0))
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    # batch=1 cells (long-context decode) cannot shard the batch dim
+    bspec = BATCH if b >= 32 else None
+    seq = "model" if seq_sharded else None
+    cache_spec = {"k": P(None, bspec, seq, None, None),
+                  "v": P(None, bspec, seq, None, None),
+                  "length": P()}
+    return DryRunCell(
+        arch_id=arch_id, shape_name=shape_name, kind="decode",
+        fn=step,
+        arg_specs=(params, sds((b,), jnp.int32), cache),
+        in_shardings=(lm.param_shardings(cfg), P(bspec), cache_spec),
+        out_shardings=((P(bspec, "model"), cache_spec)),
+        donate=(2,),
+        meta={"model_flops": 2.0 * cfg.n_active_params() * b
+              + 2.0 * cfg.n_layers * b * s * cfg.n_kv_heads * cfg.d_head * 2,
+              "n_tokens": b, "kv_len": s},
+    )
+
+
+def _lm_cell_raw(arch_id: str, cfg: lm.LMConfig, shape_name: str,
+                 *, long_seq_sharded: bool = True) -> DryRunCell:
+    kind = LM_SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return lm_train_cell(arch_id, cfg, shape_name)
+    if kind == "prefill":
+        return lm_prefill_cell(arch_id, cfg, shape_name)
+    # KV caches are sequence-sharded over 'model' for every decode shape:
+    # kv_heads < 16 on all five archs, so head-sharding is impossible and
+    # batch-only sharding leaves caches unfit (e.g. minicpm decode_32k:
+    # 96 GB/device) - SPerf iteration 2.
+    return lm_decode_cell(arch_id, cfg, shape_name,
+                          seq_sharded=long_seq_sharded)
+
+
+def lm_make_cell(arch_id: str, cfg: lm.LMConfig, shape_name: str,
+                 *, long_seq_sharded: bool = True) -> DryRunCell:
+    import dataclasses
+
+    cell = _lm_cell_raw(arch_id, cfg, shape_name,
+                        long_seq_sharded=long_seq_sharded)
+    period = len(cfg.window_pattern) if cfg.window_pattern else 1
+
+    def variant(n_layers: int) -> DryRunCell:
+        # fully unrolled so XLA's cost analysis counts every layer body
+        vcfg = dataclasses.replace(cfg, n_layers=n_layers,
+                                   scan_unroll=n_layers)
+        return _lm_cell_raw(arch_id, vcfg, shape_name,
+                            long_seq_sharded=long_seq_sharded)
+
+    cell.variant_fn = variant
+    cell.loop_trips = cfg.n_layers
+    cell.loop_period = period
+    return cell
+
+
+# LM smoke helpers ----------------------------------------------------------
+
+
+def lm_smoke_batch(rng: np.random.Generator, cfg: lm.LMConfig, *,
+                   batch: int = 2, seq: int = 16) -> dict:
+    toks = rng.integers(0, cfg.vocab, size=(batch, seq + 1))
+    return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "targets": jnp.asarray(toks[:, 1:], jnp.int32),
+            "mask": jnp.ones((batch, seq), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "granite-moe-1b-a400m", "olmoe-1b-7b", "glm4-9b", "gemma2-2b",
+    "minicpm-2b", "schnet", "dlrm-rm2", "din", "xdeepfm", "bst",
+    "greenflow-cascade",
+)
+
+_MODULES = {
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "schnet": "repro.configs.schnet",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "din": "repro.configs.din_arch",
+    "xdeepfm": "repro.configs.xdeepfm_arch",
+    "bst": "repro.configs.bst_arch",
+    "greenflow-cascade": "repro.configs.greenflow_cascade",
+}
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def all_cells(arch_id: str):
+    """Yield (shape_name, cell_or_skip_reason) for every assigned shape."""
+    mod = get_arch(arch_id)
+    for shape in mod.SHAPES:
+        if shape in getattr(mod, "SKIPPED_SHAPES", {}):
+            yield shape, mod.SKIPPED_SHAPES[shape]
+        else:
+            yield shape, mod.make_cell(shape)

@@ -1,0 +1,127 @@
+"""din [arXiv:1706.06978] as an ASSIGNED architecture: embed_dim=18
+seq_len=100 attn_mlp=80-40 mlp=200-80 interaction=target-attn.
+
+Production-scale id spaces (Alibaba-like): 10M items / 100K categories /
+1M user-field rows.  Tables are replicated (they are ~20x smaller than
+DLRM's; documented trade-off in DESIGN.md §6).  This model is ALSO the
+paper cascade's ranking stage - the GreenFlow action chains select it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import recsys_common as rc
+from repro.configs.base import BATCH, DryRunCell, sds
+from repro.models.recsys import din as model
+
+ARCH_ID = "din"
+FAMILY = "recsys"
+SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+SKIPPED_SHAPES: dict = {}
+
+
+def full_config() -> model.DINConfig:
+    return model.DINConfig(item_vocab=10_000_000, cat_vocab=100_000,
+                           user_vocab=1_000_000, n_user_fields=2,
+                           embed_dim=18, seq_len=100,
+                           attn_hidden=(80, 40), mlp_hidden=(200, 80))
+
+
+def smoke_config() -> model.DINConfig:
+    return model.DINConfig(item_vocab=500, cat_vocab=20, user_vocab=200,
+                           n_user_fields=2, embed_dim=8, seq_len=12,
+                           attn_hidden=(16, 8), mlp_hidden=(32, 16))
+
+
+def _pspec(params):
+    return jax.tree_util.tree_map(lambda _: P(), params)
+
+
+def _batch(cfg, b, with_label=True):
+    t = cfg.seq_len
+    batch = {
+        "hist_ids": sds((b, t), jnp.int32),
+        "hist_cats": sds((b, t), jnp.int32),
+        "hist_mask": sds((b, t), jnp.float32),
+        "user_fields": sds((b, cfg.n_user_fields), jnp.int32),
+        "item_id": sds((b,), jnp.int32),
+        "item_cat": sds((b,), jnp.int32),
+    }
+    specs = {k: P(BATCH, None) if v.ndim == 2 else P(BATCH)
+             for k, v in batch.items()}
+    if with_label:
+        batch["label"] = sds((b,), jnp.float32)
+        specs["label"] = P(BATCH)
+    return batch, specs
+
+
+def make_cell(shape: str) -> DryRunCell:
+    cfg = full_config()
+    params = jax.eval_shape(lambda k: model.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    pspec = _pspec(params)
+    info = rc.RECSYS_SHAPES[shape]
+
+    if shape == "train_batch":
+        batch, bspec = _batch(cfg, info["batch"])
+        return rc.train_cell(
+            ARCH_ID, shape,
+            loss_fn=lambda p, b: model.loss_fn(p, cfg, b),
+            abstract_params=params, param_specs=pspec,
+            batch=batch, batch_specs=bspec,
+            flops_fwd=info["batch"] * model.flops_per_item(cfg))
+    if shape == "retrieval_cand":
+        n = info["n_candidates"]
+        user, uspec = _batch(cfg, 1, with_label=False)
+        user.pop("item_id"), user.pop("item_cat")
+        uspec.pop("item_id"), uspec.pop("item_cat")
+        uspec = {k: P(None, None) if user[k].ndim == 2 else P(None)
+                 for k in user}
+
+        def fwd(p, u, cid, ccat):
+            return model.score_candidates_chunked(p, cfg, u, cid, ccat,
+                                                  n_chunks=16)
+
+        return rc.retrieval_cell(
+            ARCH_ID, fwd=fwd, abstract_params=params, param_specs=pspec,
+            args=(user, sds((n,), jnp.int32), sds((n,), jnp.int32)),
+            arg_specs=(uspec, P(BATCH), P(BATCH)),
+            flops_fwd=n * model.flops_per_item(cfg))
+
+    b = info["batch"]
+    batch, bspec = _batch(cfg, b, with_label=False)
+
+    def fwd(p, bb):
+        return model.forward(p, cfg, bb)
+
+    return rc.serve_cell(ARCH_ID, shape, fwd=fwd, abstract_params=params,
+                         param_specs=pspec, batch=batch, batch_specs=bspec,
+                         flops_fwd=b * model.flops_per_item(cfg))
+
+
+# smoke ----------------------------------------------------------------------
+
+
+def init_smoke(key, cfg):
+    return model.init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    b, t = 16, cfg.seq_len
+    return {
+        "hist_ids": jnp.asarray(rng.integers(0, cfg.item_vocab, (b, t)), jnp.int32),
+        "hist_cats": jnp.asarray(rng.integers(0, cfg.cat_vocab, (b, t)), jnp.int32),
+        "hist_mask": jnp.ones((b, t), jnp.float32),
+        "user_fields": jnp.asarray(
+            rng.integers(0, cfg.user_vocab, (b, cfg.n_user_fields)), jnp.int32),
+        "item_id": jnp.asarray(rng.integers(0, cfg.item_vocab, b), jnp.int32),
+        "item_cat": jnp.asarray(rng.integers(0, cfg.cat_vocab, b), jnp.int32),
+        "label": jnp.asarray(rng.integers(0, 2, b), jnp.float32),
+    }
+
+
+def smoke_loss(params, cfg, batch):
+    return model.loss_fn(params, cfg, batch)

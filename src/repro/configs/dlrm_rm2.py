@@ -1,0 +1,159 @@
+"""dlrm-rm2 [arXiv:1906.00091]: n_dense=13 n_sparse=26 embed_dim=64
+bot=13-512-256-64 top=512-512-256-1 interaction=dot.  Criteo-scale tables
+(~88M rows), row-sharded over 'model' with ONE stacked lookup + psum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import recsys_common as rc
+from repro.configs.base import BATCH, DryRunCell, sds
+from repro.distributed.sharding import current_mesh
+from repro.models.recsys import dlrm as model
+
+ARCH_ID = "dlrm-rm2"
+FAMILY = "recsys"
+SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+SKIPPED_SHAPES: dict = {}
+
+PAD_TO = 1024  # rows pad so 512-way (model x pod x data) sharding divides
+N_ITEM_FIELDS = 4  # trailing sparse fields swapped per retrieval candidate
+
+
+def full_config() -> model.DLRMConfig:
+    return model.DLRMConfig()
+
+
+def smoke_config() -> model.DLRMConfig:
+    return model.DLRMConfig(vocab_sizes=tuple([64] * 26), embed_dim=8,
+                            bot_mlp=(32, 16, 8), top_mlp=(64, 32, 1),
+                            top_pad=512)
+
+
+def _abstract(cfg):
+    return jax.eval_shape(
+        lambda k: model.init(k, cfg, pad_vocab_to=PAD_TO),
+        jax.random.PRNGKey(0))
+
+
+def _pspec(params):
+    spec = jax.tree_util.tree_map(lambda _: P(), params)
+    spec["tables"]["stacked"] = P(("model", "pod", "data"), None)
+    return spec
+
+
+def _batch(cfg, b):
+    batch = {"dense": sds((b, cfg.n_dense), jnp.float32),
+             "sparse": sds((b, cfg.n_sparse), jnp.int32),
+             "label": sds((b,), jnp.float32)}
+    specs = {"dense": P(BATCH, None), "sparse": P(BATCH, None),
+             "label": P(BATCH)}
+    return batch, specs
+
+
+def _hybrid_train_cell(cfg, params, pspec, batch, bspec, b) -> DryRunCell:
+    """DLRM train with the industry-standard HYBRID optimizer: stateless
+    SGD on the embedding table (no mu/nu -> no 2x22GB optimizer state, no
+    3x full-table HBM sweeps per step) + AdamW on the dense MLPs.
+    §Perf iteration 3 - see EXPERIMENTS.md (baseline: plain AdamW on
+    everything, results/dryrun_baseline)."""
+    import jax
+    from repro.configs.base import _adam_specs
+    from repro.training.optimizer import AdamW
+    from repro.training.trainer import TrainState, init_state
+
+    opt = AdamW(weight_decay=0.0)
+
+    def split(p):
+        dense = {k: v for k, v in p.items() if k != "tables"}
+        return p["tables"], dense
+
+    def step(state: TrainState, bb: dict):
+        l, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, bb, current_mesh()))(state.params)
+        g_tab, g_dense = split(grads)
+        p_tab, p_dense = split(state.params)
+        # stateless SGD for the table (grads arrive bf16 from the wire)
+        new_tab = jax.tree_util.tree_map(
+            lambda p, g: (p - 0.04 * g.astype(p.dtype)).astype(p.dtype),
+            p_tab, g_tab)
+        new_dense, new_opt = opt.update(g_dense, state.opt_state,
+                                        p_dense, 1e-3)
+        new_params = dict(new_dense, tables=new_tab)
+        return TrainState(state.step + 1, new_params, new_opt), l
+
+    dense_params = {k: v for k, v in params.items() if k != "tables"}
+    state = jax.eval_shape(
+        lambda dp: TrainState(jnp.zeros((), jnp.int32),
+                              dict(dp[0], tables=dp[1]),
+                              AdamW().init(dp[0])),
+        (dense_params, params["tables"]))
+    dense_spec = {k: v for k, v in pspec.items() if k != "tables"}
+    sspec = TrainState(step=P(), params=pspec,
+                       opt_state=_adam_specs(dense_spec))
+    return DryRunCell(
+        arch_id=ARCH_ID, shape_name="train_batch", kind="train",
+        fn=step, arg_specs=(state, batch), in_shardings=(sspec, bspec),
+        donate=(0,),
+        meta={"model_flops": 3.0 * b * model.flops_per_example(cfg),
+              "optimizer": "hybrid sgd(emb)+adamw(dense), bf16 wire"},
+    )
+
+
+def make_cell(shape: str) -> DryRunCell:
+    cfg = full_config()
+    params = _abstract(cfg)
+    pspec = _pspec(params)
+    info = rc.RECSYS_SHAPES[shape]
+
+    if shape == "train_batch":
+        batch, bspec = _batch(cfg, info["batch"])
+        return _hybrid_train_cell(cfg, params, pspec, batch, bspec,
+                                  info["batch"])
+    if shape == "retrieval_cand":
+        n = info["n_candidates"]
+        user = {"dense": sds((1, cfg.n_dense), jnp.float32),
+                "sparse": sds((1, cfg.n_sparse), jnp.int32)}
+        uspec = {"dense": P(None, None), "sparse": P(None, None)}
+        cand = sds((n, N_ITEM_FIELDS), jnp.int32)
+
+        def fwd(p, u, c):
+            return model.retrieval_forward(p, cfg, u, c, current_mesh())
+
+        return rc.retrieval_cell(
+            ARCH_ID, fwd=fwd, abstract_params=params, param_specs=pspec,
+            args=(user, cand), arg_specs=(uspec, P(BATCH, None)),
+            flops_fwd=n * model.flops_per_example(cfg))
+
+    b = info["batch"]
+    batch, bspec = _batch(cfg, b)
+    batch.pop("label"), bspec.pop("label")
+
+    def fwd(p, bb):
+        return model.forward(p, cfg, bb, current_mesh())
+
+    return rc.serve_cell(ARCH_ID, shape, fwd=fwd, abstract_params=params,
+                         param_specs=pspec, batch=batch, batch_specs=bspec,
+                         flops_fwd=b * model.flops_per_example(cfg))
+
+
+# smoke ----------------------------------------------------------------------
+
+
+def init_smoke(key, cfg):
+    return model.init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    b = 16
+    return {"dense": jnp.asarray(rng.normal(size=(b, cfg.n_dense)), jnp.float32),
+            "sparse": jnp.asarray(rng.integers(0, 64, (b, cfg.n_sparse)),
+                                  jnp.int32),
+            "label": jnp.asarray(rng.integers(0, 2, b), jnp.float32)}
+
+
+def smoke_loss(params, cfg, batch):
+    return model.loss_fn(params, cfg, batch)

@@ -1,0 +1,64 @@
+"""gemma2-2b [arXiv:2408.00118].
+
+26L d_model=2304 8H (GQA kv=4, d_head=256) d_ff=9216 vocab=256000;
+local(4096)/global alternating attention, attn softcap 50 / final softcap
+30, GeGLU, zero-centered RMSNorm, sandwich norms, embeddings scaled by
+sqrt(d_model).
+
+long_500k RUNS for this arch (hybrid local/global): global-layer KV is
+sequence-sharded over 'model', local layers are window-bounded via the
+mask (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.configs import base
+from repro.models import lm
+
+ARCH_ID = "gemma2-2b"
+FAMILY = "lm"
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SKIPPED_SHAPES: dict = {}
+
+
+def full_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID, n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4,
+        d_head=256, d_ff=9216, vocab=256000, padded_vocab=256000,
+        rope_theta=10_000.0,
+        window_pattern=(4096, -1),  # local, global, local, ...
+        attn_softcap=50.0, final_softcap=30.0,
+        sandwich_norm=True, zero_centered_norm=True, act="gelu",
+        embed_scale=math.sqrt(2304.0), query_scale=1.0 / math.sqrt(256.0),
+        tie_embeddings=True, fsdp=True, attn_chunk_q=1024,
+        sequence_parallel=True, attn_shard="seq",
+    )
+
+
+def smoke_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=128, vocab=128, padded_vocab=128,
+        window_pattern=(8, -1), attn_softcap=50.0, final_softcap=30.0,
+        sandwich_norm=True, zero_centered_norm=True, act="gelu",
+        embed_scale=8.0, dtype="float32", remat=False, fsdp=False,
+    )
+
+
+def make_cell(shape: str) -> base.DryRunCell:
+    return base.lm_make_cell(ARCH_ID, full_config(), shape)
+
+
+def init_smoke(key, cfg):
+    return lm.init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    return base.lm_smoke_batch(rng, cfg)
+
+
+def smoke_loss(params, cfg, batch):
+    return lm.loss_fn(params, cfg, batch)

@@ -1,0 +1,54 @@
+"""glm4-9b [hf:THUDM/glm-4-9b].
+
+40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552; RoPE over half
+the head dim (partial rotary), SwiGLU, RMSNorm.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import base
+from repro.models import lm
+
+ARCH_ID = "glm4-9b"
+FAMILY = "lm"
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SKIPPED_SHAPES = {
+    "long_500k": "pure full-attention stack (no sub-quadratic path); "
+                 "skipped per brief - see DESIGN.md §5",
+}
+
+
+def full_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID, n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2,
+        d_head=128, d_ff=13696, vocab=151552, padded_vocab=151552,
+        rope_theta=10_000.0, rope_fraction=0.5,
+        tie_embeddings=False, fsdp=True, attn_chunk_q=1024,
+        sequence_parallel=True,
+    )
+
+
+def smoke_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=128, vocab=128, padded_vocab=128,
+        rope_fraction=0.5, tie_embeddings=False, dtype="float32",
+        remat=False, fsdp=False,
+    )
+
+
+def make_cell(shape: str) -> base.DryRunCell:
+    return base.lm_make_cell(ARCH_ID, full_config(), shape)
+
+
+def init_smoke(key, cfg):
+    return lm.init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    return base.lm_smoke_batch(rng, cfg)
+
+
+def smoke_loss(params, cfg, batch):
+    return lm.loss_fn(params, cfg, batch)

@@ -1,0 +1,57 @@
+"""granite-moe-1b-a400m [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+24L d_model=1024 16H (GQA kv=8) d_ff=512/expert vocab=49155,
+MoE 32 experts top-8.  ~1.3B total / ~0.4B active params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base
+from repro.models import lm
+
+ARCH_ID = "granite-moe-1b-a400m"
+FAMILY = "lm"
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SKIPPED_SHAPES = {
+    "long_500k": "pure full-attention stack (no sub-quadratic path); "
+                 "skipped per brief - see DESIGN.md §5",
+}
+
+
+def full_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID, n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8,
+        d_head=64, d_ff=512, vocab=49155, padded_vocab=49408,
+        rope_theta=10_000.0,
+        moe=lm.MoEConfig(n_experts=32, top_k=8, d_expert=512),
+        tie_embeddings=True, fsdp=True, attn_chunk_q=1024,
+        sequence_parallel=True,
+    )
+
+
+def smoke_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=32, vocab=128, padded_vocab=128,
+        moe=lm.MoEConfig(n_experts=4, top_k=2, d_expert=32),
+        dtype="float32", remat=False, fsdp=False,
+    )
+
+
+def make_cell(shape: str) -> base.DryRunCell:
+    return base.lm_make_cell(ARCH_ID, full_config(), shape)
+
+
+def init_smoke(key, cfg):
+    return lm.init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    return base.lm_smoke_batch(rng, cfg)
+
+
+def smoke_loss(params, cfg, batch):
+    return lm.loss_fn(params, cfg, batch)

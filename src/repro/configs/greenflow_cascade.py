@@ -1,0 +1,192 @@
+"""greenflow-cascade: the PAPER'S OWN system as dry-run cells.
+
+Four serving/nearline programs (these are what actually runs in front of
+a production RS, and what the roofline section analyses for the paper's
+technique itself):
+
+  reward_serve  - online module: reward_matrix over B=4096 requests x
+                  J=128 action chains, then the Eq. 10 argmax decision;
+  nearline_dual - nearline module: L=200 dual-descent steps over a
+                  64K-request window (Algorithm 1);
+  reward_train  - reward-model train step (B=8192, AdamW);
+  rank_serve    - the cascade's ranking stage under allocation:
+                  B=1024 requests x n3=200 candidates through DIN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import BATCH, DryRunCell, _adam_specs, sds
+from repro.core.action_chain import generate_action_chains, paper_stage_specs
+from repro.core.primal_dual import allocate, dual_descent
+from repro.core.reward_model import (RewardModelConfig, reward_loss,
+                                     reward_matrix, reward_model_init)
+from repro.models.recsys import din as din_model
+from repro.training.optimizer import AdamW
+from repro.training.trainer import TrainState, init_state
+
+ARCH_ID = "greenflow-cascade"
+FAMILY = "recsys"
+SHAPES = ("reward_serve", "nearline_dual", "reward_train", "rank_serve")
+SKIPPED_SHAPES: dict = {}
+
+D_CONTEXT = 32
+N_REQ_SERVE = 4096
+N_REQ_NEARLINE = 65_536
+N_REQ_TRAIN = 8192
+RANK_BATCH = 1024
+RANK_CANDS = 200
+
+
+def full_config() -> RewardModelConfig:
+    chains = generate_action_chains(paper_stage_specs())
+    return RewardModelConfig(
+        n_stages=chains.n_stages, max_models=2, n_scale_groups=4,
+        d_context=D_CONTEXT, d_feature=64, d_hidden=64, d_state=32)
+
+
+def smoke_config() -> RewardModelConfig:
+    return RewardModelConfig(n_stages=3, max_models=2, n_scale_groups=4,
+                             d_context=8, d_feature=16, d_hidden=16,
+                             d_state=8)
+
+
+def _chains():
+    return generate_action_chains(paper_stage_specs())
+
+
+def make_cell(shape: str) -> DryRunCell:
+    cfg = full_config()
+    chains = _chains()
+    j = chains.n_chains
+    params = jax.eval_shape(
+        lambda k: reward_model_init(k, cfg), jax.random.PRNGKey(0))
+    pspec = jax.tree_util.tree_map(lambda _: P(), params)
+    chain_mo = jnp.asarray(chains.model_onehot)
+    chain_sh = jnp.asarray(chains.scale_multihot)
+    costs32 = jnp.asarray(chains.costs, jnp.float32)
+
+    if shape == "reward_serve":
+        def fn(p, ctx, lam):
+            r = reward_matrix(p, cfg, ctx, chain_mo, chain_sh)
+            return allocate(r, costs32, lam), r
+
+        return DryRunCell(
+            arch_id=ARCH_ID, shape_name=shape, kind="serve", fn=fn,
+            arg_specs=(params, sds((N_REQ_SERVE, D_CONTEXT), jnp.float32),
+                       sds((), jnp.float32)),
+            in_shardings=(pspec, P(BATCH, None), P()),
+            out_shardings=(P(BATCH), P(BATCH, None)),
+            meta={"model_flops": N_REQ_SERVE * j * cfg.n_stages
+                  * 2.0 * (cfg.d_hidden * (cfg.d_state + cfg.d_feature + 8)
+                           + cfg.d_hidden * cfg.d_hidden)},
+        )
+
+    if shape == "nearline_dual":
+        def make(iters):
+            def fn(rewards, lam0):
+                return dual_descent(rewards, costs32,
+                                    float(chains.costs.mean()) * N_REQ_NEARLINE,
+                                    lam0, max_iters=iters)
+
+            return DryRunCell(
+                arch_id=ARCH_ID, shape_name=shape, kind="serve", fn=fn,
+                arg_specs=(sds((N_REQ_NEARLINE, j), jnp.float32),
+                           sds((), jnp.float32)),
+                in_shardings=(P(BATCH, None), P()),
+                meta={"model_flops": 200.0 * N_REQ_NEARLINE * j * 4.0},
+            )
+
+        cell = make(200)
+        cell.variant_fn = lambda n: make(n)
+        cell.loop_trips = 200
+        cell.loop_period = 1
+        return cell
+
+    if shape == "reward_train":
+        opt = AdamW()
+
+        def step(state: TrainState, batch: dict):
+            l, grads = jax.value_and_grad(
+                lambda p: reward_loss(p, cfg, batch))(state.params)
+            new_p, new_o = opt.update(grads, state.opt_state, state.params,
+                                      1e-3)
+            return TrainState(state.step + 1, new_p, new_o), l
+
+        state = jax.eval_shape(lambda p: init_state(p, opt), params)
+        sspec = TrainState(step=P(), params=pspec,
+                           opt_state=_adam_specs(pspec))
+        batch = {
+            "context": sds((N_REQ_TRAIN, D_CONTEXT), jnp.float32),
+            "model_onehot": sds((N_REQ_TRAIN, cfg.n_stages, cfg.max_models),
+                                jnp.float32),
+            "scale_multihot": sds((N_REQ_TRAIN, cfg.n_stages,
+                                   cfg.n_scale_groups), jnp.float32),
+            "label": sds((N_REQ_TRAIN,), jnp.float32),
+        }
+        bspec = {k: P(BATCH, *(None,) * (v.ndim - 1))
+                 for k, v in batch.items()}
+        return DryRunCell(
+            arch_id=ARCH_ID, shape_name=shape, kind="train", fn=step,
+            arg_specs=(state, batch), in_shardings=(sspec, bspec),
+            donate=(0,),
+            meta={"model_flops": 3.0 * N_REQ_TRAIN * cfg.n_stages
+                  * 2.0 * cfg.d_hidden * cfg.d_hidden * 4},
+        )
+
+    if shape == "rank_serve":
+        dcfg = din_model.DINConfig(item_vocab=10_000_000, cat_vocab=100_000,
+                                   user_vocab=1_000_000)
+        dparams = jax.eval_shape(lambda k: din_model.init(k, dcfg),
+                                 jax.random.PRNGKey(0))
+        dspec = jax.tree_util.tree_map(lambda _: P(), dparams)
+        b, t, n = RANK_BATCH, dcfg.seq_len, RANK_CANDS
+        batch = {
+            "hist_ids": sds((b, t), jnp.int32),
+            "hist_cats": sds((b, t), jnp.int32),
+            "hist_mask": sds((b, t), jnp.float32),
+            "user_fields": sds((b, dcfg.n_user_fields), jnp.int32),
+        }
+        bspec = {k: P(BATCH, None) for k in batch}
+
+        def fn(p, bb, cid, ccat):
+            return din_model.score(p, dcfg, bb, cid, ccat)
+
+        return DryRunCell(
+            arch_id=ARCH_ID, shape_name=shape, kind="serve", fn=fn,
+            arg_specs=(dparams, batch, sds((b, n), jnp.int32),
+                       sds((b, n), jnp.int32)),
+            in_shardings=(dspec, bspec, P(BATCH, None), P(BATCH, None)),
+            out_shardings=P(BATCH, None),
+            meta={"model_flops": b * n * din_model.flops_per_item(dcfg)},
+        )
+
+    raise KeyError(shape)
+
+
+# smoke ----------------------------------------------------------------------
+
+
+def init_smoke(key, cfg):
+    return reward_model_init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    b, k, m, q = 16, cfg.n_stages, cfg.max_models, cfg.n_scale_groups
+    mo = np.zeros((b, k, m), np.float32)
+    mo[np.arange(b)[:, None], np.arange(k)[None, :],
+       rng.integers(0, m, (b, k))] = 1.0
+    sh = np.cumsum(np.eye(q)[rng.integers(0, q, (b, k))][..., ::-1],
+                   axis=-1)[..., ::-1]
+    return {"context": jnp.asarray(rng.normal(size=(b, cfg.d_context)),
+                                   jnp.float32),
+            "model_onehot": jnp.asarray(mo),
+            "scale_multihot": jnp.asarray(sh, jnp.float32),
+            "label": jnp.asarray(rng.uniform(0, 5, b), jnp.float32)}
+
+
+def smoke_loss(params, cfg, batch):
+    return reward_loss(params, cfg, batch)

@@ -1,0 +1,69 @@
+"""minicpm-2b [arXiv:2404.06395] (llama-like + mup-ish scaling).
+
+40L d_model=2304 36H (kv=36, MHA) d_ff=5760 vocab=122753; WSD schedule
+(training/optimizer.wsd_schedule - noted per assignment), embedding scale
+12.0, depth-scaled residuals 1.4/sqrt(40), logits divided by
+d_model/dim_base(=256).
+
+NOTE 36 heads do not divide the 16-way 'model' axis; GSPMD pads the head
+dim (36 -> 48 partitions-worth).  Sequence-sharded attention (the gemma2
+fix) was MEASURED WORSE for this arch's train cell (dominant term
+19.1 -> 21.6 s, EXPERIMENTS.md SPerf iter 1b - refuted) because with MHA
+(kv=36) the replicated KV outweighs the padding saving; head-sharding is
+kept.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.configs import base
+from repro.models import lm
+
+ARCH_ID = "minicpm-2b"
+FAMILY = "lm"
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SKIPPED_SHAPES = {
+    "long_500k": "pure full-attention stack (no sub-quadratic path); "
+                 "skipped per brief - see DESIGN.md §5",
+}
+
+WSD = dict(peak=1e-2, warmup=2000, stable=200_000, decay=20_000)
+
+
+def full_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID, n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+        d_head=64, d_ff=5760, vocab=122753, padded_vocab=122880,
+        rope_theta=10_000.0,
+        embed_scale=12.0, residual_scale=1.4 / math.sqrt(40.0),
+        logit_divisor=2304.0 / 256.0,
+        tie_embeddings=True, fsdp=True, attn_chunk_q=1024,
+        sequence_parallel=True,
+    )
+
+
+def smoke_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=72, n_heads=6,
+        n_kv_heads=6, d_head=12, d_ff=144, vocab=128, padded_vocab=128,
+        embed_scale=12.0, residual_scale=1.4 / math.sqrt(2.0),
+        logit_divisor=72.0 / 16.0, dtype="float32", remat=False, fsdp=False,
+    )
+
+
+def make_cell(shape: str) -> base.DryRunCell:
+    return base.lm_make_cell(ARCH_ID, full_config(), shape)
+
+
+def init_smoke(key, cfg):
+    return lm.init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    return base.lm_smoke_batch(rng, cfg)
+
+
+def smoke_loss(params, cfg, batch):
+    return lm.loss_fn(params, cfg, batch)

@@ -1,0 +1,55 @@
+"""olmoe-1b-7b [arXiv:2409.02060].
+
+16L d_model=2048 16H (kv=16, MHA) d_ff=1024/expert vocab=50304,
+MoE 64 experts top-8, QK-norm.  ~6.9B total / ~1.3B active.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import base
+from repro.models import lm
+
+ARCH_ID = "olmoe-1b-7b"
+FAMILY = "lm"
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SKIPPED_SHAPES = {
+    "long_500k": "pure full-attention stack (no sub-quadratic path); "
+                 "skipped per brief - see DESIGN.md §5",
+}
+
+
+def full_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID, n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_head=128, d_ff=1024, vocab=50304, padded_vocab=50432,
+        rope_theta=10_000.0, qk_norm=True,
+        moe=lm.MoEConfig(n_experts=64, top_k=8, d_expert=1024),
+        tie_embeddings=False, fsdp=True, attn_chunk_q=1024,
+        sequence_parallel=True,
+    )
+
+
+def smoke_config() -> lm.LMConfig:
+    return lm.LMConfig(
+        name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_head=16, d_ff=32, vocab=128, padded_vocab=128,
+        qk_norm=True, moe=lm.MoEConfig(n_experts=8, top_k=2, d_expert=32),
+        tie_embeddings=False, dtype="float32", remat=False, fsdp=False,
+    )
+
+
+def make_cell(shape: str) -> base.DryRunCell:
+    return base.lm_make_cell(ARCH_ID, full_config(), shape)
+
+
+def init_smoke(key, cfg):
+    return lm.init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    return base.lm_smoke_batch(rng, cfg)
+
+
+def smoke_loss(params, cfg, batch):
+    return lm.loss_fn(params, cfg, batch)

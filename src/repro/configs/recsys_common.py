@@ -1,0 +1,72 @@
+"""Shared cell builders for the recsys architecture configs.
+
+All four recsys archs expose the same shape set:
+  train_batch    B=65,536   train_step (AdamW)
+  serve_p99      B=512      online-inference forward
+  serve_bulk     B=262,144  offline-scoring forward
+  retrieval_cand B=1 user x 1,000,000 candidates
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import BATCH, DryRunCell, _adam_specs
+from repro.training.optimizer import AdamW
+from repro.training.trainer import TrainState, init_state
+
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65_536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262_144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+
+def train_cell(arch_id: str, shape: str, *, loss_fn: Callable,
+               abstract_params, param_specs, batch, batch_specs,
+               flops_fwd: float, lr: float = 1e-3) -> DryRunCell:
+    opt = AdamW(weight_decay=0.0)
+
+    def step(state: TrainState, b: dict):
+        l, grads = jax.value_and_grad(lambda p: loss_fn(p, b))(state.params)
+        new_params, new_opt = opt.update(grads, state.opt_state,
+                                         state.params, lr)
+        return TrainState(state.step + 1, new_params, new_opt), l
+
+    state = jax.eval_shape(lambda p: init_state(p, opt), abstract_params)
+    sspec = TrainState(step=P(), params=param_specs,
+                       opt_state=_adam_specs(param_specs))
+    return DryRunCell(
+        arch_id=arch_id, shape_name=shape, kind="train",
+        fn=step, arg_specs=(state, batch),
+        in_shardings=(sspec, batch_specs), donate=(0,),
+        meta={"model_flops": 3.0 * flops_fwd},  # fwd + bwd
+    )
+
+
+def serve_cell(arch_id: str, shape: str, *, fwd: Callable, abstract_params,
+               param_specs, batch, batch_specs,
+               flops_fwd: float) -> DryRunCell:
+    return DryRunCell(
+        arch_id=arch_id, shape_name=shape, kind="serve",
+        fn=fwd, arg_specs=(abstract_params, batch),
+        in_shardings=(param_specs, batch_specs),
+        out_shardings=P(BATCH),
+        meta={"model_flops": flops_fwd},
+    )
+
+
+def retrieval_cell(arch_id: str, *, fwd: Callable, abstract_params,
+                   param_specs, args, arg_specs,
+                   flops_fwd: float) -> DryRunCell:
+    return DryRunCell(
+        arch_id=arch_id, shape_name="retrieval_cand", kind="retrieval",
+        fn=fwd, arg_specs=(abstract_params, *args),
+        in_shardings=(param_specs, *arg_specs),
+        out_shardings=P(BATCH),
+        meta={"model_flops": flops_fwd},
+    )

@@ -1,0 +1,153 @@
+"""schnet [arXiv:1706.08566]: n_interactions=3 d_hidden=64 rbf=300 cutoff=10.
+
+Four assigned graph regimes (see DESIGN.md §5): full-batch small (Cora-
+sized), sampled minibatch on a Reddit-sized graph (real fanout sampler in
+models/gnn/sampler.py feeding PADDED static shapes), full-batch large
+(ogbn-products-sized), and batched small molecules.  Edge arrays shard
+over every mesh axis; nodes stay replicated (edge-parallel message
+passing, segment_sum + GSPMD partial-sum all-reduce).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base
+from repro.configs.base import DryRunCell, sds
+from repro.models.gnn import schnet as model
+from repro.models.gnn.sampler import budget_for
+from repro.training.optimizer import AdamW
+from repro.training.trainer import TrainState, init_state
+
+ARCH_ID = "schnet"
+FAMILY = "gnn"
+SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+SKIPPED_SHAPES: dict = {}
+
+EDGE_AXES = ("pod", "data", "model")  # shard edges over the whole mesh
+
+GRAPH_SHAPES = {
+    # name: (n_nodes, n_edges, d_feat, n_out, task, n_graphs)
+    "full_graph_sm": (2708, 10556, 1433, 7, "node_class", None),
+    "ogb_products": (2_449_029, 61_859_140, 100, 47, "node_class", None),
+    "molecule": (30 * 128, 64 * 128, 0, 1, "graph_reg", 128),
+}
+MINIBATCH = dict(seeds=1024, fanout=(15, 10), d_feat=602, n_out=41)
+
+
+def full_config(shape: str = "molecule") -> model.SchNetConfig:
+    if shape == "minibatch_lg":
+        return model.SchNetConfig(n_interactions=3, d_hidden=64, n_rbf=300,
+                                  cutoff=10.0, d_feat=MINIBATCH["d_feat"],
+                                  n_out=MINIBATCH["n_out"], task="node_class")
+    n_nodes, n_edges, d_feat, n_out, task, _ = GRAPH_SHAPES[shape]
+    return model.SchNetConfig(n_interactions=3, d_hidden=64, n_rbf=300,
+                              cutoff=10.0, d_feat=d_feat, n_out=n_out,
+                              task=task)
+
+
+def smoke_config() -> model.SchNetConfig:
+    return model.SchNetConfig(n_interactions=2, d_hidden=16, n_rbf=24,
+                              cutoff=10.0, d_feat=0, n_out=1,
+                              task="graph_reg")
+
+
+def _batch_specs(cfg: model.SchNetConfig, n_nodes, n_edges, n_graphs):
+    batch = {
+        "nodes": sds((n_nodes, cfg.d_feat) if cfg.d_feat else (n_nodes,),
+                     jnp.float32 if cfg.d_feat else jnp.int32),
+        "src": sds((n_edges,), jnp.int32),
+        "dst": sds((n_edges,), jnp.int32),
+        "dist": sds((n_edges,), jnp.float32),
+        "edge_mask": sds((n_edges,), jnp.float32),
+    }
+    shard = {
+        "nodes": P(None, None) if cfg.d_feat else P(None),
+        "src": P(EDGE_AXES), "dst": P(EDGE_AXES),
+        "dist": P(EDGE_AXES), "edge_mask": P(EDGE_AXES),
+    }
+    if cfg.task == "graph_reg":
+        batch["graph_ids"] = sds((n_nodes,), jnp.int32)
+        batch["n_graphs"] = n_graphs
+        batch["target"] = sds((n_graphs,), jnp.float32)
+        shard["graph_ids"] = P(None)
+        shard["n_graphs"] = None
+        shard["target"] = P(None)
+    else:
+        batch["target"] = sds((n_nodes,), jnp.int32)
+        batch["node_mask"] = sds((n_nodes,), jnp.float32)
+        shard["target"] = P(None)
+        shard["node_mask"] = P(None)
+    return batch, shard
+
+
+def make_cell(shape: str) -> DryRunCell:
+    if shape == "minibatch_lg":
+        cfg = full_config(shape)
+        n_nodes, n_edges = budget_for(MINIBATCH["seeds"], MINIBATCH["fanout"])
+        n_graphs = None
+    else:
+        n_nodes, n_edges, _, _, _, n_graphs = GRAPH_SHAPES[shape]
+        cfg = full_config(shape)
+    # pad the edge arrays so they shard evenly over the full 512-chip mesh
+    # (padding edges carry edge_mask=0 in the pipeline; zero messages)
+    n_edges = ((n_edges + 511) // 512) * 512
+
+    opt = AdamW(weight_decay=0.0)
+
+    def step(state: TrainState, batch: dict):
+        l, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, batch))(state.params)
+        new_params, new_opt = opt.update(grads, state.opt_state,
+                                         state.params, 1e-3)
+        return TrainState(state.step + 1, new_params, new_opt), l
+
+    params = jax.eval_shape(lambda k: model.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    state = jax.eval_shape(lambda p: init_state(p, opt), params)
+    pspec = jax.tree_util.tree_map(lambda _: P(), params)
+    sspec = TrainState(step=P(), params=pspec,
+                       opt_state=base._adam_specs(pspec))
+    batch, bspec = _batch_specs(cfg, n_nodes, n_edges, n_graphs)
+    static_ng = batch.pop("n_graphs", None)
+    bspec.pop("n_graphs", None)
+    if static_ng is not None:
+        step_fn = lambda s, b: step(s, dict(b, n_graphs=static_ng))
+    else:
+        step_fn = step
+
+    flops = (n_edges * model.flops_per_edge(cfg)
+             + n_nodes * model.flops_per_node(cfg)) * 3.0  # fwd+bwd
+    return DryRunCell(
+        arch_id=ARCH_ID, shape_name=shape, kind="train",
+        fn=step_fn, arg_specs=(state, batch),
+        in_shardings=(sspec, bspec), donate=(0,),
+        meta={"model_flops": flops, "n_edges": n_edges, "n_nodes": n_nodes},
+    )
+
+
+# smoke ----------------------------------------------------------------------
+
+
+def init_smoke(key, cfg):
+    return model.init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    n, e, g = 40, 80, 4
+    return {
+        "nodes": jnp.asarray(rng.integers(0, 10, n), jnp.int32),
+        "src": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        "dst": jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        "dist": jnp.asarray(rng.uniform(0.5, 9.0, e), jnp.float32),
+        "edge_mask": jnp.ones(e, jnp.float32),
+        "graph_ids": jnp.asarray(np.repeat(np.arange(g), n // g), jnp.int32),
+        "n_graphs": g,
+        "target": jnp.asarray(rng.normal(size=g), jnp.float32),
+    }
+
+
+def smoke_loss(params, cfg, batch):
+    return model.loss_fn(params, cfg, batch)

@@ -1,0 +1,163 @@
+"""xdeepfm [arXiv:1803.05170]: n_sparse=39 embed_dim=10
+cin_layers=200-200-200 mlp=400-400 interaction=CIN.  ~93M-row stacked
+table, row-sharded over 'model' like DLRM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import recsys_common as rc
+from repro.configs.base import BATCH, DryRunCell, sds
+from repro.distributed.sharding import current_mesh
+from repro.models.recsys import xdeepfm as model
+
+ARCH_ID = "xdeepfm"
+FAMILY = "recsys"
+SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+SKIPPED_SHAPES: dict = {}
+
+PAD_TO = 1024
+N_ITEM_FIELDS = 6
+
+
+def full_config() -> model.XDeepFMConfig:
+    return model.XDeepFMConfig()
+
+
+def smoke_config() -> model.XDeepFMConfig:
+    return model.XDeepFMConfig(vocab_sizes=tuple([32] * 39), embed_dim=4,
+                               cin_layers=(8, 8), mlp_hidden=(16, 16))
+
+
+def _abstract(cfg):
+    return jax.eval_shape(
+        lambda k: model.init(k, cfg, pad_vocab_to=PAD_TO),
+        jax.random.PRNGKey(0))
+
+
+def _pspec(params):
+    spec = jax.tree_util.tree_map(lambda _: P(), params)
+    spec["tables"]["stacked"] = P(("model", "pod", "data"), None)
+    spec["linear"] = P(("model", "pod", "data"), None)
+    return spec
+
+
+def _batch(cfg, b, with_label=True):
+    batch = {"sparse": sds((b, cfg.n_sparse), jnp.int32)}
+    specs = {"sparse": P(BATCH, None)}
+    if with_label:
+        batch["label"] = sds((b,), jnp.float32)
+        specs["label"] = P(BATCH)
+    return batch, specs
+
+
+def _hybrid_train_cell(cfg, params, pspec, batch, bspec, b) -> DryRunCell:
+    """Hybrid optimizer (stateless SGD embeddings + AdamW dense) - the
+    DLRM §Perf iteration 3 port."""
+    from repro.configs.base import _adam_specs
+    from repro.training.optimizer import AdamW
+    from repro.training.trainer import TrainState
+
+    opt = AdamW(weight_decay=0.0)
+    EMB = ("tables", "linear")
+
+    def split(p):
+        return ({k: v for k, v in p.items() if k in EMB},
+                {k: v for k, v in p.items() if k not in EMB})
+
+    def step(state: TrainState, bb: dict):
+        l, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, bb, current_mesh()))(state.params)
+        g_emb, g_dense = split(grads)
+        p_emb, p_dense = split(state.params)
+        new_emb = jax.tree_util.tree_map(
+            lambda p, g: (p - 0.04 * g.astype(p.dtype)).astype(p.dtype),
+            p_emb, g_emb)
+        new_dense, new_opt = opt.update(g_dense, state.opt_state,
+                                        p_dense, 1e-3)
+        return TrainState(state.step + 1, dict(new_dense, **new_emb),
+                          new_opt), l
+
+    emb_p, dense_p = split(params)
+    state = jax.eval_shape(
+        lambda dp: TrainState(jnp.zeros((), jnp.int32),
+                              dict(dp[0], **dp[1]), AdamW().init(dp[0])),
+        (dense_p, emb_p))
+    dense_spec = {k: v for k, v in pspec.items() if k not in EMB}
+    sspec = TrainState(step=P(), params=pspec,
+                       opt_state=_adam_specs(dense_spec))
+    return DryRunCell(
+        arch_id=ARCH_ID, shape_name="train_batch", kind="train",
+        fn=step, arg_specs=(state, batch), in_shardings=(sspec, bspec),
+        donate=(0,),
+        meta={"model_flops": 3.0 * b * model.flops_per_example(cfg),
+              "optimizer": "hybrid sgd(emb)+adamw(dense), 2D rows"},
+    )
+
+
+def make_cell(shape: str) -> DryRunCell:
+    cfg = full_config()
+    params = _abstract(cfg)
+    pspec = _pspec(params)
+    info = rc.RECSYS_SHAPES[shape]
+
+    if shape == "train_batch":
+        batch, bspec = _batch(cfg, info["batch"])
+        return _hybrid_train_cell(cfg, params, pspec, batch, bspec,
+                                  info["batch"])
+    if shape == "retrieval_cand":
+        n = info["n_candidates"]
+        user = {"sparse": sds((1, cfg.n_sparse), jnp.int32)}
+        uspec = {"sparse": P(None, None)}
+        cand = sds((n, N_ITEM_FIELDS), jnp.int32)
+
+        def fwd(p, u, c):
+            # python-loop chunks bound the (chunk, Hp*m, D) CIN buffer and
+            # keep HLO flop counts exact (while-loops undercount); the
+            # candidate set pads to 2^20 so chunk*39 ids shard evenly
+            n_real = c.shape[0]
+            n_pad = 1 << 20
+            c = jnp.pad(c, ((0, n_pad - n_real), (0, 0)))
+            n_chunks = 32
+            cs = n_pad // n_chunks
+            outs = [model.retrieval_forward(p, cfg, u,
+                                            c[i * cs:(i + 1) * cs],
+                                            current_mesh())
+                    for i in range(n_chunks)]
+            return jnp.concatenate(outs)[:n_real]
+
+        return rc.retrieval_cell(
+            ARCH_ID, fwd=fwd, abstract_params=params, param_specs=pspec,
+            args=(user, cand), arg_specs=(uspec, P(BATCH, None)),
+            flops_fwd=n * model.flops_per_example(cfg))
+
+    b = info["batch"]
+    batch, bspec = _batch(cfg, b, with_label=False)
+
+    def fwd(p, bb):
+        return model.forward(p, cfg, bb, current_mesh())
+
+    return rc.serve_cell(ARCH_ID, shape, fwd=fwd, abstract_params=params,
+                         param_specs=pspec, batch=batch, batch_specs=bspec,
+                         flops_fwd=b * model.flops_per_example(cfg))
+
+
+# smoke ----------------------------------------------------------------------
+
+
+def init_smoke(key, cfg):
+    return model.init(key, cfg)
+
+
+def smoke_batch(rng: np.random.Generator, cfg) -> dict:
+    b = 16
+    return {"sparse": jnp.asarray(rng.integers(0, 32, (b, cfg.n_sparse)),
+                                  jnp.int32),
+            "label": jnp.asarray(rng.integers(0, 2, b), jnp.float32)}
+
+
+def smoke_loss(params, cfg, batch):
+    return model.loss_fn(params, cfg, batch)

@@ -1,0 +1,27 @@
+"""GreenFlow core: the paper's contribution as a composable JAX library."""
+from repro.core.action_chain import (ActionChainSet, ModelInstance, StageSpec,
+                                     generate_action_chains,
+                                     paper_stage_specs)
+from repro.core.allocator import GreenFlowAllocator
+from repro.core.baselines import (StageActionSpace, cras_allocation,
+                                  equal_allocation)
+from repro.core.budget import BudgetController
+from repro.core.pfec import (EnergyConfig, PFECReport, carbon_from_energy,
+                             energy_from_flops, pfec_report, revenue_at_e)
+from repro.core.primal_dual import (DualDescentConfig, DynamicPrimalDual,
+                                    allocate, consumption, dual_bisect,
+                                    dual_descent)
+from repro.core.reward_model import (BASIS_FUNCTIONS, RewardModelConfig,
+                                     field_rce, reward_apply, reward_loss,
+                                     reward_matrix, reward_model_init)
+
+__all__ = [
+    "ActionChainSet", "ModelInstance", "StageSpec", "generate_action_chains",
+    "paper_stage_specs", "GreenFlowAllocator", "StageActionSpace",
+    "cras_allocation", "equal_allocation", "BudgetController", "EnergyConfig",
+    "PFECReport", "carbon_from_energy", "energy_from_flops", "pfec_report",
+    "revenue_at_e", "DualDescentConfig", "DynamicPrimalDual", "allocate",
+    "consumption", "dual_bisect", "dual_descent", "BASIS_FUNCTIONS",
+    "RewardModelConfig", "field_rce", "reward_apply", "reward_loss",
+    "reward_matrix", "reward_model_init",
+]

@@ -1,0 +1,88 @@
+"""GreenFlow facade: the hybrid online-nearline allocator (paper Fig. 2).
+
+Ties together:
+  chain set (step 1)  +  reward model & cost measure (step 2)
+  +  dynamic primal-dual (step 3, nearline)  +  Eq. 10 decisions (online).
+
+The allocator itself consumes compute (the paper quantifies +3~8% FLOPs);
+``self_cost_flops`` meters the reward-model forward so PFEC reports include
+the overhead honestly (Table 5 "Additional Cost").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.action_chain import ActionChainSet
+from repro.core.budget import BudgetController
+from repro.core.flops import mlp_flops
+from repro.core.pfec import PFECReport, pfec_report
+from repro.core.primal_dual import DualDescentConfig
+from repro.core.reward_model import (RewardModelConfig, reward_matrix,
+                                     N_BASIS)
+
+
+@dataclass
+class GreenFlowAllocator:
+    chains: ActionChainSet
+    reward_params: dict
+    reward_cfg: RewardModelConfig
+    budget_per_window: float
+    dual_cfg: DualDescentConfig = field(default_factory=DualDescentConfig)
+    guard: bool = True
+
+    def __post_init__(self):
+        self.controller = BudgetController(
+            self.chains, self.budget_per_window, self.dual_cfg, self.guard)
+        self._chain_mo = jnp.asarray(self.chains.model_onehot)
+        self._chain_sh = jnp.asarray(self.chains.scale_multihot)
+        self._reward_fn = jax.jit(
+            lambda params, ctx: reward_matrix(
+                params, self.reward_cfg, ctx, self._chain_mo, self._chain_sh))
+        self._total_self_flops = 0.0
+        self._total_spend = 0.0
+        self._n_requests = 0
+
+    # -- step 2: reward scores for a window of requests ---------------------
+    def score(self, raw_context: np.ndarray) -> jnp.ndarray:
+        ctx = jnp.asarray(raw_context, jnp.float32)
+        self._total_self_flops += self.self_cost_flops(ctx.shape[0])
+        return self._reward_fn(self.reward_params, ctx)
+
+    # -- steps 3+4: allocate one window --------------------------------------
+    def allocate_window(self, raw_context: np.ndarray) -> np.ndarray:
+        rewards = self.score(raw_context)
+        decisions = self.controller.step_window(np.asarray(rewards))
+        self._total_spend += float(self.chains.costs[decisions].sum())
+        self._n_requests += len(decisions)
+        return decisions
+
+    # -- PFEC accounting ------------------------------------------------------
+    def self_cost_flops(self, n_requests: int) -> float:
+        """FLOPs of GreenFlow itself: encoder + K cells x J chains/request."""
+        cfg = self.reward_cfg
+        enc = mlp_flops([cfg.d_context, *cfg.encoder_hidden, cfg.d_feature])
+        d_in = cfg.d_state + cfg.d_feature + cfg.d_model_emb
+        cell = (mlp_flops([d_in, cfg.d_hidden, cfg.d_hidden])
+                + mlp_flops([cfg.d_hidden, cfg.d_state])
+                + mlp_flops([cfg.d_hidden, N_BASIS])
+                + mlp_flops([cfg.d_hidden, N_BASIS * cfg.n_scale_groups]))
+        per_request = enc + cfg.n_stages * cell * self.chains.n_chains
+        return per_request * n_requests
+
+    def report(self, clicks: float) -> PFECReport:
+        return pfec_report(
+            clicks=clicks,
+            flops=self._total_spend,
+            n_requests=self._n_requests,
+            overhead_flops=self._total_self_flops,
+            overhead_frac=self._total_self_flops / max(self._total_spend, 1.0),
+            lam=float(self.controller.pd.lam),
+        )
+
+    @property
+    def lam(self) -> float:
+        return float(self.controller.pd.lam)

@@ -1,0 +1,85 @@
+"""Budget controller: keeps realized consumption under the global budget
+even through traffic spikes (paper Fig. 5).
+
+Two mechanisms compose:
+
+  * the nearline dual price reacts within one window (more requests at the
+    same price -> overshoot -> price rises next window);
+  * a hard *downgrade guard* inside the window: if the running spend would
+    exceed the window budget, remaining requests are forced onto the
+    cheapest chain ("computation downgrade" in the paper's words).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.action_chain import ActionChainSet
+from repro.core.primal_dual import DynamicPrimalDual, DualDescentConfig
+
+
+@dataclass
+class WindowStats:
+    n_requests: int
+    spend: float
+    budget: float
+    lam: float
+    downgraded: int
+
+
+@dataclass
+class BudgetController:
+    chains: ActionChainSet
+    budget_per_window: float
+    dual_cfg: DualDescentConfig = field(default_factory=DualDescentConfig)
+    guard: bool = True
+
+    def __post_init__(self):
+        self.pd = DynamicPrimalDual(self.chains.costs, self.budget_per_window,
+                                    self.dual_cfg)
+        self.stats: list[WindowStats] = []
+
+    def step_window(self, rewards: np.ndarray) -> np.ndarray:
+        """Serve one traffic window: decide with lambda_{t-1}, meter spend,
+        apply the downgrade guard, then update the price for t+1.
+
+        rewards: (I_t, J) estimated rewards for this window's requests.
+        Returns the (possibly downgraded) chain index per request.
+        """
+        decisions = np.asarray(self.pd.decide(rewards))
+        costs = self.chains.costs
+        spend = np.cumsum(costs[decisions])
+        downgraded = 0
+        if self.guard and spend[-1] > self.budget_per_window:
+            cheap = self.chains.cheapest()
+            c_min = costs[cheap]
+            n = len(decisions)
+            # greedy with tail reserve: request i keeps its chain only if
+            # the spend so far + its cost + a cheapest-chain reservation
+            # for everyone behind it still fits; else it is downgraded.
+            # Guarantees spend <= budget whenever n * c_min <= budget.
+            kept_prefix = np.concatenate(
+                [[0.0], np.cumsum(costs[decisions])[:-1]])
+            # iterate: downgrading shifts prefixes; 2 passes converge for
+            # the monotone tail-reserve rule (first crossing only moves up)
+            for _ in range(4):
+                reserve = c_min * (n - 1 - np.arange(n))
+                over = kept_prefix + costs[decisions] + reserve \
+                    > self.budget_per_window
+                if not over.any():
+                    break
+                decisions = np.where(over, cheap, decisions)
+                kept_prefix = np.concatenate(
+                    [[0.0], np.cumsum(costs[decisions])[:-1]])
+                downgraded = int(over.sum())
+            spend = np.cumsum(costs[decisions])
+
+        lam = self.pd.update(rewards)
+        self.stats.append(WindowStats(
+            n_requests=len(decisions), spend=float(spend[-1]),
+            budget=self.budget_per_window, lam=lam, downgraded=downgraded))
+        return decisions
+
+    def spend_trace(self) -> np.ndarray:
+        return np.array([s.spend for s in self.stats])

@@ -1,0 +1,169 @@
+"""Dynamic primal-dual optimization (paper §4.3, Algorithm 1).
+
+The assignment LP (Eq. 3) has ONE coupling constraint (the global FLOPs
+budget), so its Lagrangian dual is a scalar problem in the dual price
+lambda.  Given lambda, the inner max decomposes per request:
+
+    x_ij = 1  iff  j = argmax_j (R_ij - lambda * c_j)          (Eq. 10)
+
+and the dual subgradient is  dL/dlambda = C - sum_i c_{j*(i)}.
+
+We provide:
+  * ``dual_descent``  - Algorithm 1 verbatim as a lax.scan (jit-able, runs
+    the whole nearline window on-device).
+  * ``dual_bisect``   - an exact oracle: consumption(lambda) is a step
+    function, non-increasing in lambda, so the optimal price is found by
+    bisection.  Used for tests and as a warm-start.
+  * ``allocate``      - Eq. 10 decisions for a batch of requests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=())
+def allocate(rewards: jnp.ndarray, costs: jnp.ndarray,
+             lam: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 10: per-request argmax of the lagrangian score.
+
+    rewards: (I, J), costs: (J,), lam: scalar -> (I,) int32 chain index.
+    """
+    score = rewards - lam * costs[None, :]
+    return jnp.argmax(score, axis=1).astype(jnp.int32)
+
+
+def consumption(rewards: jnp.ndarray, costs: jnp.ndarray,
+                lam: jnp.ndarray) -> jnp.ndarray:
+    """Total FLOPs consumed if lambda is the dual price."""
+    j_star = allocate(rewards, costs, lam)
+    return jnp.sum(jnp.take(costs, j_star))
+
+
+def realized_reward(rewards: jnp.ndarray, j_star: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.take_along_axis(rewards, j_star[:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 (dual descent)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DualDescentConfig:
+    max_iters: int = 200  # L in Algorithm 1
+    step_size: float = 1.0  # eta (normalized internally, see below)
+    step_decay: float = 0.999
+    lam_init: float = 0.0
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def dual_descent(rewards: jnp.ndarray, costs: jnp.ndarray, budget: float,
+                 lam0: jnp.ndarray, *, max_iters: int = 200,
+                 step_size: float = 1.0, step_decay: float = 0.999):
+    """Algorithm 1 inner loop (steps 5-9), vectorized over all requests.
+
+    The raw subgradient C - sum c_j x_ij has the scale of the budget, while
+    useful lambda values have the scale of reward-per-FLOP; we therefore
+    normalize the step by (I * mean(c)^2) so `step_size` is dimensionless
+    and stable across budgets.  Returns (lam, trace_of_gaps).
+    """
+    costs = costs.astype(jnp.float32)
+    rewards = rewards.astype(jnp.float32)
+    norm = rewards.shape[0] * jnp.mean(costs) ** 2 + 1e-30
+
+    def body(carry, _):
+        lam, eta = carry
+        used = consumption(rewards, costs, lam)
+        grad = budget - used  # dL/dlambda
+        lam_new = jnp.maximum(0.0, lam - eta * grad / norm)
+        return (lam_new, eta * step_decay), (budget - used)
+
+    (lam, _), gaps = jax.lax.scan(
+        body, (jnp.asarray(lam0, jnp.float32), jnp.asarray(step_size)),
+        None, length=max_iters)
+    return lam, gaps
+
+
+# ---------------------------------------------------------------------------
+# Exact oracle by bisection (single constraint => monotone consumption)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def dual_bisect(rewards: jnp.ndarray, costs: jnp.ndarray, budget: float,
+                *, iters: int = 64, lam_hi_init: float = None):
+    """Smallest lambda >= 0 with consumption(lambda) <= budget.
+
+    consumption is non-increasing in lambda (higher price -> cheaper chains)
+    so bisection is exact up to float resolution. If even lambda=0 fits the
+    budget, returns 0 (budget slack; constraint inactive).
+    """
+    rewards = rewards.astype(jnp.float32)
+    costs = costs.astype(jnp.float32)
+    # Upper bound: the price at which every request picks its cheapest
+    # chain.  Chain j beats a cheaper j' once lam > (R_j - R_j')/(c_j -
+    # c_j'), so the bound must use the smallest POSITIVE cost gap (two
+    # nearly-equal costs need a huge price to separate), not min cost.
+    r_span = jnp.max(rewards) - jnp.min(rewards)
+    sorted_c = jnp.sort(costs)
+    gaps = jnp.diff(sorted_c)
+    min_gap = jnp.min(jnp.where(gaps > 0, gaps, jnp.inf), initial=jnp.inf)
+    min_gap = jnp.where(jnp.isfinite(min_gap), min_gap, jnp.max(costs))
+    lam_hi = (r_span / jnp.maximum(min_gap, 1e-30) + 1.0) \
+        if lam_hi_init is None else jnp.asarray(lam_hi_init, jnp.float32)
+
+    def body(_, bounds):
+        lo, hi = bounds
+        mid = 0.5 * (lo + hi)
+        fits = consumption(rewards, costs, mid) <= budget
+        return jnp.where(fits, lo, mid), jnp.where(fits, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body,
+                               (jnp.float32(0.0), lam_hi))
+    # prefer 0 if the unconstrained allocation already fits
+    fits0 = consumption(rewards, costs, jnp.float32(0.0)) <= budget
+    return jnp.where(fits0, 0.0, hi)
+
+
+# ---------------------------------------------------------------------------
+# Streaming wrapper (the nearline job, Algorithm 1 outer loop)
+# ---------------------------------------------------------------------------
+
+
+class DynamicPrimalDual:
+    """Nearline dual-price tracker.
+
+    Every window t: observe the (R, c) samples collected from traffic,
+    run L descent steps warm-started at lambda_{t-1}, publish lambda_t.
+    Online decisions for window t+1 use lambda_t (paper: near-optimal
+    under i.i.d. arrivals, Agrawal et al. 2014).
+    """
+
+    def __init__(self, costs, budget_per_window: float,
+                 cfg: DualDescentConfig = DualDescentConfig()):
+        self.costs = jnp.asarray(costs, jnp.float32)
+        self.budget = float(budget_per_window)
+        self.cfg = cfg
+        self.lam = jnp.float32(cfg.lam_init)
+        self.history: list[float] = []
+
+    def update(self, rewards) -> float:
+        """One nearline window: returns the new published dual price."""
+        lam, _ = dual_descent(
+            jnp.asarray(rewards), self.costs, self.budget, self.lam,
+            max_iters=self.cfg.max_iters, step_size=self.cfg.step_size,
+            step_decay=self.cfg.step_decay)
+        self.lam = lam
+        self.history.append(float(lam))
+        return float(lam)
+
+    def decide(self, rewards) -> jnp.ndarray:
+        """Online module: Eq. 10 with the latest published price."""
+        return allocate(jnp.asarray(rewards), self.costs, self.lam)
+
+    def set_budget(self, budget: float):
+        self.budget = float(budget)

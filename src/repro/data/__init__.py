@@ -1,0 +1,1 @@
+"""Data substrate: synthetic Ali-CCP-style log, sharded pipelines, graphs."""

@@ -1,0 +1,172 @@
+"""Synthetic Ali-CCP-style click log (see DESIGN.md §8 for why synthetic).
+
+A latent-utility model generates structurally-faithful traffic:
+
+  * users: latent taste z_u in R^dl, activity a_u ~ heavy-tailed lognormal
+    (the paper's "users with varying levels of activity" whose reward
+    curves differ - the property GreenFlow exploits);
+  * items: latent z_i, popularity pop_i ~ zipf-ish, category from a
+    clustering of z_i;
+  * click model: p(u clicks i) = sigmoid(s * <z_u, z_i> + pop_i + b_u)
+    with activity entering through b_u - active users click more and
+    saturate earlier (=> concave reward curves with different slopes);
+  * per-user behavior history sampled proportional to affinity;
+  * categorical user/item features are quantized projections of the
+    latents (so models CAN learn preferences from ids).
+
+Everything is generated lazily from a seed - the 85M-sample scale of
+Ali-CCP is samplable without materializing it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class WorldConfig:
+    n_users: int = 20_000
+    n_items: int = 4_000
+    n_cats: int = 50
+    d_latent: int = 16
+    hist_len: int = 50
+    n_user_fields: int = 4
+    user_field_vocab: int = 64  # per-field quantization buckets
+    click_scale: float = 4.0
+    click_bias: float = -2.0
+    seed: int = 0
+
+
+@dataclass
+class World:
+    cfg: WorldConfig
+    z_user: np.ndarray  # (U, dl)
+    z_item: np.ndarray  # (I, dl)
+    activity: np.ndarray  # (U,) in (0, inf), heavy tailed
+    popularity: np.ndarray  # (I,)
+    item_cat: np.ndarray  # (I,) int
+    user_fields: np.ndarray  # (U, F) int
+    hist_ids: np.ndarray  # (U, T) int
+    hist_mask: np.ndarray  # (U, T) float
+
+    # ---- click ground truth -------------------------------------------------
+    def click_prob(self, users: np.ndarray, items: np.ndarray) -> np.ndarray:
+        """users (B,), items (B,) or (B, N) -> p(click)."""
+        cfg = self.cfg
+        zu = self.z_user[users]
+        if items.ndim == 1:
+            zi = self.z_item[items]
+            aff = np.einsum("bd,bd->b", zu, zi)
+            pop = self.popularity[items]
+        else:
+            zi = self.z_item[items]
+            aff = np.einsum("bd,bnd->bn", zu, zi)
+            pop = self.popularity[items]
+        act = np.log1p(self.activity[users])
+        # heterogeneous preference SHARPNESS (the paper's premise: users
+        # differ in how much ranking quality matters): active users click
+        # by affinity (good rankers pay off), casual users click diffusely
+        # (cheap chains suffice) - this is what GreenFlow exploits.
+        sharp = cfg.click_scale * (0.35 + 1.3 * np.tanh(self.activity[users]))
+        if items.ndim == 2:
+            act = act[:, None]
+            sharp = sharp[:, None]
+        logits = sharp * aff + pop + act + cfg.click_bias
+        return 1.0 / (1.0 + np.exp(-logits))
+
+    def sample_clicks(self, users, items, rng: np.random.Generator):
+        return (rng.random(items.shape) < self.click_prob(users, items)) \
+            .astype(np.float32)
+
+    def reward_context(self, users: np.ndarray) -> np.ndarray:
+        """Per-request context features f_i for the reward model:
+        activity, history length, field one-hot hashes, taste norm."""
+        act = np.log1p(self.activity[users])[:, None]
+        hl = self.hist_mask[users].sum(-1, keepdims=True) / self.cfg.hist_len
+        fields = self.user_fields[users] / self.cfg.user_field_vocab
+        taste = np.abs(self.z_user[users])  # coarse taste signature
+        return np.concatenate([act, hl, fields, taste], -1).astype(np.float32)
+
+    @property
+    def d_context(self) -> int:
+        return 2 + self.cfg.n_user_fields + self.cfg.d_latent
+
+
+def build_world(cfg: WorldConfig = WorldConfig()) -> World:
+    rng = np.random.default_rng(cfg.seed)
+    z_user = rng.normal(size=(cfg.n_users, cfg.d_latent)) / np.sqrt(cfg.d_latent)
+    z_item = rng.normal(size=(cfg.n_items, cfg.d_latent)) / np.sqrt(cfg.d_latent)
+    activity = rng.lognormal(mean=0.0, sigma=1.0, size=cfg.n_users)
+    popularity = -np.log(1.0 + np.arange(cfg.n_items) / 50.0)
+    popularity = popularity - popularity.mean()
+    rng.shuffle(popularity)
+
+    # categories = k-means-ish hash of item latents
+    proto = rng.normal(size=(cfg.n_cats, cfg.d_latent))
+    item_cat = np.argmax(z_item @ proto.T, axis=1).astype(np.int64)
+
+    # user categorical fields: quantized random projections of taste
+    proj = rng.normal(size=(cfg.d_latent, cfg.n_user_fields))
+    q = z_user @ proj
+    ranks = np.argsort(np.argsort(q, axis=0), axis=0) / cfg.n_users
+    user_fields = np.minimum((ranks * cfg.user_field_vocab).astype(np.int64),
+                             cfg.user_field_vocab - 1)
+    # field id spaces are disjoint per field
+    user_fields += np.arange(cfg.n_user_fields) * cfg.user_field_vocab
+
+    # histories: affinity-proportional sampling, length ~ activity
+    aff = z_user @ z_item.T + popularity[None, :]
+    hist_ids = np.zeros((cfg.n_users, cfg.hist_len), np.int64)
+    hist_mask = np.zeros((cfg.n_users, cfg.hist_len), np.float32)
+    lengths = np.clip((activity / activity.max() * cfg.hist_len * 2).astype(int),
+                      3, cfg.hist_len)
+    gumbel = rng.gumbel(size=aff.shape)
+    order = np.argsort(-(aff * 3.0 + gumbel), axis=1)
+    for u in range(cfg.n_users):
+        t = lengths[u]
+        hist_ids[u, :t] = order[u, :t]
+        hist_mask[u, :t] = 1.0
+
+    return World(cfg, z_user, z_item, activity, popularity, item_cat,
+                 user_fields, hist_ids, hist_mask)
+
+
+# ---------------------------------------------------------------------------
+# Paper split (§5.1): 50% cascade-model train / 25% validation /
+# 22.5% reward-model sample generation / 2.5% final eval
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class UserSplit:
+    cascade_train: np.ndarray
+    validation: np.ndarray
+    reward_train: np.ndarray
+    final_eval: np.ndarray
+
+
+def split_users(world: World, seed: int = 1) -> UserSplit:
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(world.cfg.n_users)
+    n = world.cfg.n_users
+    a, b, c = int(0.5 * n), int(0.75 * n), int(0.975 * n)
+    return UserSplit(perm[:a], perm[a:b], perm[b:c], perm[c:])
+
+
+def ctr_batch(world: World, users: np.ndarray, rng: np.random.Generator,
+              batch: int) -> dict:
+    """Pointwise CTR training batch (for DIN/DIEN/BST-style rankers)."""
+    u = rng.choice(users, size=batch)
+    items = rng.integers(0, world.cfg.n_items, size=batch)
+    y = world.sample_clicks(u, items, rng)
+    return {
+        "user_fields": world.user_fields[u].astype(np.int32),
+        "hist_ids": world.hist_ids[u].astype(np.int32),
+        "hist_cats": world.item_cat[world.hist_ids[u]].astype(np.int32),
+        "hist_mask": world.hist_mask[u],
+        "item_id": items.astype(np.int32),
+        "item_cat": world.item_cat[items].astype(np.int32),
+        "label": y,
+        "users": u,
+    }

@@ -1,0 +1,76 @@
+"""Sharding helpers shared by the model zoo and the launchers.
+
+Models never hard-code a mesh: they call ``constrain(x, axes...)`` which is
+an identity outside a mesh context (CPU unit tests) and a
+``with_sharding_constraint`` under ``jax.set_mesh`` (dry-run / production).
+
+Axis-name conventions (see launch/mesh.py):
+  pod    - slowest axis, crosses ICI-over-DCN boundaries (multi-pod DP)
+  data   - in-pod data parallel (+ FSDP for LM params)
+  model  - tensor / expert / vocab / embedding-row parallel
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")  # logical batch axis = pod x data
+
+
+def current_mesh():
+    """The mesh from the ambient jax.set_mesh context, or None."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if m is None or not m.axis_names:
+        return None
+    return m
+
+
+def mesh_axes(mesh=None) -> tuple:
+    m = mesh or current_mesh()
+    return tuple(m.axis_names) if m is not None else ()
+
+
+def batch_spec(mesh=None) -> tuple:
+    """The tuple of axes the batch dim shards over, filtered to the mesh."""
+    names = mesh_axes(mesh)
+    got = tuple(a for a in BATCH_AXES if a in names)
+    return got if got else None
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that degrades to identity w/o a mesh.
+
+    spec entries: None, an axis name, or a tuple of axis names.  Axis names
+    not present in the ambient mesh are dropped (lets the same model code
+    run on the single-pod and multi-pod meshes).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return jax.lax.with_sharding_constraint(x, P(*(keep(s) for s in spec)))
+
+
+def constrain_batch(x):
+    """Shard the leading dim over (pod, data); replicate the rest."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    bs = batch_spec(mesh)
+    return constrain(x, bs, *([None] * (x.ndim - 1)))
+
+
+def named_sharding(mesh, *spec):
+    return jax.sharding.NamedSharding(mesh, P(*spec))

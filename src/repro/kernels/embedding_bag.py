@@ -1,0 +1,76 @@
+"""Fused EmbeddingBag (Pallas): gather + weighted bag-sum in one pass.
+
+TPU-idiomatic gather: the bag ids are SCALAR-PREFETCHED and drive the
+table BlockSpec's index_map, so the pipeline DMAs exactly the embedding
+rows that are needed, one (1, D) row per grid step - no (B, L, D)
+intermediate ever hits HBM (the jnp path materializes it; that gap is the
+kernel's win, and it's what FBGEMM's TBE does on GPU).
+
+  grid = (B, L)    L innermost: accumulate into the bag's output row
+  table block (1, D) @ row ids[b, l]   (via scalar prefetch)
+  out   block (1, D) @ row b           (revisited across l - accumulate)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  weights: jnp.ndarray | None = None, *,
+                  interpret: bool = False) -> jnp.ndarray:
+    """table (V, D), ids (B, L) int32, weights (B, L)? -> (B, D) bag sums."""
+    bsz, bag_len = ids.shape
+    v, d = table.shape
+
+    if weights is not None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bsz, bag_len),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda b, l, ids: (b, l)),
+                pl.BlockSpec((1, d), lambda b, l, ids: (ids[b, l], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda b, l, ids: (b, 0)),
+        )
+
+        def kernel(ids_ref, w_ref, row_ref, o_ref):
+            l = pl.program_id(1)
+
+            @pl.when(l == 0)
+            def _init():
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+            o_ref[...] += w_ref[0, 0] * row_ref[...].astype(o_ref.dtype)
+
+        return pl.pallas_call(
+            kernel, grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((bsz, d), table.dtype),
+            interpret=interpret,
+        )(ids, weights, table)
+
+    def kernel(ids_ref, row_ref, o_ref):
+        l = pl.program_id(1)
+
+        @pl.when(l == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += row_ref[...].astype(o_ref.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, bag_len),
+        in_specs=[pl.BlockSpec((1, d), lambda b, l, ids: (ids[b, l], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda b, l, ids: (b, 0)),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, d), table.dtype),
+        interpret=interpret,
+    )(ids, table)

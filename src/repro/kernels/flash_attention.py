@@ -1,0 +1,153 @@
+"""Flash attention for TPU (Pallas): causal / GQA / sliding-window / softcap.
+
+VMEM-blocked online softmax (FlashAttention re-thought for the TPU memory
+hierarchy, not a CUDA port - see DESIGN.md §3):
+
+  grid = (batch, q_heads, q_blocks, kv_blocks)   kv innermost (sequential)
+  q block    (1, 1, block_q, d)    stays resident across the kv loop
+  k/v block  (1, 1, block_kv, d)   streamed HBM->VMEM by the pipeline;
+                                   GQA folds h -> h // group in the index map
+  scratch    acc (block_q, d) f32, m/l (block_q, MIN_LANE) f32 running stats
+
+Block sizes default to 128/256 - lane-dim multiples of 128 so the MXU
+(128x128 systolic array) sees aligned tiles.  Fully-masked kv blocks are
+skipped with @pl.when (the causal/window speedup).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MIN_LANE = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int,
+                  softcap: float | None, block_q: int, block_kv: int,
+                  kv_blocks: int, seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    # block-level predication: skip kv blocks fully above the causal
+    # diagonal or fully outside the sliding window
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window > 0:
+        run = run & (q_start - (k_start + block_kv - 1) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < seq_kv
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bkv)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0, :, :] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q",
+                     "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
+                    softcap: float | None = None, scale: float | None = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False):
+    """q (B, T, H, dh), k/v (B, S, Hkv, dh) -> (B, T, H, dh).
+
+    T and S are padded to block multiples internally; dh should be a
+    multiple of 128 on real TPUs (unchecked in interpret mode).
+    """
+    b, t, h, dh = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    t_pad = (-t) % block_q
+    s_pad = (-s) % block_kv
+    if t_pad:
+        q = jnp.pad(q, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    if s_pad:
+        k = jnp.pad(k, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+
+    # (B, H, T, dh) layout so heads are a grid dim
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    q_blocks = qt.shape[2] // block_q
+    kv_blocks = kt.shape[2] // block_kv
+    grid = (b, h, q_blocks, kv_blocks)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv,
+        kv_blocks=kv_blocks, seq_kv=s)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, dh),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),
+            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+
+    out = jnp.swapaxes(out, 1, 2)
+    return out[:, :t]

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the ground truth the kernels/tests assert against
+(``tests/test_kernels_*``).  These double as the CPU execution path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=-1, softcap=None,
+                        scale=None):
+    """q (B, T, H, dh), k/v (B, S, Hkv, dh) -> (B, T, H, dh). fp32 softmax."""
+    b, t, h, dh = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(float(dh))
+    qg = q.reshape(b, t, hk, g, dh)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(t)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v)
+    return out.reshape(b, t, h, dh)
+
+
+def embedding_bag_ref(table, ids, weights=None):
+    """table (V, D), ids (B, L), weights (B, L) or None -> (B, D) sums."""
+    rows = jnp.take(table, ids, axis=0)  # (B, L, D)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    return jnp.sum(rows, axis=1)
+
+
+def dot_interact_ref(feats):
+    """feats (B, F, D) -> (B, F(F-1)/2) strictly-lower-tri pairwise dots."""
+    z = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    f = feats.shape[-2]
+    iu, ju = jnp.tril_indices(f, k=-1)
+    return z[:, iu, ju]
+
+
+def target_attention_ref(q, keys, mask, w1, b1, w2, b2, w3, b3):
+    """DIN attention pool: q (B, d), keys (B, T, d), mask (B, T);
+    MLP weights w1 (4d, h1), w2 (h1, h2), w3 (h2, 1) -> pooled (B, d)."""
+    qb = jnp.broadcast_to(q[:, None, :], keys.shape)
+    feat = jnp.concatenate([qb, keys, qb - keys, qb * keys], axis=-1)
+    h = jax.nn.sigmoid(feat @ w1 + b1)
+    h = jax.nn.sigmoid(h @ w2 + b2)
+    w = (h @ w3 + b3)[..., 0]  # (B, T)
+    w = w * mask
+    return jnp.einsum("bt,btd->bd", w, keys)
+
+
+def cin_layer_ref(w, x_prev, x0):
+    """w (H_out, Hp*m), x_prev (B, Hp, D), x0 (B, m, D) -> (B, H_out, D)."""
+    b, hp, d = x_prev.shape
+    m = x0.shape[1]
+    z = jnp.einsum("bhd,bmd->bhmd", x_prev, x0).reshape(b, hp * m, d)
+    return jnp.einsum("oc,bcd->bod", w, z)

@@ -1,0 +1,76 @@
+"""DIN target attention (Pallas): fused [q,k,q-k,q*k] -> MLP -> weighted sum.
+
+The jnp composition materializes the (B, T, 4d) feature tensor in HBM;
+here it exists only as a VMEM tile.  The attention MLP weights are tiny
+(4d x h1, h1 x h2, h2 x 1) and ride along replicated per grid step.
+
+  grid = (B / block_b,)
+  q (block_b, d), keys (block_b, T, d), mask (block_b, T) -> out (block_b, d)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ta_kernel(q_ref, k_ref, m_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref,
+               b3_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)  # (bb, d)
+    keys = k_ref[...].astype(jnp.float32)  # (bb, T, d)
+    mask = m_ref[...].astype(jnp.float32)  # (bb, T)
+    qb = jnp.broadcast_to(q[:, None, :], keys.shape)
+    feat = jnp.concatenate([qb, keys, qb - keys, qb * keys], axis=-1)
+    h = jax.nn.sigmoid(
+        jax.lax.dot_general(feat, w1_ref[...].astype(jnp.float32),
+                            (((2,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + b1_ref[...])
+    h = jax.nn.sigmoid(
+        jax.lax.dot_general(h, w2_ref[...].astype(jnp.float32),
+                            (((2,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+        + b2_ref[...])
+    w = (jax.lax.dot_general(h, w3_ref[...].astype(jnp.float32),
+                             (((2,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + b3_ref[...])[..., 0]  # (bb, T)
+    w = w * mask
+    pooled = jnp.einsum("bt,btd->bd", w, keys)
+    o_ref[...] = pooled.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def target_attention(q, keys, mask, w1, b1, w2, b2, w3, b3, *,
+                     block_b: int = 128, interpret: bool = False):
+    """q (B, d), keys (B, T, d), mask (B, T) -> pooled (B, d)."""
+    b, t, d = keys.shape
+    h1, h2 = w1.shape[1], w2.shape[1]
+    pad = (-b) % block_b
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        keys = jnp.pad(keys, ((0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    grid = (q.shape[0] // block_b,)
+
+    out = pl.pallas_call(
+        _ta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, t), lambda i: (i, 0)),
+            pl.BlockSpec((4 * d, h1), lambda i: (0, 0)),
+            pl.BlockSpec((h1,), lambda i: (0,)),
+            pl.BlockSpec((h1, h2), lambda i: (0, 0)),
+            pl.BlockSpec((h2,), lambda i: (0,)),
+            pl.BlockSpec((h2, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q.shape[0], d), keys.dtype),
+        interpret=interpret,
+    )(q, keys, mask, w1, b1, w2, b2, w3, b3)
+    return out[:b]

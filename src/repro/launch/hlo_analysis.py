@@ -1,0 +1,110 @@
+"""Compiled-HLO analysis: cost terms + collective-traffic extraction.
+
+``collective_bytes`` parses the optimized HLO text and sums the RESULT
+sizes of every collective op (all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute, sync or async-start).  cost_analysis()
+does not expose this - parsing the module text is the documented approach
+(brief: ROOFLINE ANALYSIS).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*(?:e\d+m\d+(?:fn)?)?)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind.  Returns
+    {kind: bytes, ..., 'total': bytes, 'counts': {kind: n}}."""
+    out: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        for kind in COLLECTIVES:
+            # match sync and async-start forms; skip -done (double count)
+            token_s = f" {kind}-start("
+            token = f" {kind}("
+            if token not in line and token_s not in line:
+                continue
+            lhs = line.split(f"{kind}-start(" if token_s in line
+                             else f"{kind}(")[0]
+            # result shapes sit between '=' and the op name
+            lhs = lhs.split("=", 1)[-1]
+            for dtype, dims in _SHAPE_RE.findall(lhs):
+                out[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+            break
+    out = dict(out)
+    out["total"] = sum(v for k, v in out.items() if k in COLLECTIVES)
+    out["counts"] = dict(counts)
+    return out
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not ca:
+        return {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed",
+                                           ca.get("bytes_accessed", 0.0))),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    return out
+
+
+# TPU v5e hardware constants (brief: ROOFLINE ANALYSIS)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def roofline_terms(*, flops: float, hbm_bytes: float,
+                   coll_bytes: float, n_chips: int,
+                   flops_is_global: bool = True) -> dict:
+    """The three roofline terms in seconds (see EXPERIMENTS.md §Roofline)."""
+    div = n_chips if flops_is_global else 1
+    t_compute = flops / (div * PEAK_FLOPS_BF16)
+    t_memory = hbm_bytes / (div * HBM_BW)
+    t_coll = coll_bytes / (div * ICI_BW)
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}

@@ -1,0 +1,78 @@
+"""Production mesh definitions.
+
+Axis semantics (DESIGN.md §6):
+  pod   - crosses pod boundaries (DCN-connected); pure DP traffic only
+  data  - in-pod data parallel + FSDP
+  model - tensor / expert / vocab / embedding-row parallel (ICI-local)
+
+``make_production_mesh`` is a FUNCTION (never called at import time) so
+importing this module touches no jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def resolve_spec(spec, mesh):
+    """Drop axis names not present in ``mesh`` from a PartitionSpec.
+
+    Lets one spec tree (written against the multi-pod axis set) serve both
+    the (data, model) and (pod, data, model) meshes.
+    """
+    if spec is None:
+        return None
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def tree_named_shardings(spec_tree, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree (specs resolved)."""
+    is_spec = lambda x: isinstance(x, P) or x is None
+
+    def conv(s):
+        if s is None:
+            return jax.sharding.NamedSharding(mesh, P())
+        return jax.sharding.NamedSharding(mesh, resolve_spec(s, mesh))
+
+    return jax.tree_util.tree_map(conv, spec_tree, is_leaf=is_spec)
+
+
+def device_bytes_estimate(arg_specs, spec_tree, mesh) -> int:
+    """Per-device input bytes from shapes + shardings (backup for
+    backends whose compiled.memory_analysis() is unavailable)."""
+    import numpy as np
+
+    is_spec = lambda x: isinstance(x, P) or x is None
+    specs_flat = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    args_flat = jax.tree_util.tree_leaves(arg_specs)
+    total = 0
+    for arr, spec in zip(args_flat, specs_flat):
+        if not hasattr(arr, "shape"):
+            continue
+        shards = 1
+        spec = resolve_spec(spec, mesh) if spec is not None else P()
+        for entry in (spec or P()):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shards *= mesh.shape[a]
+        size = int(np.prod(arr.shape)) if arr.shape else 1
+        total += size * arr.dtype.itemsize // max(1, shards)
+    return total

@@ -1,0 +1,1 @@
+"""Shared model zoo: pure-pytree init/apply modules."""

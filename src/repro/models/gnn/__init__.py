@@ -1,0 +1,1 @@
+"""GNN models: SchNet (continuous-filter convolutions) + neighbor sampler."""

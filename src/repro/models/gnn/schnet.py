@@ -1,0 +1,149 @@
+"""SchNet (Schuett et al. [arXiv:1706.08566]) - continuous-filter
+convolutional network.
+
+Assigned config: n_interactions=3, d_hidden=64, rbf=300, cutoff=10.
+
+Message passing is edge-parallel: gather source features, modulate with the
+RBF-filter network, ``jax.ops.segment_sum`` into destinations (JAX has no
+sparse SpMM for this - the segment-op path IS the system, per the brief).
+Under a mesh the edge arrays shard over the batch axes and the scatter-add
+reduces partially per shard + all-reduce (GSPMD).
+
+Two task heads (the assigned shapes span both):
+  * graph_reg   - per-graph energy (molecule batches; segment-sum readout),
+  * node_class  - per-node logits (full_graph_sm / ogb_products /
+    minibatch_lg citation-style graphs; SchNet's geometry comes from
+    synthesized positional distances, see data/graphs.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+
+def ssp(x):
+    """Shifted softplus - SchNet's activation."""
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+@dataclass(frozen=True)
+class SchNetConfig:
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    d_feat: int = 0  # >0: project node features; 0: embed atom types
+    n_atom_types: int = 100
+    n_out: int = 1  # 1 for graph_reg; n_classes for node_class
+    task: str = "graph_reg"  # graph_reg | node_class
+    readout_hidden: int = 32
+
+
+def init(key, cfg: SchNetConfig) -> dict:
+    k = jax.random.split(key, 4 + cfg.n_interactions)
+    d = cfg.d_hidden
+    if cfg.d_feat > 0:
+        inp = {"proj": L.dense_init(k[0], cfg.d_feat, d)}
+    else:
+        inp = {"embed": L.embedding_init(k[0], cfg.n_atom_types, d)}
+    blocks = []
+    for i in range(cfg.n_interactions):
+        kk = jax.random.split(k[2 + i], 4)
+        blocks.append({
+            "filter": L.mlp_init(kk[0], [cfg.n_rbf, d, d]),
+            "in_proj": L.dense_init(kk[1], d, d, use_bias=False),
+            "out1": L.dense_init(kk[2], d, d),
+            "out2": L.dense_init(kk[3], d, d),
+        })
+    ko = jax.random.split(k[1], 2)
+    return {
+        **inp,
+        "blocks": blocks,
+        "head1": L.dense_init(ko[0], d, cfg.readout_hidden),
+        "head2": L.dense_init(ko[1], cfg.readout_hidden, cfg.n_out),
+    }
+
+
+def rbf_expand(dist: jnp.ndarray, cfg: SchNetConfig) -> jnp.ndarray:
+    """dist (E,) -> (E, n_rbf) Gaussian radial basis on [0, cutoff]."""
+    mu = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+    gamma = 1.0 / (mu[1] - mu[0]) ** 2
+    return jnp.exp(-gamma * jnp.square(dist[:, None] - mu[None, :]))
+
+
+def cosine_cutoff(dist: jnp.ndarray, cfg: SchNetConfig) -> jnp.ndarray:
+    c = 0.5 * (jnp.cos(jnp.pi * dist / cfg.cutoff) + 1.0)
+    return jnp.where(dist < cfg.cutoff, c, 0.0)
+
+
+def interaction(block, cfg: SchNetConfig, x, src, dst, rbf, cut, edge_mask,
+                n_nodes: int):
+    """One cfconv + atom-wise block. x (N, d); src/dst (E,) int32."""
+    w = L.mlp_apply(block["filter"], rbf, act="none", final_act="none")
+    w = ssp(w) * cut[:, None] * edge_mask[:, None]
+    h = L.dense_apply(block["in_proj"], x)
+    msg = jnp.take(h, src, axis=0) * w  # (E, d) gather + modulate
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+    v = ssp(L.dense_apply(block["out1"], agg))
+    return x + L.dense_apply(block["out2"], v)
+
+
+def forward(params, cfg: SchNetConfig, batch: dict) -> jnp.ndarray:
+    """batch:
+      nodes      - (N,) int32 atom types OR (N, d_feat) float features
+      src, dst   - (E,) int32 edge endpoints
+      dist       - (E,) float edge distances
+      edge_mask  - (E,) 1.0 = real edge (padding support)
+      graph_ids  - (N,) int32 graph membership (graph_reg only)
+      n_graphs   - static int (graph_reg only)
+    Returns (n_graphs, n_out) for graph_reg, (N, n_out) for node_class.
+    """
+    if cfg.d_feat > 0:
+        x = L.dense_apply(params["proj"], batch["nodes"].astype(jnp.float32))
+    else:
+        x = L.embedding_apply(params["embed"], batch["nodes"])
+    n_nodes = x.shape[0]
+    src = constrain(batch["src"], ("pod", "data", "model"))
+    dst = constrain(batch["dst"], ("pod", "data", "model"))
+    dist = constrain(batch["dist"], ("pod", "data", "model"))
+    edge_mask = constrain(batch["edge_mask"], ("pod", "data", "model"))
+    rbf = rbf_expand(dist, cfg)
+    cut = cosine_cutoff(dist, cfg)
+    for block in params["blocks"]:
+        x = interaction(block, cfg, x, src, dst, rbf, cut, edge_mask, n_nodes)
+    h = ssp(L.dense_apply(params["head1"], x))
+    out = L.dense_apply(params["head2"], h)  # (N, n_out)
+    if cfg.task == "graph_reg":
+        return jax.ops.segment_sum(out, batch["graph_ids"],
+                                   num_segments=batch["n_graphs"])
+    return out
+
+
+def loss_fn(params, cfg: SchNetConfig, batch: dict) -> jnp.ndarray:
+    out = forward(params, cfg, batch)
+    if cfg.task == "graph_reg":
+        return jnp.mean(jnp.square(out[..., 0] - batch["target"]))
+    logits = out.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, batch["target"][:, None], axis=-1)[:, 0]
+    nll = (lse - picked) * batch["node_mask"]
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(batch["node_mask"]), 1.0)
+
+
+def flops_per_edge(cfg: SchNetConfig) -> float:
+    d, r = cfg.d_hidden, cfg.n_rbf
+    filt = 2.0 * (r * d + d * d)
+    return cfg.n_interactions * (filt + 3.0 * d)
+
+
+def flops_per_node(cfg: SchNetConfig) -> float:
+    d = cfg.d_hidden
+    inp = 2.0 * (cfg.d_feat or 1) * d
+    block = 3 * 2.0 * d * d
+    head = 2.0 * (d * cfg.readout_hidden + cfg.readout_hidden * cfg.n_out)
+    return inp + cfg.n_interactions * block + head

@@ -1,0 +1,181 @@
+"""Minimal pure-pytree neural-net substrate (no flax/haiku dependency).
+
+Every layer is a pair of functions:
+  ``<name>_init(key, ...) -> params``   (params = nested dict of jnp arrays)
+  ``<name>_apply(params, x, ...) -> y`` (pure, jit/vmap/pjit friendly)
+
+Parameters are plain dicts so they shard transparently under pjit and
+serialize trivially in the checkpoint layer.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def lecun_normal(key, shape, dtype=jnp.float32, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def glorot_uniform(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return std * jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, *, use_bias: bool = True,
+               init: Callable = lecun_normal, dtype=jnp.float32) -> Params:
+    p = {"w": init(key, (d_in, d_out), dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+_ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "softplus": jax.nn.softplus,
+    "dice": None,  # resolved in din.py (needs running stats); placeholder
+    "prelu": None,  # handled explicitly with a slope param
+    "none": lambda x: x,
+    None: lambda x: x,
+}
+
+
+def activation(name):
+    fn = _ACTIVATIONS.get(name, None)
+    if fn is None and name not in (None, "none"):
+        raise ValueError(f"unknown activation {name!r}")
+    return fn
+
+
+def mlp_init(key, dims: Sequence[int], *, use_bias: bool = True,
+             dtype=jnp.float32) -> Params:
+    """dims = [d_in, h1, h2, ..., d_out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        "layers": [
+            dense_init(k, dims[i], dims[i + 1], use_bias=use_bias, dtype=dtype)
+            for i, k in enumerate(keys)
+        ]
+    }
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, *, act: str = "relu",
+              final_act: str = "none") -> jnp.ndarray:
+    n = len(params["layers"])
+    act_fn, final_fn = activation(act), activation(final_act)
+    for i, layer in enumerate(params["layers"]):
+        x = dense_apply(layer, x)
+        x = final_fn(x) if i == n - 1 else act_fn(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(params: Params, x: jnp.ndarray, *, eps: float = 1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * params["scale"] + params["bias"]
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(params: Params, x: jnp.ndarray, *, eps: float = 1e-6,
+                  zero_centered: bool = False):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if zero_centered:  # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (y * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab: int, dim: int, *, std: float = 0.02,
+                   dtype=jnp.float32) -> Params:
+    return {"table": std * jax.random.normal(key, (vocab, dim), dtype)}
+
+
+def embedding_apply(params: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# PReLU (used by DIN)
+# ---------------------------------------------------------------------------
+
+
+def prelu_init(d: int, dtype=jnp.float32) -> Params:
+    return {"alpha": 0.25 * jnp.ones((d,), dtype)}
+
+
+def prelu_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(x >= 0, x, params["alpha"] * x)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(p.astype(jnp.float32)))
+              for p in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def param_bytes(params) -> int:
+    return sum(int(p.size * p.dtype.itemsize)
+               for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,4 @@
+"""RecSys model zoo: paper cascade models + assigned architectures."""
+from repro.models.recsys import (bst, dien, din, dlrm, dssm, xdeepfm, ydnn)
+
+__all__ = ["bst", "dien", "din", "dlrm", "dssm", "xdeepfm", "ydnn"]

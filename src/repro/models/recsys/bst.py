@@ -1,0 +1,178 @@
+"""BST - Behavior Sequence Transformer (Chen et al. [arXiv:1905.06874]).
+
+Assigned config: embed_dim=32, seq_len=20, n_blocks=1, n_heads=8,
+mlp=1024-512-256, interaction=transformer-seq.
+
+The behavior sequence (19 history items + the target item appended, each
+with a learned position embedding) runs through one post-LN transformer
+block; the flattened sequence output concats with profile features into
+the 1024-512-256 MLP head (LeakyReLU per the paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flops import attention_flops, dense_flops, mlp_flops
+from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class BSTConfig:
+    item_vocab: int = 4_000_000
+    cat_vocab: int = 100_000
+    user_vocab: int = 1_000_000
+    n_user_fields: int = 4
+    embed_dim: int = 32
+    seq_len: int = 20  # includes the target item slot
+    n_blocks: int = 1
+    n_heads: int = 8
+    d_ff_mult: int = 4
+    mlp_hidden: tuple = (1024, 512, 256)
+
+    @property
+    def d_item(self) -> int:  # id ++ cat
+        return 2 * self.embed_dim
+
+    @property
+    def d_head(self) -> int:
+        return self.d_item // self.n_heads
+
+
+def _block_init(key, cfg: BSTConfig) -> dict:
+    d = cfg.d_item
+    k = jax.random.split(key, 6)
+    return {
+        "wq": L.glorot_uniform(k[0], (d, d)),
+        "wk": L.glorot_uniform(k[1], (d, d)),
+        "wv": L.glorot_uniform(k[2], (d, d)),
+        "wo": L.glorot_uniform(k[3], (d, d)),
+        "ln1": L.layernorm_init(d),
+        "ln2": L.layernorm_init(d),
+        "ffn": L.mlp_init(k[4], [d, cfg.d_ff_mult * d, d]),
+    }
+
+
+def init(key, cfg: BSTConfig) -> dict:
+    k = jax.random.split(key, 6 + cfg.n_blocks)
+    d_mlp_in = cfg.n_user_fields * cfg.embed_dim + cfg.seq_len * cfg.d_item
+    return {
+        "item_emb": L.embedding_init(k[0], cfg.item_vocab, cfg.embed_dim),
+        "cat_emb": L.embedding_init(k[1], cfg.cat_vocab, cfg.embed_dim),
+        "user_emb": L.embedding_init(k[2], cfg.user_vocab, cfg.embed_dim),
+        "pos_emb": L.normal_init(k[3], (cfg.seq_len, cfg.d_item)),
+        "blocks": [_block_init(k[5 + i], cfg) for i in range(cfg.n_blocks)],
+        "mlp": L.mlp_init(k[4], [d_mlp_in, *cfg.mlp_hidden, 1]),
+    }
+
+
+def _mha(p, cfg: BSTConfig, x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """x (..., T, d), mask (..., T)."""
+    t, d, h, dh = x.shape[-2], cfg.d_item, cfg.n_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(*x.shape[:-1], h, dh)
+    k = (x @ p["wk"]).reshape(*x.shape[:-1], h, dh)
+    v = (x @ p["wv"]).reshape(*x.shape[:-1], h, dh)
+    s = jnp.einsum("...qhd,...khd->...hqk", q, k) / jnp.sqrt(float(dh))
+    s = jnp.where(mask[..., None, None, :] > 0, s, -1e9)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("...hqk,...khd->...qhd", a, v).reshape(*x.shape[:-1], d)
+    return o @ p["wo"]
+
+
+def _block(p, cfg: BSTConfig, x, mask):
+    # post-LN, per the BST paper
+    x = L.layernorm_apply(p["ln1"], x + _mha(p, cfg, x, mask))
+    leaky = lambda z: jnp.where(z >= 0, z, 0.01 * z)
+    h = L.dense_apply(p["ffn"]["layers"][0], x)
+    h = leaky(h)
+    h = L.dense_apply(p["ffn"]["layers"][1], h)
+    return L.layernorm_apply(p["ln2"], x + h)
+
+
+def embed_seq(params, ids, cats):
+    return jnp.concatenate(
+        [L.embedding_apply(params["item_emb"], ids),
+         L.embedding_apply(params["cat_emb"], cats)], axis=-1)
+
+
+def forward(params, cfg: BSTConfig, batch: dict) -> jnp.ndarray:
+    """batch: hist_ids/hist_cats/hist_mask (B, T-1), item_id/item_cat (B,),
+    user_fields (B, F) -> (B,) logits."""
+    hist = embed_seq(params, batch["hist_ids"], batch["hist_cats"])
+    target = embed_seq(params, batch["item_id"], batch["item_cat"])
+    x = jnp.concatenate([hist, target[..., None, :]], axis=-2)  # (B,T,d)
+    mask = jnp.concatenate(
+        [batch["hist_mask"],
+         jnp.ones((*batch["hist_mask"].shape[:-1], 1),
+                  batch["hist_mask"].dtype)], axis=-1)
+    x = x + params["pos_emb"]
+    for blk in params["blocks"]:
+        x = _block(blk, cfg, x, mask)
+    x = x * mask[..., None]
+    seq_flat = x.reshape(*x.shape[:-2], -1)
+    prof = L.embedding_apply(params["user_emb"], batch["user_fields"])
+    prof = prof.reshape(*prof.shape[:-2], -1)
+    z = jnp.concatenate([prof, seq_flat], axis=-1)
+    leaky = lambda v: jnp.where(v >= 0, v, 0.01 * v)
+    for i, layer in enumerate(params["mlp"]["layers"]):
+        z = L.dense_apply(layer, z)
+        if i < len(params["mlp"]["layers"]) - 1:
+            z = leaky(z)
+    return z[..., 0]
+
+
+def score(params, cfg: BSTConfig, batch: dict, cand_ids, cand_cats):
+    """(B, N) candidates -> (B, N) scores (vmap over candidates)."""
+    def per_cand(cid, ccat):
+        b = dict(batch, item_id=cid, item_cat=ccat)
+        return forward(params, cfg, b)
+    return jax.vmap(per_cand, in_axes=(1, 1), out_axes=1)(cand_ids, cand_cats)
+
+
+def loss_fn(params, cfg: BSTConfig, batch: dict) -> jnp.ndarray:
+    logits = forward(params, cfg, batch)
+    y = batch["label"].astype(logits.dtype)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def flops_per_example(cfg: BSTConfig) -> float:
+    d, t = cfg.d_item, cfg.seq_len
+    proj = 4 * dense_flops(d, d, t)
+    attn = attention_flops(t, t, cfg.n_heads, cfg.d_head)
+    ffn = mlp_flops([d, cfg.d_ff_mult * d, d], t)
+    block = (proj + attn + ffn) * cfg.n_blocks
+    d_mlp_in = cfg.n_user_fields * cfg.embed_dim + t * d
+    head = mlp_flops([d_mlp_in, *cfg.mlp_hidden, 1])
+    return block + head
+
+
+def score_candidates_chunked(params, cfg: BSTConfig, batch: dict,
+                             cand_ids: jnp.ndarray, cand_cats: jnp.ndarray,
+                             *, n_chunks: int = 16) -> jnp.ndarray:
+    """retrieval_cand path: ONE request vs N candidates, python-loop
+    chunked (exact HLO flop counts; see dryrun notes)."""
+    n = cand_ids.shape[0]
+    assert n % n_chunks == 0
+
+    def one_chunk(cid, ccat):
+        c = cid.shape[0]
+        b = {
+            "hist_ids": jnp.broadcast_to(batch["hist_ids"][0][None],
+                                         (c, batch["hist_ids"].shape[1])),
+            "hist_cats": jnp.broadcast_to(batch["hist_cats"][0][None],
+                                          (c, batch["hist_cats"].shape[1])),
+            "hist_mask": jnp.broadcast_to(batch["hist_mask"][0][None],
+                                          (c, batch["hist_mask"].shape[1])),
+            "user_fields": jnp.broadcast_to(batch["user_fields"][0][None],
+                                            (c, batch["user_fields"].shape[1])),
+            "item_id": cid, "item_cat": ccat,
+        }
+        return forward(params, cfg, b)
+
+    c = n // n_chunks
+    outs = [one_chunk(cand_ids[i * c:(i + 1) * c],
+                      cand_cats[i * c:(i + 1) * c]) for i in range(n_chunks)]
+    return jnp.concatenate(outs)

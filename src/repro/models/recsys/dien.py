@@ -1,0 +1,152 @@
+"""DIEN - Deep Interest Evolution Network (Zhou et al., AAAI'19).
+
+Paper cascade's second ranking model (Table 1: 7098K FLOPs, AUC 0.641 -
+deliberately ~DIN FLOPs so the multi-model ablation (Table 3) is about
+per-user fit, not scale).
+
+Interest extractor: GRU over the behavior sequence (lax.scan - a true
+recurrence; see DESIGN.md §3 on MXU fit).  Interest evolution: AUGRU
+(attention-gated update) conditioned on the target item.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flops import gru_flops, mlp_flops
+from repro.models import layers as L
+from repro.models.recsys.din import embed_items  # shared embedding layout
+
+
+@dataclass(frozen=True)
+class DIENConfig:
+    item_vocab: int = 200_000
+    cat_vocab: int = 5_000
+    user_vocab: int = 200_000
+    n_user_fields: int = 2
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_hidden: tuple = (80, 40)
+    mlp_hidden: tuple = (200, 80)
+
+    @property
+    def d_item(self) -> int:
+        return 2 * self.embed_dim
+
+
+def _gru_init(key, d_in, d_h):
+    k = jax.random.split(key, 3)
+    mk = lambda kk: {"wx": L.glorot_uniform(kk, (d_in, d_h)),
+                     "wh": L.glorot_uniform(jax.random.fold_in(kk, 1), (d_h, d_h)),
+                     "b": jnp.zeros((d_h,))}
+    return {"r": mk(k[0]), "z": mk(k[1]), "h": mk(k[2])}
+
+
+def _gru_cell(p, h, x, update_gate_scale=None):
+    r = jax.nn.sigmoid(x @ p["r"]["wx"] + h @ p["r"]["wh"] + p["r"]["b"])
+    z = jax.nn.sigmoid(x @ p["z"]["wx"] + h @ p["z"]["wh"] + p["z"]["b"])
+    hh = jnp.tanh(x @ p["h"]["wx"] + (r * h) @ p["h"]["wh"] + p["h"]["b"])
+    if update_gate_scale is not None:  # AUGRU: a_t scales the update gate
+        z = z * update_gate_scale[..., None]
+    return (1.0 - z) * h + z * hh
+
+
+def init(key, cfg: DIENConfig) -> dict:
+    k = jax.random.split(key, 8)
+    d = cfg.d_item
+    d_mlp_in = cfg.n_user_fields * cfg.embed_dim + 2 * d
+    return {
+        "item_emb": L.embedding_init(k[0], cfg.item_vocab, cfg.embed_dim),
+        "cat_emb": L.embedding_init(k[1], cfg.cat_vocab, cfg.embed_dim),
+        "user_emb": L.embedding_init(k[2], cfg.user_vocab, cfg.embed_dim),
+        "gru1": _gru_init(k[3], d, d),
+        "augru": _gru_init(k[4], d, d),
+        "attn": L.mlp_init(k[5], [4 * d, *cfg.attn_hidden, 1]),
+        "mlp": L.mlp_init(k[6], [d_mlp_in, *cfg.mlp_hidden, 1]),
+    }
+
+
+def _run_gru(p, xs, mask):
+    """xs (B, T, d), mask (B, T) -> states (B, T, d)."""
+    def step(h, inp):
+        x_t, m_t = inp
+        h_new = _gru_cell(p, h, x_t)
+        h = jnp.where(m_t[..., None] > 0, h_new, h)
+        return h, h
+    h0 = jnp.zeros(xs.shape[:1] + xs.shape[2:], xs.dtype)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(xs, 1, 0),
+                                    jnp.moveaxis(mask, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def _run_augru(p, xs, mask, attn_w):
+    """AUGRU: attention scalar a_t gates the update (B, T)."""
+    def step(h, inp):
+        x_t, m_t, a_t = inp
+        h_new = _gru_cell(p, h, x_t, update_gate_scale=a_t)
+        h = jnp.where(m_t[..., None] > 0, h_new, h)
+        return h, None
+    h0 = jnp.zeros(xs.shape[:1] + xs.shape[2:], xs.dtype)
+    h, _ = jax.lax.scan(step, h0, (jnp.moveaxis(xs, 1, 0),
+                                   jnp.moveaxis(mask, 1, 0),
+                                   jnp.moveaxis(attn_w, 1, 0)))
+    return h  # final state (B, d)
+
+
+def _attention_weights(params, query, states, mask):
+    q = jnp.broadcast_to(query[..., None, :], states.shape)
+    feat = jnp.concatenate([q, states, q - states, q * states], axis=-1)
+    logits = L.mlp_apply(params["attn"], feat, act="sigmoid")[..., 0]
+    logits = jnp.where(mask > 0, logits, -1e9)
+    return jax.nn.softmax(logits, axis=-1) * (mask.sum(-1, keepdims=True) > 0)
+
+
+def forward(params, cfg: DIENConfig, batch: dict) -> jnp.ndarray:
+    """Pointwise CTR logit; same batch schema as DIN."""
+    xs = embed_items(params, batch["hist_ids"], batch["hist_cats"])
+    mask = batch["hist_mask"]
+    states = _run_gru(params["gru1"], xs, mask)  # interest extractor
+    q = embed_items(params, batch["item_id"], batch["item_cat"])
+    a = _attention_weights(params, q, states, mask)
+    final = _run_augru(params["augru"], states, mask, a)  # evolution
+    prof = L.embedding_apply(params["user_emb"], batch["user_fields"])
+    prof = prof.reshape(*prof.shape[:-2], -1)
+    x = jnp.concatenate([prof, final, q], axis=-1)
+    return L.mlp_apply(params["mlp"], x, act="relu")[..., 0]
+
+
+def score(params, cfg: DIENConfig, batch: dict, cand_ids, cand_cats):
+    """(B, N) candidates. GRU1 runs once per user; AUGRU per candidate."""
+    xs = embed_items(params, batch["hist_ids"], batch["hist_cats"])
+    mask = batch["hist_mask"]
+    states = _run_gru(params["gru1"], xs, mask)  # (B,T,d)
+    prof = L.embedding_apply(params["user_emb"], batch["user_fields"])
+    prof = prof.reshape(*prof.shape[:-2], -1)
+
+    def per_cand(cid, ccat):
+        q = embed_items(params, cid, ccat)  # (B,d)
+        a = _attention_weights(params, q, states, mask)
+        final = _run_augru(params["augru"], states, mask, a)
+        x = jnp.concatenate([prof, final, q], axis=-1)
+        return L.mlp_apply(params["mlp"], x, act="relu")[..., 0]
+
+    return jax.vmap(per_cand, in_axes=(1, 1), out_axes=1)(cand_ids, cand_cats)
+
+
+def loss_fn(params, cfg: DIENConfig, batch: dict) -> jnp.ndarray:
+    logits = forward(params, cfg, batch)
+    y = batch["label"].astype(logits.dtype)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def flops_per_item(cfg: DIENConfig) -> float:
+    d = cfg.d_item
+    gru1 = gru_flops(cfg.seq_len, d, d)  # amortizable but paper bills per item
+    attn = cfg.seq_len * (mlp_flops([4 * d, *cfg.attn_hidden, 1]) + 4 * d)
+    augru = gru_flops(cfg.seq_len, d, d)
+    d_mlp_in = cfg.n_user_fields * cfg.embed_dim + 2 * d
+    head = mlp_flops([d_mlp_in, *cfg.mlp_hidden, 1])
+    return gru1 + attn + augru + head

@@ -1,0 +1,155 @@
+"""DIN - Deep Interest Network (Zhou et al., KDD'18).
+
+Assigned config [arXiv:1706.06978]: embed_dim=18, seq_len=100,
+attn_mlp=80-40, mlp=200-80, interaction=target-attn.
+
+Also the paper cascade's ranking model (Table 1: 7020K FLOPs, AUC 0.639).
+
+Target attention: for target item q and history key k_t the score is
+MLP([q, k_t, q-k_t, q*k_t]) -> scalar; weighted sum WITHOUT softmax
+normalization (faithful to the DIN paper: attention intensities are kept
+unnormalized to preserve interest strength).  Activation: PReLU (Dice's
+batch statistics are jit-unfriendly; noted in DESIGN.md).
+
+The fused Pallas version of the attention pool is
+``repro.kernels.target_attention``; this module is its jnp oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flops import dense_flops, mlp_flops
+from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class DINConfig:
+    item_vocab: int = 200_000
+    cat_vocab: int = 5_000
+    user_vocab: int = 200_000
+    n_user_fields: int = 2
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_hidden: tuple = (80, 40)
+    mlp_hidden: tuple = (200, 80)
+
+    @property
+    def d_item(self) -> int:  # id-emb ++ cat-emb
+        return 2 * self.embed_dim
+
+
+def init(key, cfg: DINConfig) -> dict:
+    k = jax.random.split(key, 7)
+    d = cfg.d_item
+    d_mlp_in = cfg.n_user_fields * cfg.embed_dim + 2 * d  # profile ++ pool ++ target
+    return {
+        "item_emb": L.embedding_init(k[0], cfg.item_vocab, cfg.embed_dim),
+        "cat_emb": L.embedding_init(k[1], cfg.cat_vocab, cfg.embed_dim),
+        "user_emb": L.embedding_init(k[2], cfg.user_vocab, cfg.embed_dim),
+        "attn": L.mlp_init(k[3], [4 * d, *cfg.attn_hidden, 1]),
+        "mlp": L.mlp_init(k[4], [d_mlp_in, *cfg.mlp_hidden, 1]),
+        "prelu1": L.prelu_init(cfg.mlp_hidden[0]),
+        "prelu2": L.prelu_init(cfg.mlp_hidden[1]),
+    }
+
+
+def embed_items(params, ids: jnp.ndarray, cats: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate(
+        [L.embedding_apply(params["item_emb"], ids),
+         L.embedding_apply(params["cat_emb"], cats)], axis=-1)
+
+
+def attention_pool(params, query: jnp.ndarray, keys: jnp.ndarray,
+                   mask: jnp.ndarray) -> jnp.ndarray:
+    """query (..., d), keys (..., T, d), mask (..., T) -> pooled (..., d)."""
+    q = jnp.broadcast_to(query[..., None, :], keys.shape)
+    feat = jnp.concatenate([q, keys, q - keys, q * keys], axis=-1)
+    w = L.mlp_apply(params["attn"], feat, act="sigmoid")[..., 0]  # (...,T)
+    w = w * mask  # padded history contributes nothing
+    return jnp.einsum("...t,...td->...d", w, keys)
+
+
+def _head(params, cfg: DINConfig, profile, pooled, target):
+    x = jnp.concatenate([profile, pooled, target], axis=-1)
+    x = L.dense_apply(params["mlp"]["layers"][0], x)
+    x = L.prelu_apply(params["prelu1"], x)
+    x = L.dense_apply(params["mlp"]["layers"][1], x)
+    x = L.prelu_apply(params["prelu2"], x)
+    return L.dense_apply(params["mlp"]["layers"][2], x)[..., 0]
+
+
+def forward(params, cfg: DINConfig, batch: dict) -> jnp.ndarray:
+    """Pointwise CTR logit. batch: hist_ids/hist_cats/hist_mask (B,T),
+    user_fields (B,F), item_id/item_cat (B,) -> (B,) logits."""
+    keys = embed_items(params, batch["hist_ids"], batch["hist_cats"])
+    q = embed_items(params, batch["item_id"], batch["item_cat"])
+    pooled = attention_pool(params, q, keys, batch["hist_mask"])
+    prof = L.embedding_apply(params["user_emb"], batch["user_fields"])
+    prof = prof.reshape(*prof.shape[:-2], -1)
+    return _head(params, cfg, prof, pooled, q)
+
+
+def score(params, cfg: DINConfig, batch: dict, cand_ids: jnp.ndarray,
+          cand_cats: jnp.ndarray) -> jnp.ndarray:
+    """Rank N candidates per request: cand_ids/cand_cats (B, N) -> (B, N)."""
+    keys = embed_items(params, batch["hist_ids"], batch["hist_cats"])  # (B,T,d)
+    q = embed_items(params, cand_ids, cand_cats)  # (B,N,d)
+    keys_b = jnp.broadcast_to(keys[..., None, :, :],
+                              (*q.shape[:-1], keys.shape[-2], keys.shape[-1]))
+    mask_b = jnp.broadcast_to(batch["hist_mask"][..., None, :],
+                              (*q.shape[:-1], keys.shape[-2]))
+    pooled = attention_pool(params, q, keys_b, mask_b)
+    prof = L.embedding_apply(params["user_emb"], batch["user_fields"])
+    prof = prof.reshape(*prof.shape[:-2], -1)
+    prof = jnp.broadcast_to(prof[..., None, :], (*q.shape[:-1], prof.shape[-1]))
+    return _head(params, cfg, prof, pooled, q)
+
+
+def loss_fn(params, cfg: DINConfig, batch: dict) -> jnp.ndarray:
+    logits = forward(params, cfg, batch)
+    y = batch["label"].astype(logits.dtype)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def flops_per_item(cfg: DINConfig) -> float:
+    """Score one candidate for one user (paper Table 1 grain)."""
+    d = cfg.d_item
+    attn = cfg.seq_len * (mlp_flops([4 * d, *cfg.attn_hidden, 1]) + 4 * d)
+    pool = dense_flops(cfg.seq_len, 1, use_bias=False) * d
+    d_mlp_in = cfg.n_user_fields * cfg.embed_dim + 2 * d
+    head = mlp_flops([d_mlp_in, *cfg.mlp_hidden, 1])
+    return attn + pool + head
+
+
+def score_candidates_chunked(params, cfg: DINConfig, batch: dict,
+                             cand_ids: jnp.ndarray, cand_cats: jnp.ndarray,
+                             *, n_chunks: int = 16) -> jnp.ndarray:
+    """retrieval_cand path: ONE request vs huge candidate sets.
+
+    cand_ids/cand_cats (N,) -> (N,) scores.  Chunked with a PYTHON loop so
+    the (chunk, T, 4d) attention feature tensor stays bounded AND the HLO
+    flop count stays exact (while-loops undercount - see dryrun notes);
+    candidates are expected sharded over the batch axes by the caller."""
+    n = cand_ids.shape[0]
+    assert n % n_chunks == 0, "candidate count must divide n_chunks"
+    keys = embed_items(params, batch["hist_ids"], batch["hist_cats"])  # (1,T,d)
+    prof = L.embedding_apply(params["user_emb"], batch["user_fields"])
+    prof = prof.reshape(*prof.shape[:-2], -1)  # (1, F*D)
+
+    def one_chunk(cid, ccat):
+        q = embed_items(params, cid, ccat)  # (C, d)
+        keys_b = jnp.broadcast_to(keys[0][None], (q.shape[0], *keys.shape[1:]))
+        mask_b = jnp.broadcast_to(batch["hist_mask"][0][None],
+                                  (q.shape[0], keys.shape[1]))
+        pooled = attention_pool(params, q, keys_b, mask_b)
+        prof_b = jnp.broadcast_to(prof[0][None], (q.shape[0], prof.shape[-1]))
+        return _head(params, cfg, prof_b, pooled, q)
+
+    c = n // n_chunks
+    outs = [one_chunk(cand_ids[i * c:(i + 1) * c],
+                      cand_cats[i * c:(i + 1) * c]) for i in range(n_chunks)]
+    return jnp.concatenate(outs)

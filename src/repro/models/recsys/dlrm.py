@@ -1,0 +1,148 @@
+"""DLRM-RM2 (Naumov et al. [arXiv:1906.00091]; RM2 sizing from the
+DeepRecSys/accelerator literature).
+
+Assigned config: n_dense=13, n_sparse=26, embed_dim=64,
+bot_mlp=13-512-256-64, top_mlp=512-512-256-1, interaction=dot.
+
+The `512` leading the top MLP is its input width: pairwise dots among the
+27 feature vectors (26 sparse + bottom output) give 27*26/2 = 351 terms,
+concat the 64-dim bottom output = 415, zero-padded to 512 (documented in
+DESIGN.md).  Embedding tables are the memory + collective hot path; the
+sharded lookup lives in ``repro.models.embedding``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flops import dense_flops, mlp_flops
+from repro.models import layers as L
+from repro.models.embedding import (sharded_embedding_apply,
+                                    sharded_embedding_apply_2d)
+
+# Criteo-like vocabulary sizes for the 26 sparse fields (sum ~88M rows).
+CRITEO_VOCABS = (
+    10_000_000, 39_060, 17_295, 7_424, 20_265, 3, 7_122, 1_543, 63,
+    5_000_000, 3_067_956, 405_282, 10, 2_209, 11_938, 155, 4, 976, 14,
+    10_000_000, 9_000_000, 40_000_000, 452_104, 12_606, 104, 35,
+)
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    vocab_sizes: tuple = CRITEO_VOCABS
+    embed_dim: int = 64
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 256, 1)
+    top_pad: int = 512  # interaction output padded to this width
+    stack_tables: bool = True  # one (sum V, D) table: single sharded lookup
+    lookup_dtype: str = "bfloat16"  # wire dtype of the sharded lookup/grads
+    table_dtype: str = "bfloat16"  # storage dtype (halves HBM + grad wire)
+    shard_2d: bool = True  # unique row ownership over (model x data)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def d_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2 + self.bot_mlp[-1]
+
+
+def init(key, cfg: DLRMConfig, *, pad_vocab_to: int = 1) -> dict:
+    k = jax.random.split(key, 3)
+    total_rows = sum(cfg.vocab_sizes)
+    pad = (-total_rows) % pad_vocab_to
+    table = L.normal_init(k[0], (total_rows + pad, cfg.embed_dim), std=0.01,
+                          dtype=jnp.dtype(cfg.table_dtype))
+    return {
+        "tables": {"stacked": table},
+        "bot": L.mlp_init(k[1], [cfg.n_dense, *cfg.bot_mlp]),
+        "top": L.mlp_init(k[2], [cfg.top_pad, *cfg.top_mlp]),
+    }
+
+
+def table_offsets(cfg: DLRMConfig) -> jnp.ndarray:
+    """Row offset of each field's sub-table inside the stacked table."""
+    import numpy as np
+    return jnp.asarray(np.concatenate([[0], np.cumsum(cfg.vocab_sizes)[:-1]]),
+                       jnp.int32)
+
+
+def lookup(params, cfg: DLRMConfig, sparse_ids: jnp.ndarray,
+           mesh=None) -> jnp.ndarray:
+    """sparse_ids (B, 26) per-field ids -> (B, 26, D).
+
+    With a mesh: ONE row-sharded lookup + ONE psum for all 26 fields
+    (the stacked-table trick - see EXPERIMENTS.md §Perf)."""
+    flat = sparse_ids + table_offsets(cfg)[None, :]
+    table = params["tables"]["stacked"]
+    dt = jnp.dtype(cfg.lookup_dtype)
+    if mesh is None:
+        return jnp.take(table, flat, axis=0).astype(dt)
+    if cfg.shard_2d and "data" in mesh.axis_names:
+        # TorchRec-style unique row ownership: grads never cross the wire
+        out = sharded_embedding_apply_2d(
+            table, flat.reshape(-1), mesh,
+            axes=("model", "pod", "data"), out_dtype=dt)
+    else:
+        out = sharded_embedding_apply(table, flat.reshape(-1), mesh,
+                                      axis="model", batch_axes=("data",),
+                                      out_dtype=dt)
+    return out.reshape(*sparse_ids.shape, cfg.embed_dim)
+
+
+def dot_interact(feats: jnp.ndarray) -> jnp.ndarray:
+    """feats (B, F, D) -> strictly-lower-triangle pairwise dots (B, F(F-1)/2).
+
+    Oracle for ``repro.kernels.dot_interact``."""
+    z = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    f = feats.shape[-2]
+    iu, ju = jnp.tril_indices(f, k=-1)
+    return z[..., iu, ju]
+
+
+def forward(params, cfg: DLRMConfig, batch: dict, mesh=None) -> jnp.ndarray:
+    """batch: dense (B, 13) float, sparse (B, 26) int32 -> (B,) logits."""
+    x = L.mlp_apply(params["bot"], batch["dense"], act="relu",
+                    final_act="relu")  # (B, 64)
+    emb = lookup(params, cfg, batch["sparse"], mesh)  # (B, 26, D)
+    feats = jnp.concatenate([x[:, None, :].astype(emb.dtype), emb], axis=1)
+    inter = dot_interact(feats).astype(x.dtype)  # (B, 351) back to fp32
+    z = jnp.concatenate([inter, x], axis=-1)  # (B, 415)
+    pad = cfg.top_pad - z.shape[-1]
+    if pad < 0:
+        raise ValueError("top_pad smaller than interaction width")
+    z = jnp.pad(z, ((0, 0), (0, pad)))
+    return L.mlp_apply(params["top"], z, act="relu")[..., 0]
+
+
+def loss_fn(params, cfg: DLRMConfig, batch: dict, mesh=None) -> jnp.ndarray:
+    logits = forward(params, cfg, batch, mesh)
+    y = batch["label"].astype(logits.dtype)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def retrieval_forward(params, cfg: DLRMConfig, user_batch: dict,
+                      cand_sparse: jnp.ndarray, mesh=None) -> jnp.ndarray:
+    """retrieval_cand cell: one request (dense (1,13), sparse (1,26)) scored
+    against N candidate item-side fields cand_sparse (N, n_item_fields=4):
+    the last 4 sparse fields are item-side and swapped per candidate."""
+    n = cand_sparse.shape[0]
+    dense = jnp.broadcast_to(user_batch["dense"], (n, cfg.n_dense))
+    user_sp = jnp.broadcast_to(user_batch["sparse"], (n, cfg.n_sparse))
+    sparse = user_sp.at[:, -cand_sparse.shape[1]:].set(cand_sparse)
+    return forward(params, cfg, {"dense": dense, "sparse": sparse}, mesh)
+
+
+def flops_per_example(cfg: DLRMConfig) -> float:
+    bot = mlp_flops([cfg.n_dense, *cfg.bot_mlp])
+    f = cfg.n_sparse + 1
+    inter = 2.0 * f * f * cfg.embed_dim
+    top = mlp_flops([cfg.top_pad, *cfg.top_mlp])
+    return bot + inter + top

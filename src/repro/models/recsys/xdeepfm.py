@@ -1,0 +1,155 @@
+"""xDeepFM (Lian et al. [arXiv:1803.05170]).
+
+Assigned config: n_sparse=39, embed_dim=10, cin_layers=200-200-200,
+mlp=400-400, interaction=CIN (Compressed Interaction Network).
+
+CIN layer k:  X^k[b,h,d] = sum_{i,j} W^k[h,i,j] * X^{k-1}[b,i,d] * X^0[b,j,d]
+(vector-wise outer product compressed by a 1x1 "conv").  Sum-pool over d of
+every layer's feature maps -> CIN logit.  Three heads (linear + CIN + DNN)
+sum into the final logit, faithful to the paper.
+
+The fused Pallas CIN layer lives in ``repro.kernels.cin``; ``cin_layer``
+here is its oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flops import mlp_flops
+from repro.models import layers as L
+from repro.models.embedding import (sharded_embedding_apply,
+                                    sharded_embedding_apply_2d)
+
+# 39 sparse fields, Criteo-like tails plus extra fields (sum ~93M rows)
+XDEEPFM_VOCABS = (
+    10_000_000, 39_060, 17_295, 7_424, 20_265, 3, 7_122, 1_543, 63,
+    5_000_000, 3_067_956, 405_282, 10, 2_209, 11_938, 155, 4, 976, 14,
+    10_000_000, 9_000_000, 40_000_000, 452_104, 12_606, 104, 35,
+    1_000_000, 500_000, 250_000, 100_000, 50_000, 20_000, 10_000,
+    5_000, 2_000, 1_000, 500, 200, 100,
+)
+
+
+@dataclass(frozen=True)
+class XDeepFMConfig:
+    vocab_sizes: tuple = XDEEPFM_VOCABS
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp_hidden: tuple = (400, 400)
+    table_dtype: str = "bfloat16"  # storage dtype (DLRM §Perf iter 3 port)
+    lookup_dtype: str = "bfloat16"
+    shard_2d: bool = True  # unique row ownership over (model x pod x data)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+
+def init(key, cfg: XDeepFMConfig, *, pad_vocab_to: int = 1) -> dict:
+    k = jax.random.split(key, 4 + len(cfg.cin_layers))
+    total = sum(cfg.vocab_sizes)
+    pad = (-total) % pad_vocab_to
+    m = cfg.n_sparse
+    cin_w = []
+    h_prev = m
+    for i, h in enumerate(cfg.cin_layers):
+        cin_w.append(L.glorot_uniform(k[3 + i], (h, h_prev * m)))
+        h_prev = h
+    dt = jnp.dtype(cfg.table_dtype)
+    return {
+        "tables": {"stacked": L.normal_init(k[0], (total + pad, cfg.embed_dim),
+                                            std=0.01, dtype=dt)},
+        "linear": L.normal_init(k[1], (total + pad, 1), std=0.01, dtype=dt),
+        "cin": cin_w,
+        "cin_out": L.dense_init(k[2], sum(cfg.cin_layers), 1),
+        "dnn": L.mlp_init(jax.random.fold_in(k[2], 7),
+                          [m * cfg.embed_dim, *cfg.mlp_hidden, 1]),
+    }
+
+
+def table_offsets(cfg: XDeepFMConfig) -> jnp.ndarray:
+    import numpy as np
+    return jnp.asarray(np.concatenate([[0], np.cumsum(cfg.vocab_sizes)[:-1]]),
+                       jnp.int32)
+
+
+def cin_layer(w: jnp.ndarray, x_prev: jnp.ndarray,
+              x0: jnp.ndarray) -> jnp.ndarray:
+    """w (H_out, H_prev*m), x_prev (B, H_prev, D), x0 (B, m, D) -> (B, H_out, D).
+
+    Oracle for ``repro.kernels.cin``."""
+    b, hp, d = x_prev.shape
+    m = x0.shape[1]
+    z = jnp.einsum("bhd,bmd->bhmd", x_prev, x0).reshape(b, hp * m, d)
+    return jnp.einsum("oc,bcd->bod", w, z)
+
+
+def forward(params, cfg: XDeepFMConfig, batch: dict, mesh=None) -> jnp.ndarray:
+    """batch: sparse (B, 39) int32 -> (B,) logits."""
+    flat = batch["sparse"] + table_offsets(cfg)[None, :]
+    table = params["tables"]["stacked"]
+    dt = jnp.dtype(cfg.lookup_dtype)
+    if mesh is None:
+        x0 = jnp.take(table, flat, axis=0).astype(dt)  # (B, m, D)
+        lin = jnp.take(params["linear"], flat, axis=0)[..., 0].astype(dt)
+    elif cfg.shard_2d and "data" in mesh.axis_names:
+        axes = ("model", "pod", "data")
+        x0 = sharded_embedding_apply_2d(table, flat.reshape(-1), mesh,
+                                        axes=axes, out_dtype=dt
+                                        ).reshape(*flat.shape, cfg.embed_dim)
+        lin = sharded_embedding_apply_2d(params["linear"], flat.reshape(-1),
+                                         mesh, axes=axes, out_dtype=dt
+                                         ).reshape(*flat.shape)
+    else:
+        x0 = sharded_embedding_apply(table, flat.reshape(-1), mesh,
+                                     axis="model", batch_axes=("data",),
+                                     out_dtype=dt
+                                     ).reshape(*flat.shape, cfg.embed_dim)
+        lin = sharded_embedding_apply(params["linear"], flat.reshape(-1), mesh,
+                                      axis="model", batch_axes=("data",),
+                                      out_dtype=dt
+                                      ).reshape(*flat.shape)
+    y_lin = jnp.sum(lin.astype(jnp.float32), axis=-1)
+
+    # CIN head (f32 math on bf16-fetched embeddings)
+    x0 = x0.astype(jnp.float32)
+    x = x0
+    pooled = []
+    for w in params["cin"]:
+        x = cin_layer(w, x, x0)
+        pooled.append(jnp.sum(x, axis=-1))  # (B, H_k)
+    y_cin = L.dense_apply(params["cin_out"],
+                          jnp.concatenate(pooled, axis=-1))[..., 0]
+
+    # DNN head
+    flat_emb = x0.reshape(x0.shape[0], -1)
+    y_dnn = L.mlp_apply(params["dnn"], flat_emb, act="relu")[..., 0]
+    return y_lin + y_cin + y_dnn
+
+
+def loss_fn(params, cfg: XDeepFMConfig, batch: dict, mesh=None) -> jnp.ndarray:
+    logits = forward(params, cfg, batch, mesh)
+    y = batch["label"].astype(logits.dtype)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def retrieval_forward(params, cfg: XDeepFMConfig, user_batch: dict,
+                      cand_sparse: jnp.ndarray, mesh=None) -> jnp.ndarray:
+    n = cand_sparse.shape[0]
+    user_sp = jnp.broadcast_to(user_batch["sparse"], (n, cfg.n_sparse))
+    sparse = user_sp.at[:, -cand_sparse.shape[1]:].set(cand_sparse)
+    return forward(params, cfg, {"sparse": sparse}, mesh)
+
+
+def flops_per_example(cfg: XDeepFMConfig) -> float:
+    m, d = cfg.n_sparse, cfg.embed_dim
+    h_prev, cin = m, 0.0
+    for h in cfg.cin_layers:
+        cin += 2.0 * h * h_prev * m * d + h_prev * m * d  # contraction + outer
+        h_prev = h
+    dnn = mlp_flops([m * d, *cfg.mlp_hidden, 1])
+    return cin + dnn + 2.0 * sum(cfg.cin_layers) + m

@@ -1,0 +1,136 @@
+"""Optimizers + LR schedules (hand-rolled; no optax in this environment).
+
+Each optimizer is an (init, update) pair over arbitrary pytrees:
+    state = init(params)
+    new_params, new_state = update(grads, state, params, lr)
+
+Schedules are step -> lr callables usable inside jit (pure jnp).
+WSD (warmup-stable-decay) is included because minicpm-2b trains with it
+(assigned-arch note in its config).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(grads)]
+    gnorm = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return tree_map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdamState:
+        zeros = tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), zeros,
+                         tree_map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamState, params, lr):
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+        nu = tree_map(lambda v, g: b2 * v + (1 - b2) *
+                      jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        return tree_map(upd, params, mu, nu), AdamState(step, mu, nu)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: dict
+
+
+@dataclass(frozen=True)
+class SGD:
+    momentum: float = 0.9
+    nesterov: bool = False
+
+    def init(self, params) -> SGDState:
+        return SGDState(
+            jnp.zeros((), jnp.int32),
+            tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(self, grads, state: SGDState, params, lr):
+        m = tree_map(lambda b, g: self.momentum * b + g.astype(jnp.float32),
+                     state.momentum, grads)
+        if self.nesterov:
+            eff = tree_map(lambda b, g: self.momentum * b + g.astype(jnp.float32),
+                           m, grads)
+        else:
+            eff = m
+        new = tree_map(lambda p, u: (p.astype(jnp.float32) - lr * u)
+                       .astype(p.dtype), params, eff)
+        return new, SGDState(state.step + 1, m)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.0) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak * step / max(1, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def wsd_schedule(peak: float, warmup: int, stable: int, decay: int,
+                 floor_frac: float = 0.1) -> Callable:
+    """Warmup-Stable-Decay (MiniCPM, [arXiv:2404.06395] §4): linear warmup,
+    long constant plateau, fast exponential-ish decay to floor."""
+
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak * step / max(1, warmup)
+        t = jnp.clip((step - warmup - stable) / max(1, decay), 0.0, 1.0)
+        dec = peak * (floor_frac ** t)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, peak, dec))
+
+    return fn

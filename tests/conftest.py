@@ -1,0 +1,15 @@
+import os
+import sys
+
+# tests and benches see ONE CPU device (the 512-device flag belongs to
+# launch/dryrun.py exclusively, per the brief)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,58 @@
+import numpy as np
+import pytest
+
+from repro.core.action_chain import (ModelInstance, StageSpec, chain_cost,
+                                     generate_action_chains,
+                                     paper_stage_specs)
+
+
+def test_paper_chain_space_size():
+    chains = generate_action_chains(paper_stage_specs())
+    # 1 recall x (1 model x 8 scales) x (2 models x 8 scales) = 128, and the
+    # cascade-feasibility prune removes nothing (all n3 <= all n2)
+    assert chains.n_chains == 128
+    assert chains.n_stages == 3
+
+
+def test_costs_match_closed_form():
+    chains = generate_action_chains(paper_stage_specs())
+    j = 17
+    expected = chain_cost(chains.stages, chains.chain_idx[j])
+    assert chains.costs[j] == pytest.approx(expected)
+    # most expensive chain = max scales + DIEN
+    jmax = chains.most_expensive()
+    assert chains.scale_value[jmax, 1] == 1500
+    assert chains.scale_value[jmax, 2] == 200
+    assert chains.stages[2].models[chains.chain_idx[jmax, 2, 0]].name == "DIEN"
+
+
+def test_cascade_monotonicity_prune():
+    s1 = StageSpec("a", (ModelInstance("m", 1.0),), (10, 20), 2)
+    s2 = StageSpec("b", (ModelInstance("m", 1.0),), (5, 15, 30), 2)
+    chains = generate_action_chains([s1, s2])
+    for j in range(chains.n_chains):
+        n1, n2 = chains.scale_value[j]
+        assert n2 <= n1  # downstream never ranks more than upstream kept
+
+
+def test_multi_hot_monotone():
+    st = paper_stage_specs()[1]
+    prev = -1
+    for si in range(st.n_scales):
+        ones = int(st.multi_hot(si).sum())
+        assert ones >= prev  # larger scale -> at least as many ones
+        prev = ones
+    assert int(st.multi_hot(st.n_scales - 1).sum()) == st.n_scale_groups
+
+
+def test_scale_groups_cover_all_scales():
+    st = paper_stage_specs()[2]
+    groups = {st.scale_group(i) for i in range(st.n_scales)}
+    assert groups == set(range(st.n_scale_groups))
+
+
+def test_empty_pool_rejected():
+    with pytest.raises(ValueError):
+        StageSpec("x", (), (1, 2))
+    with pytest.raises(ValueError):
+        StageSpec("x", (ModelInstance("m", 1.0),), (2, 1))

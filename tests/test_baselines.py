@@ -1,0 +1,63 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.action_chain import generate_action_chains, paper_stage_specs
+from repro.core.baselines import (StageActionSpace, cras_allocation,
+                                  equal_allocation)
+
+CHAINS = generate_action_chains(paper_stage_specs())
+
+
+def test_equal_picks_costliest_affordable_chain():
+    n = 100
+    budget = float(np.median(CHAINS.costs)) * n
+    j = equal_allocation(CHAINS, budget, n)
+    per_req = budget / n
+    assert CHAINS.costs[j] <= per_req
+    # no affordable chain is more expensive
+    affordable = CHAINS.costs[CHAINS.costs <= per_req]
+    assert CHAINS.costs[j] == affordable.max()
+
+
+def test_equal_rank_model_variants():
+    n = 100
+    budget = float(CHAINS.costs.max()) * n  # everything affordable
+    j_din = equal_allocation(CHAINS, budget, n, rank_model="DIN")
+    j_dien = equal_allocation(CHAINS, budget, n, rank_model="DIEN")
+    names = [m.name for m in CHAINS.stages[2].models]
+    assert names[CHAINS.chain_idx[j_din, 2, 0]] == "DIN"
+    assert names[CHAINS.chain_idx[j_dien, 2, 0]] == "DIEN"
+
+
+def test_equal_downgrades_when_nothing_fits():
+    j = equal_allocation(CHAINS, 1.0, 1000)  # absurdly small budget
+    assert j == CHAINS.cheapest()
+
+
+def test_cras_produces_feasible_chains_within_budget():
+    rng = np.random.default_rng(0)
+    n = 60
+    spaces = [StageActionSpace.from_chains(CHAINS, k) for k in range(3)]
+    stage_rewards = [jnp.asarray(rng.uniform(0, 1, (n, len(sp.costs))),
+                                 jnp.float32) for sp in spaces]
+    budget = float(np.median(CHAINS.costs)) * n
+    decisions = cras_allocation(stage_rewards, spaces, CHAINS, budget)
+    assert decisions.shape == (n,)
+    assert (decisions >= 0).all() and (decisions < CHAINS.n_chains).all()
+    spend = CHAINS.costs[decisions].sum()
+    # per-stage budgets are respected jointly up to stitch-clamping slack
+    assert spend <= budget * 1.15
+
+
+def test_cras_rank_model_restriction():
+    rng = np.random.default_rng(1)
+    n = 40
+    spaces = [StageActionSpace.from_chains(CHAINS, k) for k in range(3)]
+    stage_rewards = [jnp.asarray(rng.uniform(0, 1, (n, len(sp.costs))),
+                                 jnp.float32) for sp in spaces]
+    budget = float(CHAINS.costs.max()) * n
+    decisions = cras_allocation(stage_rewards, spaces, CHAINS, budget,
+                                rank_model="DIN")
+    names = [m.name for m in CHAINS.stages[2].models]
+    got = {names[CHAINS.chain_idx[j, 2, 0]] for j in decisions}
+    assert got == {"DIN"}

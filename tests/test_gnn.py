@@ -1,0 +1,122 @@
+"""SchNet + sampler invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gnn import schnet
+from repro.models.gnn.sampler import (CSRGraph, budget_for, sample_subgraph)
+
+KEY = jax.random.PRNGKey(0)
+CFG = schnet.SchNetConfig(n_interactions=2, d_hidden=16, n_rbf=20)
+
+
+def _batch(rng, n=24, e=48, g=3):
+    return dict(
+        nodes=jnp.asarray(rng.integers(0, 10, n), jnp.int32),
+        src=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        dst=jnp.asarray(rng.integers(0, n, e), jnp.int32),
+        dist=jnp.asarray(rng.uniform(0.5, 9.0, e), jnp.float32),
+        edge_mask=jnp.ones(e, jnp.float32),
+        graph_ids=jnp.asarray(np.repeat(np.arange(g), n // g), jnp.int32),
+        n_graphs=g,
+        target=jnp.asarray(rng.normal(size=g), jnp.float32))
+
+
+def test_forward_shapes(rng):
+    p = schnet.init(KEY, CFG)
+    out = schnet.forward(p, CFG, _batch(rng))
+    assert out.shape == (3, 1) and bool(jnp.isfinite(out).all())
+
+
+def test_edge_mask_zeroes_messages(rng):
+    """Masked (padding) edges must not affect the output."""
+    p = schnet.init(KEY, CFG)
+    b = _batch(rng)
+    e = b["src"].shape[0]
+    mask = jnp.concatenate([jnp.ones(e // 2), jnp.zeros(e - e // 2)])
+    b1 = dict(b, edge_mask=mask)
+    garbage = jnp.asarray(rng.integers(0, 24, e), jnp.int32)
+    b2 = dict(b1, src=jnp.where(mask > 0, b1["src"], garbage))
+    np.testing.assert_allclose(np.asarray(schnet.forward(p, CFG, b1)),
+                               np.asarray(schnet.forward(p, CFG, b2)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_node_permutation_equivariance(seed):
+    """Relabeling nodes permutes node outputs / preserves graph readout."""
+    rng = np.random.default_rng(seed)
+    n, e = 12, 30
+    cfg = schnet.SchNetConfig(n_interactions=2, d_hidden=8, n_rbf=10,
+                              n_out=3, task="node_class")
+    p = schnet.init(KEY, cfg)
+    nodes = rng.integers(0, 10, n)
+    src, dst = rng.integers(0, n, e), rng.integers(0, n, e)
+    dist = rng.uniform(0.5, 9.0, e)
+    perm = rng.permutation(n)
+    inv = np.argsort(perm)
+    base = dict(nodes=jnp.asarray(nodes, jnp.int32),
+                src=jnp.asarray(src, jnp.int32),
+                dst=jnp.asarray(dst, jnp.int32),
+                dist=jnp.asarray(dist, jnp.float32),
+                edge_mask=jnp.ones(e))
+    out1 = schnet.forward(p, cfg, base)
+    permuted = dict(base, nodes=jnp.asarray(nodes[perm], jnp.int32),
+                    src=jnp.asarray(inv[src], jnp.int32),
+                    dst=jnp.asarray(inv[dst], jnp.int32))
+    out2 = schnet.forward(p, cfg, permuted)
+    # new position of old node j is inv[j]  =>  out1[j] == out2[inv[j]]
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2)[inv],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cutoff_kills_long_edges(rng):
+    p = schnet.init(KEY, CFG)
+    b = _batch(rng)
+    far = dict(b, dist=jnp.full_like(b["dist"], CFG.cutoff + 1.0))
+    none = dict(b, edge_mask=jnp.zeros_like(b["edge_mask"]))
+    np.testing.assert_allclose(np.asarray(schnet.forward(p, CFG, far)),
+                               np.asarray(schnet.forward(p, CFG, none)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rbf_partition(rng):
+    d = jnp.asarray(rng.uniform(0, 10, 50), jnp.float32)
+    rbf = schnet.rbf_expand(d, CFG)
+    assert rbf.shape == (50, CFG.n_rbf)
+    assert float(rbf.max()) <= 1.0 + 1e-6
+
+
+# -- sampler -----------------------------------------------------------------
+
+
+def test_sampler_respects_budget_and_locality(rng):
+    src = rng.integers(0, 500, 4000)
+    dst = rng.integers(0, 500, 4000)
+    g = CSRGraph.from_edges(src, dst, 500)
+    mn, me = budget_for(16, (5, 3))
+    sub = sample_subgraph(g, np.arange(16), (5, 3), rng,
+                          max_nodes=mn, max_edges=me)
+    n_real = int(sub.node_mask.sum())
+    e_real = int(sub.edge_mask.sum())
+    assert n_real <= mn and e_real <= me
+    # all edge endpoints are valid local indices
+    assert (sub.src[:e_real] < n_real).all()
+    assert (sub.dst[:e_real] < n_real).all()
+    # every sampled edge exists in the original graph
+    nodes = sub.nodes
+    for s_l, d_l in zip(sub.src[:10], sub.dst[:10]):
+        u, v = int(nodes[s_l]), int(nodes[d_l])
+        assert u in g.neighbors(v) or v in g.neighbors(u)
+
+
+def test_csr_roundtrip(rng):
+    src = np.asarray([0, 0, 1, 2, 2, 2])
+    dst = np.asarray([1, 2, 0, 0, 1, 1])
+    g = CSRGraph.from_edges(src, dst, 3)
+    assert sorted(g.neighbors(0).tolist()) == [1, 2]
+    assert sorted(g.neighbors(2).tolist()) == [0, 1, 1]
+    assert g.n_edges == 6

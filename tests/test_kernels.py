@@ -1,0 +1,148 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# -- flash attention ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,t,s,h,hk,d", [
+    (1, 128, 128, 2, 2, 64),
+    (2, 256, 256, 4, 2, 64),
+    (1, 200, 264, 4, 1, 32),  # ragged: pad paths
+    (2, 64, 512, 8, 4, 128),  # cross lengths
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, t, s, h, hk, d, dtype):
+    q = jax.random.normal(KEY, (b, t, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hk, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hk, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (64, None, True), (-1, 50.0, True), (32, 30.0, True), (-1, None, False),
+])
+def test_flash_attention_mask_variants(window, softcap, causal):
+    q = jax.random.normal(KEY, (2, 192, 4, 64))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 192, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 192, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -- embedding bag -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("v,d,b,l", [(100, 32, 8, 4), (1000, 128, 32, 16),
+                                     (64, 256, 5, 7)])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_embedding_bag_sweep(v, d, b, l, weighted):
+    table = jax.random.normal(KEY, (v, d))
+    ids = jax.random.randint(jax.random.fold_in(KEY, 5), (b, l), 0, v)
+    w = jax.random.uniform(jax.random.fold_in(KEY, 6), (b, l)) if weighted \
+        else None
+    out = ops.embedding_bag(table, ids, w)
+    want = ref.embedding_bag_ref(table, ids, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- dot interaction ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,f,d", [(32, 27, 64), (100, 8, 16), (7, 13, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dot_interact_sweep(b, f, d, dtype):
+    feats = jax.random.normal(KEY, (b, f, d), dtype)
+    out = ops.dot_interact(feats, block_b=16)
+    want = ref.dot_interact_ref(feats)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# -- target attention (DIN) --------------------------------------------------
+
+
+@pytest.mark.parametrize("b,t,d,h1,h2", [(16, 12, 36, 80, 40),
+                                         (50, 100, 36, 80, 40),
+                                         (9, 24, 16, 32, 8)])
+def test_target_attention_sweep(b, t, d, h1, h2):
+    q = jax.random.normal(KEY, (b, d))
+    keys = jax.random.normal(jax.random.fold_in(KEY, 7), (b, t, d))
+    mask = (jax.random.uniform(jax.random.fold_in(KEY, 8), (b, t)) > 0.3) \
+        .astype(jnp.float32)
+    ws = []
+    for i, (di, do) in enumerate([(4 * d, h1), (h1, h2), (h2, 1)]):
+        ws.append(0.1 * jax.random.normal(jax.random.fold_in(KEY, 9 + i),
+                                          (di, do)))
+        ws.append(jnp.zeros((do,)))
+    out = ops.target_attention(q, keys, mask, *ws, block_b=8)
+    want = ref.target_attention_ref(q, keys, mask, *ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_target_attention_matches_din_model():
+    """The kernel is a drop-in for models/recsys/din.attention_pool."""
+    from repro.models.recsys import din
+    cfg = din.DINConfig(item_vocab=50, cat_vocab=10, user_vocab=20,
+                        seq_len=12, embed_dim=8, attn_hidden=(16, 8))
+    p = din.init(jax.random.PRNGKey(1), cfg)
+    b, t, d = 6, cfg.seq_len, cfg.d_item
+    q = jax.random.normal(KEY, (b, d))
+    keys = jax.random.normal(jax.random.fold_in(KEY, 20), (b, t, d))
+    mask = jnp.ones((b, t))
+    model_out = din.attention_pool(p, q, keys, mask)
+    lay = p["attn"]["layers"]
+    kern_out = ops.target_attention(
+        q, keys, mask, lay[0]["w"], lay[0]["b"], lay[1]["w"], lay[1]["b"],
+        lay[2]["w"], lay[2]["b"], block_b=8)
+    np.testing.assert_allclose(np.asarray(kern_out), np.asarray(model_out),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -- CIN ---------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,hp,m,d,ho", [(8, 39, 39, 10, 200),
+                                         (20, 200, 39, 10, 200),
+                                         (5, 8, 12, 4, 16)])
+def test_cin_sweep(b, hp, m, d, ho):
+    w = 0.05 * jax.random.normal(KEY, (ho, hp * m))
+    xp = jax.random.normal(jax.random.fold_in(KEY, 30), (b, hp, d))
+    x0 = jax.random.normal(jax.random.fold_in(KEY, 31), (b, m, d))
+    out = ops.cin_layer(w, xp, x0, block_b=4, block_h=64)
+    want = ref.cin_layer_ref(w, xp, x0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cin_matches_xdeepfm_model():
+    from repro.models.recsys import xdeepfm
+    cfg = xdeepfm.XDeepFMConfig(vocab_sizes=tuple([16] * 6), embed_dim=4,
+                                cin_layers=(8,), mlp_hidden=(8,))
+    p = xdeepfm.init(jax.random.PRNGKey(2), cfg)
+    x0 = jax.random.normal(KEY, (5, 6, 4))
+    model_out = xdeepfm.cin_layer(p["cin"][0], x0, x0)
+    kern_out = ops.cin_layer(p["cin"][0], x0, x0, block_b=8, block_h=8)
+    np.testing.assert_allclose(np.asarray(kern_out), np.asarray(model_out),
+                               rtol=1e-4, atol=1e-4)

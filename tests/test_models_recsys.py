@@ -1,0 +1,206 @@
+"""RecSys model invariants + embedding substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.embedding import embedding_bag, fixed_bag, hash_bucket
+from repro.models.recsys import bst, dien, din, dlrm, dssm, xdeepfm, ydnn
+
+KEY = jax.random.PRNGKey(0)
+B, T, N = 4, 10, 5
+
+
+@pytest.fixture(scope="module")
+def din_setup():
+    cfg = din.DINConfig(item_vocab=100, cat_vocab=10, user_vocab=50,
+                        seq_len=T, embed_dim=8, attn_hidden=(16, 8),
+                        mlp_hidden=(32, 16))
+    p = din.init(KEY, cfg)
+    batch = dict(
+        hist_ids=jax.random.randint(KEY, (B, T), 0, 100),
+        hist_cats=jax.random.randint(KEY, (B, T), 0, 10),
+        hist_mask=jnp.ones((B, T)),
+        user_fields=jax.random.randint(KEY, (B, 2), 0, 50),
+        item_id=jax.random.randint(KEY, (B,), 0, 100),
+        item_cat=jax.random.randint(KEY, (B,), 0, 10),
+        label=jnp.ones((B,)))
+    return cfg, p, batch
+
+
+def test_din_masked_history_ignored(din_setup):
+    """Padding positions must not change the score (mask invariant)."""
+    cfg, p, batch = din_setup
+    mask = jnp.concatenate([jnp.ones((B, T // 2)), jnp.zeros((B, T - T // 2))],
+                           axis=1)
+    b1 = dict(batch, hist_mask=mask)
+    garbage = jax.random.randint(jax.random.fold_in(KEY, 9), (B, T), 0, 100)
+    b2 = dict(b1, hist_ids=jnp.where(mask > 0, b1["hist_ids"], garbage))
+    np.testing.assert_allclose(np.asarray(din.forward(p, cfg, b1)),
+                               np.asarray(din.forward(p, cfg, b2)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_din_score_consistent_with_forward(din_setup):
+    cfg, p, batch = din_setup
+    cands = jax.random.randint(jax.random.fold_in(KEY, 1), (B, N), 0, 100)
+    ccats = jax.random.randint(jax.random.fold_in(KEY, 2), (B, N), 0, 10)
+    s = din.score(p, cfg, batch, cands, ccats)
+    b0 = dict(batch, item_id=cands[:, 0], item_cat=ccats[:, 0])
+    np.testing.assert_allclose(np.asarray(s[:, 0]),
+                               np.asarray(din.forward(p, cfg, b0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_din_chunked_retrieval_matches_score(din_setup):
+    cfg, p, batch = din_setup
+    one = {k: v[:1] for k, v in batch.items()}
+    cands = jax.random.randint(jax.random.fold_in(KEY, 3), (8,), 0, 100)
+    ccats = jax.random.randint(jax.random.fold_in(KEY, 4), (8,), 0, 10)
+    chunked = din.score_candidates_chunked(p, cfg, one, cands, ccats,
+                                           n_chunks=4)
+    direct = din.score(p, cfg, one, cands[None], ccats[None])[0]
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dlrm_dot_interact_symmetry():
+    feats = jax.random.normal(KEY, (3, 6, 8))
+    out = dlrm.dot_interact(feats)
+    assert out.shape == (3, 15)
+    # permuting the feature slots permutes but preserves the dot set
+    perm = feats[:, ::-1, :]
+    out_p = dlrm.dot_interact(perm)
+    assert np.allclose(sorted(np.asarray(out[0]).tolist()),
+                       sorted(np.asarray(out_p[0]).tolist()), atol=1e-5)
+
+
+def test_dlrm_table_offsets_disjoint():
+    cfg = dlrm.DLRMConfig(vocab_sizes=(5, 7, 3), embed_dim=4,
+                          bot_mlp=(8, 4), top_mlp=(16, 1), top_pad=32)
+    offs = np.asarray(dlrm.table_offsets(cfg))
+    assert offs.tolist() == [0, 5, 12]
+
+
+def test_dlrm_forward_and_retrieval():
+    cfg = dlrm.DLRMConfig(vocab_sizes=tuple([16] * 26), embed_dim=8,
+                          bot_mlp=(16, 8), top_mlp=(32, 1), top_pad=512)
+    p = dlrm.init(KEY, cfg)
+    batch = dict(dense=jnp.ones((B, 13)),
+                 sparse=jax.random.randint(KEY, (B, 26), 0, 16),
+                 label=jnp.ones((B,)))
+    out = dlrm.forward(p, cfg, batch)
+    assert out.shape == (B,) and bool(jnp.isfinite(out).all())
+    user = {"dense": batch["dense"][:1], "sparse": batch["sparse"][:1]}
+    cand = jax.random.randint(KEY, (6, 4), 0, 16)
+    r = dlrm.retrieval_forward(p, cfg, user, cand)
+    assert r.shape == (6,)
+    # candidate fields actually matter
+    r2 = dlrm.retrieval_forward(p, cfg, user, (cand + 1) % 16)
+    assert not np.allclose(np.asarray(r), np.asarray(r2))
+
+
+def test_xdeepfm_heads_additive():
+    cfg = xdeepfm.XDeepFMConfig(vocab_sizes=tuple([8] * 12), embed_dim=4,
+                                cin_layers=(6, 6), mlp_hidden=(8, 8))
+    p = xdeepfm.init(KEY, cfg)
+    batch = dict(sparse=jax.random.randint(KEY, (B, 12), 0, 8),
+                 label=jnp.ones((B,)))
+    out = xdeepfm.forward(p, cfg, batch)
+    assert out.shape == (B,) and bool(jnp.isfinite(out).all())
+
+
+def test_bst_target_position_matters():
+    cfg = bst.BSTConfig(item_vocab=50, cat_vocab=8, user_vocab=20,
+                        n_user_fields=2, embed_dim=8, seq_len=6,
+                        n_heads=4, mlp_hidden=(16, 8))
+    p = bst.init(KEY, cfg)
+    t = cfg.seq_len - 1
+    batch = dict(hist_ids=jax.random.randint(KEY, (B, t), 0, 50),
+                 hist_cats=jax.random.randint(KEY, (B, t), 0, 8),
+                 hist_mask=jnp.ones((B, t)),
+                 user_fields=jax.random.randint(KEY, (B, 2), 0, 20),
+                 item_id=jax.random.randint(KEY, (B,), 0, 50),
+                 item_cat=jax.random.randint(KEY, (B,), 0, 8),
+                 label=jnp.ones((B,)))
+    a = bst.forward(p, cfg, batch)
+    b2 = dict(batch, item_id=(batch["item_id"] + 7) % 50)
+    b = bst.forward(p, cfg, b2)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_dien_gru_state_reacts_to_history():
+    cfg = dien.DIENConfig(item_vocab=60, cat_vocab=8, user_vocab=30,
+                          seq_len=T, embed_dim=6, attn_hidden=(8, 4),
+                          mlp_hidden=(16, 8))
+    p = dien.init(KEY, cfg)
+    batch = dict(hist_ids=jax.random.randint(KEY, (B, T), 0, 60),
+                 hist_cats=jax.random.randint(KEY, (B, T), 0, 8),
+                 hist_mask=jnp.ones((B, T)),
+                 user_fields=jax.random.randint(KEY, (B, 2), 0, 30),
+                 item_id=jax.random.randint(KEY, (B,), 0, 60),
+                 item_cat=jax.random.randint(KEY, (B,), 0, 8),
+                 label=jnp.ones((B,)))
+    a = dien.forward(p, cfg, batch)
+    shuffled = dict(batch, hist_ids=batch["hist_ids"][:, ::-1])
+    b = dien.forward(p, cfg, shuffled)
+    assert not np.allclose(np.asarray(a), np.asarray(b))  # order-sensitive
+
+
+def test_towers_score_shapes():
+    dcfg = dssm.DSSMConfig(user_vocab=50, item_vocab=40, hidden=(16, 8),
+                           d_out=4)
+    dp = dssm.init(KEY, dcfg)
+    s = dssm.score(dp, dcfg, jnp.zeros((B, 4), jnp.int32),
+                   jnp.zeros((B, N, 2), jnp.int32))
+    assert s.shape == (B, N)
+    # cosine scores bounded
+    assert float(jnp.abs(s).max()) <= 1.0 + 1e-5
+    ycfg = ydnn.YDNNConfig(item_vocab=40, user_vocab=50, hist_len=T,
+                           hidden=(16, 8), d_out=4)
+    yp = ydnn.init(KEY, ycfg)
+    s = ydnn.score(yp, ycfg, jnp.zeros((B, T), jnp.int32), jnp.ones((B, T)),
+                   jnp.zeros((B, 4), jnp.int32), jnp.zeros((B, N), jnp.int32))
+    assert s.shape == (B, N)
+
+
+# -- embedding substrate -----------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(1, 8), st.sampled_from(["sum", "mean",
+                                                               "max"]))
+def test_embedding_bag_modes_vs_numpy(v, l, mode):
+    rng = np.random.default_rng(v * 31 + l)
+    table = jnp.asarray(rng.normal(size=(v, 4)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, v, 3 * l), jnp.int32)
+    seg = jnp.asarray(np.sort(rng.integers(0, 3, 3 * l)), jnp.int32)
+    out = embedding_bag(table, ids, seg, 3, mode=mode)
+    tnp, inp, snp = map(np.asarray, (table, ids, seg))
+    for b in range(3):
+        rows = tnp[inp[snp == b]]
+        if len(rows) == 0:
+            continue
+        want = {"sum": rows.sum(0), "mean": rows.mean(0),
+                "max": rows.max(0)}[mode]
+        np.testing.assert_allclose(np.asarray(out[b]), want, rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_fixed_bag_mask():
+    table = jnp.asarray(np.arange(20, dtype=np.float32).reshape(10, 2))
+    ids = jnp.asarray([[1, 2, 3]], jnp.int32)
+    mask = jnp.asarray([[1.0, 1.0, 0.0]])
+    out = fixed_bag(table, ids, mask, mode="sum")
+    want = np.asarray(table)[1] + np.asarray(table)[2]
+    np.testing.assert_allclose(np.asarray(out[0]), want)
+
+
+def test_hash_bucket_in_range():
+    ids = jnp.arange(10_000, dtype=jnp.int32)
+    h = hash_bucket(ids, 97)
+    assert int(h.min()) >= 0 and int(h.max()) < 97
+    # roughly uniform occupancy
+    counts = np.bincount(np.asarray(h), minlength=97)
+    assert counts.min() > 0

@@ -1,0 +1,60 @@
+import numpy as np
+import pytest
+
+from repro.core.action_chain import generate_action_chains, paper_stage_specs
+from repro.core.budget import BudgetController
+from repro.core.pfec import (EnergyConfig, carbon_from_energy,
+                             energy_from_flops, pfec_report, revenue_at_e)
+
+
+def test_energy_and_carbon_follow_paper_constants():
+    cfg = EnergyConfig()
+    kwh = energy_from_flops(1e15, cfg)
+    assert kwh > 0
+    # linear in FLOPs
+    assert energy_from_flops(2e15, cfg) == pytest.approx(2 * kwh)
+    # CE = EC * CI with CI = 615 g/kWh (paper Eq. 2)
+    assert carbon_from_energy(kwh, cfg) == pytest.approx(kwh * 615.0)
+    # PUE scales EC linearly (paper Eq. 1)
+    cfg2 = EnergyConfig(pue=2 * cfg.pue)
+    assert energy_from_flops(1e15, cfg2) == pytest.approx(2 * kwh)
+
+
+def test_pfec_report_fields():
+    r = pfec_report(clicks=123.0, flops=1e12, extra="x")
+    row = r.as_row()
+    assert row["performance"] == 123.0
+    assert row["flops"] == 1e12
+    assert row["carbon_g"] == pytest.approx(row["energy_kwh"] * 615.0)
+    assert row["extra"] == "x"
+
+
+def test_revenue_at_e():
+    clicks = np.zeros(50)
+    clicks[[3, 7, 40]] = 1.0
+    ranked = np.argsort(-clicks, kind="stable")  # clicked first
+    assert revenue_at_e(clicks, ranked, e=20) == 3.0
+    ranked_bad = np.arange(50)[::-1]
+    assert revenue_at_e(clicks, ranked_bad, e=5) == 0.0
+
+
+def test_budget_controller_guard_caps_spend():
+    chains = generate_action_chains(paper_stage_specs())
+    rng = np.random.default_rng(0)
+    n = 200
+    budget = float(np.median(chains.costs)) * n * 0.7
+    ctl = BudgetController(chains, budget)
+    # adversarial: rewards favour the most expensive chain for everyone
+    rewards = np.tile(chains.costs / chains.costs.max(), (n, 1)).astype(np.float32)
+    floor_per_req = chains.costs[chains.cheapest()]
+    for _ in range(4):
+        decisions = ctl.step_window(rewards + rng.normal(0, 0.01, rewards.shape))
+        assert ctl.stats[-1].spend <= budget * (1 + 1e-6)
+    # traffic spike: 5x requests.  The guard caps spend at the budget OR
+    # the physical floor (every request on the cheapest chain - Eq. 3b
+    # serves everyone; the paper calls this "computation downgrade").
+    spike = np.tile(rewards, (5, 1))
+    ctl.step_window(spike.astype(np.float32))
+    cap = max(budget, floor_per_req * len(spike))
+    assert ctl.stats[-1].spend <= cap * (1 + 1e-6)
+    assert ctl.stats[-1].downgraded > 0

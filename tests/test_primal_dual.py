@@ -1,0 +1,84 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.primal_dual import (DynamicPrimalDual, allocate, consumption,
+                                    dual_bisect, dual_descent,
+                                    realized_reward)
+
+
+def _random_problem(seed, i=64, j=12):
+    rng = np.random.default_rng(seed)
+    rewards = jnp.asarray(rng.uniform(0, 5, (i, j)), jnp.float32)
+    costs = jnp.asarray(rng.uniform(1.0, 10.0, (j,)), jnp.float32)
+    return rewards, costs
+
+
+def test_allocate_is_argmax():
+    rewards, costs = _random_problem(0)
+    lam = jnp.float32(0.3)
+    j_star = allocate(rewards, costs, lam)
+    manual = np.argmax(np.asarray(rewards) - 0.3 * np.asarray(costs)[None, :],
+                       axis=1)
+    np.testing.assert_array_equal(np.asarray(j_star), manual)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.floats(0.05, 0.95))
+def test_bisect_respects_budget_and_is_minimal(seed, frac):
+    """Smallest lambda whose consumption fits the budget (paper Eq. 10).
+
+    Eq. 3b assigns exactly ONE chain per request, so consumption can never
+    drop below n * min_j(c_j); budgets are drawn above that floor."""
+    rewards, costs = _random_problem(seed)
+    max_spend = float(consumption(rewards, costs, jnp.float32(0.0)))
+    floor = rewards.shape[0] * float(costs.min())
+    budget = floor + frac * (max_spend - floor)
+    lam = dual_bisect(rewards, costs, budget)
+    assert float(consumption(rewards, costs, lam)) <= budget * (1 + 1e-5)
+    if float(lam) > 1e-6:
+        # a slightly smaller price must overshoot (minimality)
+        lam_lo = lam * 0.98
+        assert float(consumption(rewards, costs, lam_lo)) >= budget * (1 - 1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500))
+def test_consumption_monotone_in_lambda(seed):
+    rewards, costs = _random_problem(seed)
+    lams = [0.0, 0.05, 0.1, 0.3, 0.8, 2.0]
+    spends = [float(consumption(rewards, costs, jnp.float32(l))) for l in lams]
+    assert all(a >= b - 1e-4 for a, b in zip(spends, spends[1:]))
+
+
+def test_dual_descent_converges_near_bisect():
+    rewards, costs = _random_problem(42, i=256)
+    budget = 0.6 * float(consumption(rewards, costs, jnp.float32(0.0)))
+    lam_b = dual_bisect(rewards, costs, budget)
+    lam_d, gaps = dual_descent(rewards, costs, budget, 0.0, max_iters=400,
+                               step_size=2.0)
+    spend_d = float(consumption(rewards, costs, lam_d))
+    # descent should get within a few percent of the budget (Algorithm 1)
+    assert spend_d <= budget * 1.02
+    r_b = float(realized_reward(rewards, allocate(rewards, costs, lam_b)))
+    r_d = float(realized_reward(rewards, allocate(rewards, costs, lam_d)))
+    assert r_d >= 0.95 * r_b
+
+
+def test_unconstrained_budget_gives_zero_price():
+    rewards, costs = _random_problem(7)
+    huge = 1e9
+    assert float(dual_bisect(rewards, costs, huge)) == 0.0
+
+
+def test_streaming_tracker_warm_start():
+    rewards, costs = _random_problem(3, i=512)
+    budget = 0.5 * float(consumption(rewards, costs, jnp.float32(0.0)))
+    pd = DynamicPrimalDual(costs, budget)
+    for t in range(5):
+        pd.update(rewards)
+    decisions = pd.decide(rewards)
+    spend = float(np.asarray(costs)[np.asarray(decisions)].sum())
+    assert spend <= budget * 1.05
+    assert len(pd.history) == 5

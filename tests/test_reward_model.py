@@ -1,0 +1,103 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.action_chain import generate_action_chains, paper_stage_specs
+from repro.core.reward_model import (BASIS_FUNCTIONS, RewardModelConfig,
+                                     apply_bases, field_rce, reward_apply,
+                                     reward_matrix, reward_model_init)
+
+CFG = RewardModelConfig(n_stages=3, max_models=2, n_scale_groups=4,
+                        d_context=8, d_feature=16, d_hidden=16, d_state=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return reward_model_init(jax.random.PRNGKey(0), CFG)
+
+
+def _encode(scale_groups):
+    """scale_groups (K,) ints -> monotone multi-hot (K, Q)."""
+    q = CFG.n_scale_groups
+    out = np.zeros((len(scale_groups), q), np.float32)
+    for k, g in enumerate(scale_groups):
+        out[k, :g + 1] = 1.0
+    return out
+
+
+def test_basis_functions_monotone_increasing():
+    x = jnp.linspace(0.0, 20.0, 100)
+    ys = apply_bases(jnp.stack([x] * len(BASIS_FUNCTIONS), -1))
+    diffs = jnp.diff(ys, axis=0)
+    assert bool((diffs >= -1e-6).all())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 3), st.integers(0, 2), st.data())
+def test_reward_monotone_in_item_scale(g_lo, stage_k, data):
+    """Paper §4.2 guarantee: larger item scale never predicts less reward."""
+    params = reward_model_init(jax.random.PRNGKey(1), CFG)
+    g_hi = data.draw(st.integers(g_lo, 3))
+    ctx = np.asarray(
+        np.random.default_rng(data.draw(st.integers(0, 10))).normal(
+            size=(1, CFG.d_context)), np.float32)
+    mo = np.zeros((1, 3, 2), np.float32)
+    mo[:, :, 0] = 1.0
+    groups = [1, 1, 1]
+    groups[stage_k] = g_lo
+    lo = reward_apply(params, CFG, jnp.asarray(ctx), jnp.asarray(mo),
+                      jnp.asarray(_encode(groups)[None]))
+    groups[stage_k] = g_hi
+    hi = reward_apply(params, CFG, jnp.asarray(ctx), jnp.asarray(mo),
+                      jnp.asarray(_encode(groups)[None]))
+    assert float(hi[0]) >= float(lo[0]) - 1e-5
+
+
+def test_reward_matrix_matches_reward_apply(params):
+    chains = generate_action_chains(paper_stage_specs())
+    ctx = jnp.asarray(np.random.default_rng(3).normal(size=(5, CFG.d_context)),
+                      jnp.float32)
+    r = reward_matrix(params, CFG, ctx, jnp.asarray(chains.model_onehot),
+                      jnp.asarray(chains.scale_multihot))
+    assert r.shape == (5, chains.n_chains)
+    j = 11
+    mo = jnp.broadcast_to(jnp.asarray(chains.model_onehot[j]), (5, 3, 2))
+    sh = jnp.broadcast_to(jnp.asarray(chains.scale_multihot[j]), (5, 3, 4))
+    direct = reward_apply(params, CFG, ctx, mo, sh)
+    np.testing.assert_allclose(np.asarray(r[:, j]), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_nonrecursive_ablation_changes_output(params):
+    import dataclasses
+    ctx = jnp.ones((2, CFG.d_context))
+    chains = generate_action_chains(paper_stage_specs())
+    mo = jnp.asarray(chains.model_onehot[:2])
+    sh = jnp.asarray(chains.scale_multihot[:2])
+    cfg_nr = dataclasses.replace(CFG, recursive=False)
+    r1 = reward_apply(params, CFG, ctx, mo, sh)
+    r2 = reward_apply(params, cfg_nr, ctx, mo, sh)
+    assert not np.allclose(np.asarray(r1), np.asarray(r2))
+
+
+def test_flat_head_ablation_runs():
+    import dataclasses
+    cfg = dataclasses.replace(CFG, multi_basis=False)
+    p = reward_model_init(jax.random.PRNGKey(2), cfg)
+    ctx = jnp.ones((3, CFG.d_context))
+    mo = jnp.zeros((3, 3, 2)).at[:, :, 0].set(1.0)
+    sh = jnp.ones((3, 3, 4))
+    r = reward_apply(p, cfg, ctx, mo, sh)
+    assert r.shape == (3,) and bool(jnp.isfinite(r).all())
+    assert bool((r >= 0).all())  # softplus head keeps rewards non-negative
+
+
+def test_field_rce_zero_for_perfect_predictions():
+    y = np.asarray([1.0, 2.0, 3.0, 4.0])
+    fields = np.asarray([0, 0, 1, 1])
+    assert field_rce(y, y, fields) == pytest.approx(0.0)
+    # biased predictions on one field raise the metric
+    yp = y + np.asarray([1.0, 1.0, 0.0, 0.0])
+    assert field_rce(y, yp, fields) > 0.1

@@ -1,0 +1,94 @@
+"""End-to-end behaviour tests: the paper's core claims at mini scale.
+
+Claim chain tested here (paper §5.2):
+  * the primal-dual allocation on predicted rewards respects the budget;
+  * GreenFlow (personalized chains) beats EQUAL (fixed chain) at the same
+    budget;
+  * the oracle (true-revenue) allocation upper-bounds everything and
+    strictly beats EQUAL (i.e. heterogeneous users really do have
+    heterogeneous reward curves in our world - the premise of the paper).
+"""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import WorldConfig
+from repro.experiments import (ExperimentConfig, build_experiment,
+                               cras_stage_rewards, evaluate_methods,
+                               predicted_rewards, reward_model_metrics,
+                               train_reward_model)
+
+CFG = ExperimentConfig(
+    world=WorldConfig(n_users=800, n_items=200, hist_len=10, seed=3),
+    expose=8, n_scales=4, cascade_steps=120, reward_steps=300, batch=48)
+
+
+@pytest.fixture(scope="module")
+def exp():
+    return build_experiment(CFG)
+
+
+@pytest.fixture(scope="module")
+def reward(exp):
+    params, rcfg = train_reward_model(exp)
+    return params, rcfg
+
+
+def test_revenue_matrix_sane(exp):
+    assert exp.revenue_eval.shape[1] == exp.chains.n_chains
+    assert (exp.revenue_eval >= 0).all()
+    assert exp.revenue_eval.max() <= CFG.expose
+    assert exp.revenue_eval.mean() > 0.05  # the cascade finds clicks
+
+
+def test_more_compute_helps_on_average(exp):
+    """Paper premise: reward curves increase with computation."""
+    order = np.argsort(exp.chains.costs)
+    cheap = exp.revenue_eval[:, order[:10]].mean()
+    dear = exp.revenue_eval[:, order[-10:]].mean()
+    assert dear > cheap
+
+
+def test_oracle_beats_equal_everywhere(exp):
+    rows = evaluate_methods(exp, budgets_frac=(0.4, 0.6, 0.8))
+    for row in rows:
+        best_equal = max(row["equal_din"], row["equal_dien"])
+        assert row["oracle"] >= best_equal, row
+        assert row["oracle_spend"] <= row["budget_flops"] * 1.001
+
+
+def test_greenflow_budget_feasible_and_competitive(exp, reward):
+    params, rcfg = reward
+    pred = predicted_rewards(exp, params, rcfg, exp.ctx_eval)
+    rows = evaluate_methods(exp, budgets_frac=(0.4, 0.6, 0.8),
+                            rewards_pred=pred)
+    for row in rows:
+        assert row["greenflow_spend"] <= row["budget_flops"] * 1.001
+        best_equal = max(row["equal_din"], row["equal_dien"])
+        # the learned reward model should not lose to a fixed chain
+        assert row["greenflow"] >= best_equal * 0.95, row
+
+
+def test_greenflow_beats_equal_at_mid_budget(exp, reward):
+    """The headline claim at the paper's operating point."""
+    params, rcfg = reward
+    pred = predicted_rewards(exp, params, rcfg, exp.ctx_eval)
+    rows = evaluate_methods(exp, budgets_frac=(0.5,), rewards_pred=pred)
+    row = rows[0]
+    best_equal = max(row["equal_din"], row["equal_dien"])
+    assert row["greenflow"] >= best_equal
+
+
+def test_reward_model_beats_constant_predictor(exp, reward):
+    params, rcfg = reward
+    m = reward_model_metrics(exp, params, rcfg)
+    const_mse = float(np.mean(
+        (exp.revenue_eval - exp.revenue_reward.mean()) ** 2))
+    assert m["mse"] < const_mse
+    assert m["field_rce"] < 1.0
+
+
+def test_cras_runs_and_respects_budget(exp):
+    sr = cras_stage_rewards(exp)
+    rows = evaluate_methods(exp, budgets_frac=(0.6,), stage_rewards=sr)
+    assert "cras_both" in rows[0]
+    assert rows[0]["cras_both"] >= 0

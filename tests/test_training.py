@@ -1,0 +1,186 @@
+"""Optimizer, schedules, trainer, checkpoint, compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import DeterministicPipeline, Prefetcher
+from repro.distributed.compression import (dequantize_int8, flatten_tree,
+                                           quantize_int8, topk_ef_compress,
+                                           topk_ef_init, unflatten_like)
+from repro.training import checkpoint as ck
+from repro.training.optimizer import (AdamW, SGD, clip_by_global_norm,
+                                      cosine_schedule, wsd_schedule)
+from repro.training.trainer import (Trainer, TrainerConfig, TrainState,
+                                    build_train_step, init_state)
+
+
+def _quadratic_loss(params, batch):
+    return jnp.mean(jnp.square(params["w"] @ batch["x"] - batch["y"]))
+
+
+def _quad_pipeline():
+    w_true = np.asarray([[1.0, -2.0], [0.5, 3.0]])
+
+    def fn(rng, step, lo, hi):
+        x = rng.normal(size=(2, hi - lo)).astype(np.float32)
+        return {"x": x, "y": (w_true @ x).astype(np.float32)}
+
+    return DeterministicPipeline(fn, 32, seed=1)
+
+
+def test_adamw_solves_quadratic():
+    opt = AdamW()
+    params = {"w": jnp.zeros((2, 2))}
+    step = build_train_step(_quadratic_loss, opt, lambda s: 0.05,
+                            donate=False)
+    state = init_state(params, opt)
+    pipe = _quad_pipeline()
+    for _ in range(300):
+        state, m = step(state, jax.tree_util.tree_map(jnp.asarray,
+                                                      pipe.next()))
+    assert float(m["loss"]) < 1e-2
+
+
+def test_microbatch_equals_full_batch_grads():
+    """Grad accumulation must match the single-batch gradient exactly."""
+    opt = SGD(momentum=0.0)
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(2, 2)),
+                               jnp.float32)}
+    batch = {"x": jnp.asarray(np.random.default_rng(1).normal(size=(4, 2, 8)),
+                              jnp.float32),
+             "y": jnp.asarray(np.random.default_rng(2).normal(size=(4, 2, 8)),
+                              jnp.float32)}
+
+    def loss(p, b):
+        return jnp.mean(jnp.square(jnp.einsum("ij,bjk->bik", p["w"], b["x"])
+                                   - b["y"]))
+
+    s1 = build_train_step(loss, opt, lambda s: 0.1, n_microbatches=1,
+                          donate=False)
+    s2 = build_train_step(loss, opt, lambda s: 0.1, n_microbatches=4,
+                          donate=False)
+    st1, _ = s1(init_state(params, opt), batch)
+    st2, _ = s2(init_state(params, opt), batch)
+    np.testing.assert_allclose(np.asarray(st1.params["w"]),
+                               np.asarray(st2.params["w"]), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, warmup=10, total=110)
+    assert float(cos(0)) == 0.0
+    assert float(cos(10)) == pytest.approx(1.0)
+    assert float(cos(110)) == pytest.approx(0.0, abs=1e-6)
+    wsd = wsd_schedule(1.0, warmup=10, stable=80, decay=20)
+    assert float(wsd(50)) == pytest.approx(1.0)
+    assert float(wsd(110)) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_pipeline_determinism_and_seek():
+    pipe = _quad_pipeline()
+    b3 = None
+    for i in range(4):
+        b = pipe.next()
+        if i == 3:
+            b3 = b
+    pipe.seek(3)
+    again = pipe.next()
+    np.testing.assert_array_equal(b3["x"], again["x"])
+
+
+def test_pipeline_host_sharding():
+    from repro.data.pipeline import ShardInfo
+
+    def fn(rng, step, lo, hi):
+        return {"rows": np.arange(lo, hi)}
+
+    full = DeterministicPipeline(fn, 8, seed=0).next()["rows"]
+    parts = []
+    for h in range(2):
+        p = DeterministicPipeline(fn, 8, seed=0,
+                                  shard=ShardInfo(host_id=h, n_hosts=2))
+        parts.append(p.next()["rows"])
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_prefetcher_yields_in_order():
+    it = iter([{"i": np.asarray(i)} for i in range(5)])
+    out = [b["i"].item() for b in Prefetcher(it, depth=2)]
+    assert out == [0, 1, 2, 3, 4]
+
+
+def test_checkpoint_atomic_roundtrip_and_gc():
+    state = {"w": jnp.arange(6.0).reshape(2, 3), "step": jnp.int32(5)}
+    with tempfile.TemporaryDirectory() as td:
+        for s in (1, 2, 3, 4):
+            ck.save(td, s, state, keep=2)
+        assert ck.latest_step(td) == 4
+        kept = sorted(os.listdir(td))
+        assert len([d for d in kept if d.startswith("step_")]) == 2
+        restored, man = ck.restore(td, state)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+        assert man["step"] == 4
+
+
+def test_trainer_preemption_checkpoints(tmp_path):
+    opt = AdamW()
+    params = {"w": jnp.zeros((2, 2))}
+    step = build_train_step(_quadratic_loss, opt, lambda s: 0.05,
+                            donate=False)
+    tr = Trainer(TrainerConfig(total_steps=50, ckpt_dir=str(tmp_path),
+                               ckpt_every=1000, log_every=1000),
+                 step, init_state(params, opt), _quad_pipeline(),
+                 log_fn=lambda *a: None)
+    tr._preempted = True  # simulate SIGTERM mid-run
+    tr.run()
+    assert ck.latest_step(str(tmp_path)) is not None
+
+
+# -- compression -------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(10, 5000))
+def test_int8_quantization_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n) * rng.uniform(0.1, 100), jnp.float32)
+    q, s = quantize_int8(x, block=256)
+    back = dequantize_int8(q, s, n, block=256)
+    # per-block max / 127 is the quantization step
+    step = np.repeat(np.asarray(s), 256)[:n]
+    assert np.all(np.abs(np.asarray(back - x)) <= step * 0.5 + 1e-7)
+
+
+def test_topk_ef_conserves_mass():
+    params = {"w": jnp.ones((100,))}
+    state = topk_ef_init(params)
+    g = jnp.asarray(np.random.default_rng(0).normal(size=100), jnp.float32)
+    sent, state = topk_ef_compress(g, state, k_frac=0.1)
+    np.testing.assert_allclose(np.asarray(sent + state.residual),
+                               np.asarray(g), rtol=1e-6, atol=1e-6)
+    # second step transmits what was withheld
+    sent2, state2 = topk_ef_compress(jnp.zeros(100), state, k_frac=1.0)
+    np.testing.assert_allclose(np.asarray(sent2), np.asarray(state.residual),
+                               rtol=1e-6)
+
+
+def test_flatten_roundtrip():
+    tree = {"a": jnp.ones((3, 2)), "b": {"c": jnp.zeros((5,))}}
+    flat = flatten_tree(tree)
+    back = unflatten_like(flat, tree)
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
