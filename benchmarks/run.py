@@ -69,6 +69,19 @@ def bench_serving_latency(exp, reward_params, reward_cfg) -> list[dict]:
     ]
 
 
+def bench_chain_sim_row() -> list[dict]:
+    """Rank-based chain simulator vs the seed per-chain loop (the same
+    measurement as benchmarks/bench_chain_sim.py, summarized as one row;
+    the standalone script also writes BENCH_chain_sim.json)."""
+    from benchmarks import bench_chain_sim
+
+    r = bench_chain_sim.run(repeats=3)
+    return [{"name": "chain_sim_U160_I200_J128",
+             "us": round(r["vectorized_s"] * 1e6, 1),
+             "speedup_vs_seed": r["speedup_vs_seed"],
+             "exact": r["exact_match_vs_reference"]}]
+
+
 def bench_kernels() -> list[dict]:
     """Interpret-mode wall time is NOT TPU perf; reported for harness
     completeness with the jnp-reference ratio as `derived`."""
@@ -145,6 +158,7 @@ def main() -> None:
             _emit(rows, time.time() - t0)
 
     _emit(bench_serving_latency(exp, rp, rc), 0.0)
+    _emit(bench_chain_sim_row(), 0.0)
     _emit(bench_kernels(), 0.0)
 
     # roofline summary (requires a completed dry-run; silent if absent)

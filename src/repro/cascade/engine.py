@@ -1,14 +1,59 @@
-"""Cascade execution engine (paper §5.1 protocol).
+"""Cascade execution engine (paper §5.1 protocol), rank-based + vectorized.
 
 Offline protocol: per evaluation user, every stage model scores the whole
 corpus ONCE (jitted, batched); evaluating an action chain is then pure
 ranking arithmetic over precomputed score vectors - exactly the paper's
 "simulate different action chains for each user" procedure, and it makes
-the J=128-chain sweep cheap.
+the J-chain sweep cheap.
 
-Online serving (`CascadeServer`): requests are grouped by allocated chain
-and each group executes the (statically-shaped) bucketed pipeline - the
-TPU-idiomatic form of per-request item scales (DESIGN.md §3).
+THE RANK-BASED SIMULATION TRICK
+-------------------------------
+Every chain truncates the candidate set along the SAME per-model orderings;
+only the truncation thresholds (n_2, n_3, e) and the rank-stage model
+differ.  So instead of re-running top-k selection per chain (the seed ran
+``np.argpartition`` over the full (U, I) score matrices J times), chain
+evaluation becomes *rank-threshold arithmetic* over shared orderings:
+walking a stage's order, a candidate survives iff fewer than ``keep_k``
+survivors precede it - an exclusive cumulative sum of the survivor mask.
+
+The fast path for the paper's 3-stage layout (``_simulate_k3_numpy``)
+pushes this further with three structural facts:
+
+  1. only the RECALL stage needs a full-corpus argsort: later stages rank
+     candidates relative to each other, and sorting a candidate list by
+     (-score, item_id) reproduces the global stable descending order
+     restricted to that list, exactly;
+  2. chains sharing (rank model, n2) differ only in n3, and the stage-1
+     survivor list for n3 is a PREFIX of the list for any larger n3 - so
+     one compact candidate list of length cap = max(n3) per distinct n2
+     serves every chain, and all per-chain work runs on (U, cap) arrays,
+     nearly independent of corpus size and amortized over all J chains
+     (O(U*I*log I) once + O(U*J*cap) thresholds, vs the seed's
+     O(J*U*I) partial sorts with Python-loop overhead);
+  3. every step is independent per user, so the user axis shards across
+     cores.
+
+For float32 scores the (-score, id) sort packs both keys into one int64
+via an order-preserving bit map (one stable argsort instead of a
+two-pass lexsort).  Generic chain layouts and accelerator execution use
+the jitted kernels (``_revenue_all_chains``: a ``lax.scan`` over chains
+of gather/cumsum/scatter rounds on precomputed orders; CascadeServer's
+``_revenue_requests``: the same per (user, chain) pair).  A brute-force
+NumPy implementation of the SAME semantics (``run_chain`` /
+``simulate_revenue_matrix_reference``) is the oracle; the vectorized
+matrix is bit-identical to it (tested, including tie and signed-zero
+cases).
+
+Truncation semantics (unified; fixes the seed's stage-1/stage-2
+``argpartition`` kth inconsistency): every stage keeps the first
+``keep_k`` *surviving* items along the stage model's global descending
+stable order, ties broken by item id.  ``keep > #survivors`` degrades to
+"keep all" (the n3 >= n2 edge), and the exposure stage is just one more
+truncation with ``keep = e``.
+
+Online serving (`CascadeServer`): requests carry per-request chain ids;
+one batched jitted kernel evaluates every (user, chain) pair in a single
+pass - no per-chain-group NumPy recomputation (DESIGN.md §3).
 
 Scoring truncated candidate sets uses TOP-K SELECTION ON SCORES from the
 upstream stage; clicks are ground-truth sampled once per (user, item) so
@@ -16,7 +61,10 @@ revenue@e is deterministic given the seed.
 """
 from __future__ import annotations
 
+import os
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +72,21 @@ import numpy as np
 
 from repro.core.action_chain import ActionChainSet
 from repro.models.recsys import dien, din, dssm, ydnn
+
+_POOL: ThreadPoolExecutor | None = None
+_POOL_WORKERS = 0
+
+
+def _shared_pool(n_workers: int) -> ThreadPoolExecutor:
+    """Lazy module-level pool: thread spawn costs milliseconds on small
+    hosts, comparable to one whole simulation call."""
+    global _POOL, _POOL_WORKERS
+    if _POOL is None or _POOL_WORKERS < n_workers:
+        if _POOL is not None:
+            _POOL.shutdown(wait=False)
+        _POOL = ThreadPoolExecutor(max_workers=n_workers)
+        _POOL_WORKERS = n_workers
+    return _POOL
 
 
 @dataclass
@@ -58,8 +121,12 @@ def precompute_stage_scores(models: CascadeModels, world, users: np.ndarray,
     item_cats = jnp.asarray(world.item_cat, jnp.int32)
     ub = _user_batch(world, users)
 
-    # user fields for the recall/prerank towers use the raw field ids
-    dssm_item_fields = jnp.stack([item_ids, item_cats], axis=-1)  # (I, 2)
+    # user fields for the recall/prerank towers use the raw field ids;
+    # the recall item tower sees (category,) or (id, category) per its cfg
+    if models.dssm_cfg.n_item_fields == 1:
+        dssm_item_fields = jnp.stack([item_cats], axis=-1)  # (I, 1)
+    else:
+        dssm_item_fields = jnp.stack([item_ids, item_cats], axis=-1)  # (I, 2)
 
     @jax.jit
     def dssm_all(uf):
@@ -102,38 +169,151 @@ def precompute_stage_scores(models: CascadeModels, world, users: np.ndarray,
     return scores
 
 
+# ---------------------------------------------------------------------------
+# Shared sorted orderings (computed once, reused by every chain)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RankedScores:
+    """Per-model global item orderings shared by all chains.
+
+    ``orders[m, u]`` lists item ids in descending score order of model
+    ``names[m]`` for user ``u`` (stable: ties break by item id);
+    ``ranks[m, u]`` is the inverse permutation (item id -> position).
+    """
+
+    names: tuple  # (M,) model names, axis-0 of orders/ranks
+    orders: np.ndarray  # (M, U, I) int32
+    ranks: np.ndarray  # (M, U, I) int32
+
+    @property
+    def slot(self) -> dict:
+        return {n: m for m, n in enumerate(self.names)}
+
+
+def rank_stage_scores(stage_scores: dict) -> RankedScores:
+    """Stable-argsort every stage model's scores once -> RankedScores."""
+    names = tuple(stage_scores)
+    mats = [np.asarray(stage_scores[n]) for n in names]
+    u, i = mats[0].shape
+    orders = np.empty((len(names), u, i), np.int32)
+    ranks = np.empty_like(orders)
+    pos = np.broadcast_to(np.arange(i, dtype=np.int32), (u, i))
+    for m, s in enumerate(mats):
+        o = np.argsort(-s, axis=1, kind="stable").astype(np.int32)
+        orders[m] = o
+        np.put_along_axis(ranks[m], o, pos, axis=1)
+    return RankedScores(names, orders, ranks)
+
+
+def chain_plan(chains: ActionChainSet, slot: dict, *, expose: int,
+               n_items: int) -> tuple[np.ndarray, np.ndarray]:
+    """Compile the chain set against a RankedScores slot map.
+
+    Returns (model_slots (J, K) int32, keeps (J, K) int32): stage k of
+    chain j scores with model ``model_slots[j, k]`` and keeps the first
+    ``keeps[j, k]`` survivors of its ordering.  keeps[:, 0] folds the
+    stage-0 scale n_1 in (top-n1 then top-n2 by the same score is
+    top-min(n1, n2)); the last stage keeps ``expose``.
+    """
+    j_n, k_n = chains.chain_idx.shape[:2]
+    slots = np.zeros((j_n, k_n), np.int32)
+    keeps = np.zeros((j_n, k_n), np.int32)
+    for j in range(j_n):
+        for k in range(k_n):
+            mi = int(chains.chain_idx[j, k, 0])
+            slots[j, k] = slot[chains.stages[k].models[mi].name]
+            if k < k_n - 1:
+                keeps[j, k] = int(chains.scale_value[j, k + 1])
+            else:
+                keeps[j, k] = expose
+        keeps[j, 0] = min(keeps[j, 0], int(chains.scale_value[j, 0]),
+                          n_items)
+    return slots, keeps
+
+
+def _k3_layout(chains: ActionChainSet, *, n_items: int):
+    """Compile the chain set for the specialized 3-stage kernel, or None.
+
+    Applicable when recall and prerank have single-model pools (the paper
+    layout); the rank stage may pool any number of models.  Chains are
+    grouped by their (rank model, effective n2) pair: members of a group
+    share the whole stage-0/1 rank arithmetic and differ only in the n3
+    threshold, so the group structure is STATIC in the jitted kernel (no
+    per-chain dynamic slicing - the XLA:CPU killer).
+    """
+    if chains.n_stages != 3:
+        return None
+    if chains.stages[0].n_models != 1 or chains.stages[1].n_models != 1:
+        return None
+    keep0 = np.minimum(chains.scale_value[:, 1],
+                       np.minimum(chains.scale_value[:, 0],
+                                  n_items)).astype(np.int64)
+    n2_vals, n2_idx = np.unique(keep0, return_inverse=True)
+    m_idx = chains.chain_idx[:, 2, 0].astype(np.int64)
+    n3 = chains.scale_value[:, 2].astype(np.int64)
+    groups = {}
+    for j in range(chains.n_chains):
+        groups.setdefault((int(m_idx[j]), int(n2_idx[j])), []).append(j)
+    group_key = tuple(  # one (rank_model, n2, (n3, ...)) tuple per group
+        (mi, int(n2_vals[n2i]), tuple(int(n3[j]) for j in js))
+        for (mi, n2i), js in sorted(groups.items()))
+    chain_order = np.asarray(
+        [j for _, js in sorted(groups.items()) for j in js], np.int64)
+    return {
+        "group_key": group_key,
+        "chain_order": chain_order,  # kernel row -> chain id
+        "stage_names": (chains.stages[0].models[0].name,
+                        chains.stages[1].models[0].name,
+                        tuple(m.name for m in chains.stages[2].models)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference (the oracle the vectorized kernel is tested against)
+# ---------------------------------------------------------------------------
+
+
+def _truncate_np(surv: np.ndarray, order: np.ndarray, rank: np.ndarray,
+                 keep: int) -> np.ndarray:
+    """Keep the first ``keep`` survivors along ``order`` (one stage)."""
+    so = np.take_along_axis(surv, order, axis=1)
+    q = np.cumsum(so, axis=1) - so  # exclusive: survivors strictly before
+    so &= q < keep
+    return np.take_along_axis(so, rank, axis=1)
+
+
 def run_chain(stage_scores: dict, chain_desc: tuple, clicks: np.ndarray,
               *, expose: int = 20) -> np.ndarray:
-    """One chain for all users.
+    """One chain for all users - NumPy reference implementation.
 
     chain_desc = (n1, n2, n3, rank_model_name); clicks (U, I) ground truth.
     Returns per-user revenue@expose (clicks among exposed items).
+
+    Semantics (shared with the vectorized engine): each stage keeps the
+    first ``keep`` surviving items along the stage model's descending
+    stable order (ties by item id); keeps are (min(n1, n2), n3, expose).
     """
     n1, n2, n3, rank_name = chain_desc
-    u = clicks.shape[0]
-    s1 = stage_scores["DSSM"]
-    # stage 1 keeps top-n2 (it scored n1 = corpus)
-    keep2 = np.argpartition(-s1, kth=min(n2, s1.shape[1] - 1), axis=1)[:, :n2]
-    s2 = np.take_along_axis(stage_scores["YDNN"], keep2, axis=1)
-    # stage 2 keeps top-n3 of its n2
-    k3 = min(n3, n2)
-    idx3 = np.argpartition(-s2, kth=min(k3, s2.shape[1] - 1) - 1,
-                           axis=1)[:, :k3]
-    keep3 = np.take_along_axis(keep2, idx3, axis=1)
-    s3 = np.take_along_axis(stage_scores[rank_name], keep3, axis=1)
-    # final exposure: top-`expose` of the n3
-    e = min(expose, k3)
-    idx_e = np.argsort(-s3, axis=1)[:, :e]
-    exposed = np.take_along_axis(keep3, idx_e, axis=1)
-    return np.take_along_axis(clicks, exposed, axis=1).sum(axis=1)
+    i = clicks.shape[1]
+    surv = np.ones(clicks.shape, bool)
+    pos = np.broadcast_to(np.arange(i, dtype=np.int32), clicks.shape)
+    for name, keep in (("DSSM", min(int(n1), int(n2))), ("YDNN", int(n3)),
+                       (rank_name, int(expose))):
+        order = np.argsort(-np.asarray(stage_scores[name]), axis=1,
+                           kind="stable").astype(np.int32)
+        rank = np.empty_like(order)
+        np.put_along_axis(rank, order, pos, axis=1)
+        surv = _truncate_np(surv, order, rank, keep)
+    return (surv * clicks).sum(axis=1).astype(np.float32)
 
 
-def simulate_revenue_matrix(stage_scores: dict, chains: ActionChainSet,
-                            clicks: np.ndarray, *, expose: int = 20):
-    """Ground-truth revenue of EVERY chain for every user -> (U, J).
-
-    This is the paper's training-sample generation for the reward model
-    (and the oracle for evaluating allocations)."""
+def simulate_revenue_matrix_reference(stage_scores: dict,
+                                      chains: ActionChainSet,
+                                      clicks: np.ndarray, *,
+                                      expose: int = 20) -> np.ndarray:
+    """Per-chain loop over ``run_chain`` - the brute-force oracle."""
     u = clicks.shape[0]
     out = np.zeros((u, chains.n_chains), np.float32)
     k_rank = chains.n_stages - 1
@@ -148,30 +328,255 @@ def simulate_revenue_matrix(stage_scores: dict, chains: ActionChainSet,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Vectorized jitted kernels
+# ---------------------------------------------------------------------------
+#
+# Two paths:
+#   * `_revenue_matrix_k3` - the paper cascade layout (3 stages, single
+#     recall/prerank models, a rank-stage model pool).  All (U, I) gathers
+#     are hoisted OUT of the per-chain loop: survivor counts are
+#     precomputed per DISTINCT n2 threshold (a handful) and per rank
+#     model, so one chain costs compares + one cumsum + one masked sum -
+#     XLA:CPU gathers are what made the naive per-chain loop slow.
+#   * `_revenue_all_chains` - generic K-stage fallback (any pool layout).
+
+
+def _desc_perm(scores: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Indirect sort of the last axis by (-score, id) - the restriction of
+    the global stable descending order to an arbitrary candidate list.
+
+    float32 scores take a single-key path: an order-preserving bit trick
+    packs (score, id) into one int64 so one stable argsort replaces the
+    two indirect sorts of np.lexsort (ids must be < 2^31, scores finite
+    or -inf).  Other dtypes fall back to np.lexsort.
+    """
+    if scores.dtype == np.float32:
+        s = scores + 0.0  # canonicalize -0.0 to +0.0
+        b = s.view(np.int32)
+        mono = b ^ ((b >> 31) & np.int32(0x7FFFFFFF))  # float order -> int
+        key = ((~mono).astype(np.int64) << 32) + ids
+        return np.argsort(key, axis=-1, kind="stable")
+    return np.lexsort((ids, -scores), axis=-1)
+
+
+def _simulate_k3_numpy(stage_scores: dict, lay: dict, clicks: np.ndarray,
+                       *, expose: int,
+                       order1: np.ndarray | None = None) -> np.ndarray:
+    """Compaction-based CPU path for the paper cascade layout -> (U, J).
+
+    Two structural facts make the sweep nearly independent of both the
+    corpus size and the chain count after ONE full argsort:
+
+    * only the recall stage needs a global ordering - every later stage
+      only ranks candidates RELATIVE to each other, so ordering the
+      compact candidate lists by (-score, item_id) lexsort reproduces
+      the global stable order restricted to the list, exactly;
+    * the stage-1 survivor list for threshold n3 is a PREFIX of the list
+      for any larger n3 (both walk the same prerank order), so one
+      compact list of length cap = max(n3) per distinct n2 serves every
+      chain, and all chain arithmetic runs on (U, cap) arrays.
+    """
+    m0, m1, mr = lay["stage_names"]
+    u_n, i_n = clicks.shape
+    gk = lay["group_key"]
+    n2_list = sorted({g[1] for g in gk})
+    n2_pos = {n2: k for k, n2 in enumerate(n2_list)}
+    n2_max = n2_list[-1]
+    cap = min(n2_max, max(max(g[2]) for g in gk))
+    cdt = np.int16 if i_n < 2 ** 15 else np.int32  # count dtype
+    qdt = np.int8 if max(cap, expose) < 127 else cdt  # survivor counts
+    # flat-gather offsets in intp: M*U*I can exceed int32 at large worlds
+    rows_off = (np.arange(u_n, dtype=np.intp) * i_n)[:, None]
+
+    if order1 is None:
+        order1 = np.argsort(-np.asarray(stage_scores[m0]), axis=1,
+                            kind="stable")
+
+    # candidate universe: the top-n2_max recall items, ordered by the
+    # prerank model ((-score, id) == the global stable order restricted)
+    cands = order1[:, :n2_max].astype(np.int32)  # (U, C); stage-0 rank = c
+    sy = np.take(np.asarray(stage_scores[m1]).ravel(), cands + rows_off)
+    yperm = _desc_perm(sy, cands)  # (U, C)
+    l_items = np.take_along_axis(cands, yperm, axis=1)
+    r1_l = yperm.astype(cdt)  # stage-0 rank of entry == pre-perm column
+
+    # per distinct n2 (batched): compact the first-cap stage-1 survivors
+    s1 = r1_l[None, :, :] < np.asarray(n2_list, cdt)[:, None, None]
+    q2 = np.cumsum(s1, axis=2, dtype=cdt) - s1  # exclusive survivor count
+    # q2 of the k-th survivor is exactly k -> it is the compact slot
+    slot = np.where(s1 & (q2 < cap), q2, cdt(cap))
+    scat = np.full((len(n2_list), u_n, cap + 1), n2_max, cdt)
+    np.put_along_axis(
+        scat, slot,
+        np.broadcast_to(np.arange(n2_max, dtype=cdt), slot.shape), axis=2)
+    lpos = scat[:, :, :cap]  # positions into the prerank-ordered list
+    lvalid = lpos < n2_max
+    lpos_c = np.minimum(lpos, cdt(n2_max - 1))
+
+    # per group = (rank model, n2): order each compact list by the rank
+    # model ((-score, id) again); invalid tail slots sink via -inf
+    g_n = len(gk)
+    n2_of_g = np.asarray([n2_pos[n2] for _, n2, _ in gk], np.intp)
+    m_of_g = np.asarray([mi for mi, _, _ in gk], np.intp)
+    g_items = np.take_along_axis(l_items[None], lpos_c, axis=2)[n2_of_g]
+    g_valid = lvalid[n2_of_g]
+    # keep the native score dtype: a float64->float32 downcast could merge
+    # scores that are distinct in float64 and change tie-breaking vs the
+    # reference (exactness guarantee)
+    scores_r = np.stack([np.asarray(stage_scores[n]) for n in mr])
+    g_scores = np.take(scores_r.ravel(),
+                       g_items + ((m_of_g * (u_n * i_n))[:, None, None]
+                                  + rows_off[None]))
+    g_scores[~g_valid] = -np.inf  # invalid tail slots sort last
+    mperm = _desc_perm(g_scores, g_items)  # (G, U, cap)
+    # survivor prefix-position of each entry (sentinel cap for invalid)
+    p_sorted = np.where(np.take_along_axis(g_valid, mperm, axis=2),
+                        mperm.astype(qdt), qdt(cap))
+    g_clicks = np.take(clicks.ravel(), g_items + rows_off[None]) * g_valid
+    clicks_sorted = np.take_along_axis(g_clicks, mperm, axis=2)
+
+    # all chains batched: chain n3 keeps prefix positions < n3; exposure
+    # is the first `expose` of those in rank-model order
+    k_max = max(len(g[2]) for g in gk)
+    n3_pad = np.zeros((g_n, k_max), qdt)
+    for g, (_, _, n3list) in enumerate(gk):
+        n3_pad[g, :len(n3list)] = [min(n, cap) for n in n3list]
+    mask = p_sorted[:, None, :, :] < n3_pad[:, :, None, None]
+    q3 = np.cumsum(mask, axis=3, dtype=qdt)  # inclusive survivor count
+    mask &= q3 <= expose  # exposed: among the first `expose` survivors
+    rev = np.einsum("gkuc,guc->gku", mask, clicks_sorted)
+    rows = [rev[g, :len(n3list)]
+            for g, (_, _, n3list) in enumerate(gk)]
+    return np.concatenate(rows, axis=0)  # (J, U) in group order
+
+
+@partial(jax.jit, static_argnames=("n_stages",))
+def _revenue_all_chains(orders, ranks, clicks, slots, keeps, *, n_stages):
+    """(U, J) revenue matrix in one lax.scan over chains.
+
+    orders/ranks (M, U, I) int32; clicks (U, I) f32; slots/keeps (J, K).
+    Each scan step is fully vectorized over users; memory stays O(U*I).
+    """
+
+    def one_chain(_, jparams):
+        slot, keep = jparams  # (K,), (K,)
+        surv = jnp.ones(clicks.shape, jnp.bool_)
+        for k in range(n_stages):
+            o = orders[slot[k]]
+            r = ranks[slot[k]]
+            so = jnp.take_along_axis(surv, o, axis=1)
+            q = jnp.cumsum(so.astype(jnp.int32), axis=1) - so
+            so = so & (q < keep[k])
+            surv = jnp.take_along_axis(so, r, axis=1)
+        return _, jnp.sum(jnp.where(surv, clicks, 0.0), axis=1)
+
+    _, rev = jax.lax.scan(one_chain, 0, (slots, keeps))
+    return rev.T  # (U, J)
+
+
+@partial(jax.jit, static_argnames=("n_stages",))
+def _revenue_requests(orders, ranks, clicks, slots, keeps, rows, *,
+                      n_stages):
+    """Per-request revenue: request b = (user rows[b], chain slots/keeps[b]).
+
+    One batched pass over all requests - chains need not be grouped.
+    """
+
+    def one(row, slot, keep):
+        surv = jnp.ones((clicks.shape[1],), jnp.bool_)
+        for k in range(n_stages):
+            o = orders[slot[k], row]
+            r = ranks[slot[k], row]
+            so = jnp.take(surv, o)
+            q = jnp.cumsum(so.astype(jnp.int32)) - so
+            so = so & (q < keep[k])
+            surv = jnp.take(so, r)
+        return jnp.sum(jnp.where(surv, clicks[row], 0.0))
+
+    return jax.vmap(one)(rows, slots, keeps)
+
+
+def simulate_revenue_matrix(stage_scores: dict, chains: ActionChainSet,
+                            clicks: np.ndarray, *, expose: int = 20,
+                            ranked: RankedScores | None = None) -> np.ndarray:
+    """Ground-truth revenue of EVERY chain for every user -> (U, J).
+
+    This is the paper's training-sample generation for the reward model
+    (and the oracle for evaluating allocations).  Rank-based vectorized
+    path; matches ``simulate_revenue_matrix_reference`` exactly.
+    """
+    lay = _k3_layout(chains, n_items=clicks.shape[1])
+    if lay is not None:  # paper cascade layout: compaction fast path
+        order1 = (ranked.orders[ranked.slot[lay["stage_names"][0]]]
+                  if ranked is not None else None)
+        clicks32 = np.asarray(clicks, np.float32)
+        u_n = clicks.shape[0]
+        # every step is independent per user: shard the user axis across
+        # cores (numpy releases the GIL in sorts/ufuncs/gathers)
+        n_w = max(1, min(os.cpu_count() or 1, u_n // 64))
+        if n_w > 1:
+            # a whole multiple of the worker count keeps rounds balanced;
+            # 2x oversharding (when shards stay >=64 users) lets a free
+            # worker pick up slack if a core is stolen mid-call
+            n_shards = n_w * (2 if u_n // (2 * n_w) >= 64 else 1)
+            bounds = np.linspace(0, u_n, n_shards + 1).astype(int)
+            parts = list(_shared_pool(n_w).map(
+                lambda b: _simulate_k3_numpy(
+                    {k: v[b[0]:b[1]] for k, v in stage_scores.items()},
+                    lay, clicks32[b[0]:b[1]], expose=expose,
+                    order1=(order1[b[0]:b[1]]
+                            if order1 is not None else None)),
+                zip(bounds[:-1], bounds[1:])))
+            grouped = np.concatenate(parts, axis=1)
+        else:
+            grouped = _simulate_k3_numpy(stage_scores, lay, clicks32,
+                                         expose=expose, order1=order1)
+        out = np.empty((u_n, chains.n_chains), np.float32)
+        out[:, lay["chain_order"]] = grouped.T
+        return out
+    ranked = ranked or rank_stage_scores(stage_scores)
+    slots, keeps = chain_plan(chains, ranked.slot, expose=expose,
+                              n_items=clicks.shape[1])
+    rev = _revenue_all_chains(
+        jnp.asarray(ranked.orders), jnp.asarray(ranked.ranks),
+        jnp.asarray(clicks, jnp.float32), jnp.asarray(slots),
+        jnp.asarray(keeps), n_stages=chains.n_stages)
+    return np.asarray(rev)
+
+
 @dataclass
 class CascadeServer:
-    """Online path: execute allocated chains, grouped by chain id."""
+    """Online path: execute allocated chains for a request batch.
+
+    The same rank-based kernel as offline simulation, vmapped over
+    requests: per-request chain ids go straight into one jitted pass
+    (the seed grouped requests by chain and re-ran NumPy top-k per
+    group)."""
 
     stage_scores: dict  # precomputed for the serving user universe
     chains: ActionChainSet
     clicks: np.ndarray
     expose: int = 20
 
+    def __post_init__(self):
+        self._ranked = rank_stage_scores(self.stage_scores)
+        self._slots, self._keeps = chain_plan(
+            self.chains, self._ranked.slot, expose=self.expose,
+            n_items=self.clicks.shape[1])
+        self._orders = jnp.asarray(self._ranked.orders)
+        self._ranks = jnp.asarray(self._ranked.ranks)
+        self._clicks = jnp.asarray(self.clicks, jnp.float32)
+
     def serve(self, user_rows: np.ndarray, decisions: np.ndarray):
         """user_rows: indices into the score matrices; decisions: (B,)
         chain ids.  Returns (revenue (B,), flops (B,))."""
-        revenue = np.zeros(len(user_rows), np.float32)
-        k_rank = self.chains.n_stages - 1
-        for j in np.unique(decisions):
-            sel = decisions == j
-            rows = user_rows[sel]
-            n1 = int(self.chains.scale_value[j, 0])
-            n2 = int(self.chains.scale_value[j, 1])
-            n3 = int(self.chains.scale_value[j, 2])
-            mi = int(self.chains.chain_idx[j, k_rank, 0])
-            rank_name = self.chains.stages[k_rank].models[mi].name
-            sub_scores = {k: v[rows] for k, v in self.stage_scores.items()}
-            revenue[sel] = run_chain(sub_scores, (n1, n2, n3, rank_name),
-                                     self.clicks[rows], expose=self.expose)
+        decisions = np.asarray(decisions, np.int32)
+        rev = _revenue_requests(
+            self._orders, self._ranks, self._clicks,
+            jnp.asarray(self._slots[decisions]),
+            jnp.asarray(self._keeps[decisions]),
+            jnp.asarray(np.asarray(user_rows, np.int32)),
+            n_stages=self.chains.n_stages)
         flops = self.chains.costs[decisions]
-        return revenue, flops
+        return np.asarray(rev), flops

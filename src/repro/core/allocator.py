@@ -21,8 +21,8 @@ from repro.core.budget import BudgetController
 from repro.core.flops import mlp_flops
 from repro.core.pfec import PFECReport, pfec_report
 from repro.core.primal_dual import DualDescentConfig
-from repro.core.reward_model import (RewardModelConfig, reward_matrix,
-                                     N_BASIS)
+from repro.core.reward_model import (RewardModelConfig, denormalize_rewards,
+                                     reward_matrix, N_BASIS)
 
 
 @dataclass
@@ -39,9 +39,15 @@ class GreenFlowAllocator:
             self.chains, self.budget_per_window, self.dual_cfg, self.guard)
         self._chain_mo = jnp.asarray(self.chains.model_onehot)
         self._chain_sh = jnp.asarray(self.chains.scale_multihot)
-        self._reward_fn = jax.jit(
-            lambda params, ctx: reward_matrix(
-                params, self.reward_cfg, ctx, self._chain_mo, self._chain_sh))
+
+        def _fn(params, ctx):
+            r = reward_matrix(params, self.reward_cfg, ctx, self._chain_mo,
+                              self._chain_sh)
+            # ratio-normalized training (core.reward_model): predictions
+            # must scale back to revenue units before meeting chain costs
+            return denormalize_rewards(params, r)
+
+        self._reward_fn = jax.jit(_fn)
         self._total_self_flops = 0.0
         self._total_spend = 0.0
         self._n_requests = 0

@@ -181,6 +181,34 @@ def reward_matrix(params: dict, cfg: RewardModelConfig,
 
 
 # ---------------------------------------------------------------------------
+# Per-chain label normalization (ratio targets)
+# ---------------------------------------------------------------------------
+#
+# The multi-basis head is non-negative and monotone by construction, so the
+# model cannot regress SIGNED residuals.  Instead the trainer fits the ratio
+# y_uj = rev_uj / mean_u(rev_uj): the per-chain mean reward curve is
+# measured exactly from simulation and stored in params["label_norm"]; the
+# network only learns per-user deviations (the heterogeneity GreenFlow
+# allocates on), and predictions de-normalize back to revenue units.
+
+
+def chain_label_norm(revenue: np.ndarray, floor: float = 1e-3) -> np.ndarray:
+    """Per-chain mean revenue over training users -> (J,) norm vector."""
+    return np.maximum(np.asarray(revenue).mean(axis=0), floor) \
+        .astype(np.float32)
+
+
+def denormalize_rewards(params: dict, r):
+    """Scale ratio predictions (.., J) back to revenue units, if the
+    params carry a ``label_norm`` (no-op otherwise).  Backend-agnostic:
+    works on numpy arrays and inside jit on tracers alike."""
+    norm = params.get("label_norm")
+    if norm is None:
+        return r
+    return r * norm[None, :]
+
+
+# ---------------------------------------------------------------------------
 # Training loss + calibration metric
 # ---------------------------------------------------------------------------
 

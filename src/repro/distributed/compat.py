@@ -1,0 +1,65 @@
+"""Version compatibility for jax mesh / shard_map APIs.
+
+The codebase is written against the explicit-sharding era APIs
+(``jax.set_mesh``, ``jax.sharding.AxisType``, ``jax.shard_map`` with
+``check_vma``); older runtimes (jax 0.4.x) expose the same machinery as
+the legacy global-mesh context manager, ``jax.experimental.shard_map``
+(``check_rep``) and ``jax.make_mesh`` without ``axis_types``.  Everything
+mesh-shaped in this repo goes through the four helpers here so a single
+source tree runs on both.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """``jax.make_mesh`` with Auto axis types when the runtime has them."""
+    shape, axes = tuple(shape), tuple(axes)
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` or the legacy ``with mesh:``."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` or the experimental one (check_vma ~ check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def current_mesh():
+    """The ambient mesh (set_mesh or legacy context), or None."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except AttributeError:
+        pass
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        if m is not None and m.axis_names and not m.empty:
+            return m
+    except (ImportError, AttributeError):
+        pass
+    return None

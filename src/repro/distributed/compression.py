@@ -75,10 +75,12 @@ def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, n: int,
 # ---------------------------------------------------------------------------
 
 
-def _ring_allreduce_int8_body(x, *, axis: str, block: int):
+def _ring_allreduce_int8_body(x, *, axis: str, size: int, block: int):
     """x: (n,) identical-shape local shard contribution. Classic 2(S-1)-step
-    ring: reduce-scatter (quantized hops) then all-gather (quantized)."""
-    s = jax.lax.axis_size(axis)
+    ring: reduce-scatter (quantized hops) then all-gather (quantized).
+    ``size`` is the static axis size (the caller reads it off the mesh;
+    jax.lax.axis_size is not available on every supported jax)."""
+    s = size
     me = jax.lax.axis_index(axis)
     n = x.shape[0]
     chunk = -(-n // s)  # ceil
@@ -116,9 +118,12 @@ def ring_allreduce_int8(flat_grads, mesh, *, axis: str = "data",
                         block: int = 2048):
     """Sum ``flat_grads`` (replicated layout, per-device distinct values is
     the caller's contract under shard_map-of-training) across ``axis``."""
-    body = partial(_ring_allreduce_int8_body, axis=axis, block=block)
-    return jax.shard_map(body, mesh=mesh, in_specs=P(axis),
-                         out_specs=P(axis), check_vma=False)(flat_grads)
+    from repro.distributed.compat import shard_map
+
+    body = partial(_ring_allreduce_int8_body, axis=axis,
+                   size=int(mesh.shape[axis]), block=block)
+    return shard_map(body, mesh=mesh, in_specs=P(axis),
+                     out_specs=P(axis), check_vma=False)(flat_grads)
 
 
 # ---------------------------------------------------------------------------

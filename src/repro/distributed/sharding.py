@@ -17,15 +17,7 @@ from jax.sharding import PartitionSpec as P
 BATCH_AXES = ("pod", "data")  # logical batch axis = pod x data
 
 
-def current_mesh():
-    """The mesh from the ambient jax.set_mesh context, or None."""
-    try:
-        m = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return None
-    if m is None or not m.axis_names:
-        return None
-    return m
+from repro.distributed.compat import current_mesh  # noqa: F401 (re-export)
 
 
 def mesh_axes(mesh=None) -> tuple:

@@ -11,13 +11,15 @@ importing this module touches no jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.compat import make_mesh, mesh_context  # noqa: F401
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def resolve_spec(spec, mesh):

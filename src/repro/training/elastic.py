@@ -45,9 +45,8 @@ class ElasticController:
         self.events: list[ElasticEvent] = []
 
     def make_mesh(self, shape: tuple):
-        from jax.sharding import AxisType
-        return jax.make_mesh(tuple(shape), self.axis_names,
-                             axis_types=(AxisType.Auto,) * len(shape))
+        from repro.distributed.compat import make_mesh
+        return make_mesh(tuple(shape), self.axis_names)
 
     def remesh_restore(self, ckpt_dir: str, target_state, shardings,
                        old_shape: tuple, new_shape: tuple):

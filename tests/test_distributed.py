@@ -14,7 +14,10 @@ def _run(script: str, timeout=420) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # force the host platform: the device-count flag shards the CPU
+    # backend, and probing for an accelerator backend can hang for
+    # minutes on machines with a TPU runtime but no TPU (metadata retry)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
                          capture_output=True, text=True, timeout=timeout,
                          env=env)
@@ -30,16 +33,16 @@ def test_distributed_semantics_bundle():
     (data, model) mesh."""
     out = _run("""
     import jax, jax.numpy as jnp, numpy as np, tempfile
-    from jax.sharding import PartitionSpec as P, AxisType
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.compat import make_mesh, mesh_context
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     # 1) sharded embedding lookup == plain take
     from repro.models.embedding import sharded_embedding_apply
     table = jax.random.normal(jax.random.PRNGKey(0), (40, 8))
     ids = jax.random.randint(jax.random.PRNGKey(1), (16,), 0, 40)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         got = jax.jit(lambda t, i: sharded_embedding_apply(
             t, i, mesh, axis="model", batch_axes=("data",)))(table, ids)
     assert np.allclose(np.asarray(got), np.asarray(table)[np.asarray(ids)],
@@ -57,7 +60,7 @@ def test_distributed_semantics_bundle():
     p = lm.init(jax.random.PRNGKey(2), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(3), (4, 8), 0, 64)
     ref, _ = lm.forward(p, cfg, toks)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         got, _ = jax.jit(lambda pp, t: lm.forward(pp, cfg, t))(p, toks)
     err = float(jnp.abs(ref - got).max())
     assert err < 1e-4, f"EP MoE err {err}"
@@ -70,7 +73,7 @@ def test_distributed_semantics_bundle():
                        fsdp=True, sequence_parallel=True)
     dp = lm.init(jax.random.PRNGKey(4), dcfg)
     ref, _ = lm.forward(dp, dcfg, toks)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         got, _ = jax.jit(lambda pp, t: lm.forward(pp, dcfg, t))(dp, toks)
     err = float(jnp.abs(ref - got).max())
     assert err < 1e-4, f"dense LM err {err}"
@@ -114,13 +117,12 @@ def test_mini_dryrun_smoke_arch():
     background deliverable."""
     out = _run("""
     import jax, numpy as np
-    from jax.sharding import AxisType
     from repro.configs import get_arch
     from repro.launch.dryrun import _measure
     from repro.launch.mesh import tree_named_shardings
+    from repro.distributed.compat import make_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     cell = get_arch("greenflow-cascade").make_cell("reward_serve")
     rec = _measure(cell, mesh)
     assert rec["cost_analysis"]["flops"] > 0

@@ -11,32 +11,26 @@ Claim chain tested here (paper §5.2):
 import numpy as np
 import pytest
 
-from repro.data.synthetic import WorldConfig
-from repro.experiments import (ExperimentConfig, build_experiment,
-                               cras_stage_rewards, evaluate_methods,
-                               predicted_rewards, reward_model_metrics,
-                               train_reward_model)
+from repro.experiments import (cras_stage_rewards, evaluate_methods,
+                               predicted_rewards, reward_model_metrics)
 
-CFG = ExperimentConfig(
-    world=WorldConfig(n_users=800, n_items=200, hist_len=10, seed=3),
-    expose=8, n_scales=4, cascade_steps=120, reward_steps=300, batch=48)
+
+# the expensive experiment build is session-scoped (tests/conftest.py) so
+# other modules (and reruns within one session) share it
+@pytest.fixture(scope="module")
+def exp(system_exp):
+    return system_exp
 
 
 @pytest.fixture(scope="module")
-def exp():
-    return build_experiment(CFG)
-
-
-@pytest.fixture(scope="module")
-def reward(exp):
-    params, rcfg = train_reward_model(exp)
-    return params, rcfg
+def reward(system_reward):
+    return system_reward
 
 
 def test_revenue_matrix_sane(exp):
     assert exp.revenue_eval.shape[1] == exp.chains.n_chains
     assert (exp.revenue_eval >= 0).all()
-    assert exp.revenue_eval.max() <= CFG.expose
+    assert exp.revenue_eval.max() <= exp.cfg.expose
     assert exp.revenue_eval.mean() > 0.05  # the cascade finds clicks
 
 
