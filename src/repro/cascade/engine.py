@@ -360,22 +360,20 @@ def _desc_perm(scores: np.ndarray, ids: np.ndarray) -> np.ndarray:
     return np.lexsort((ids, -scores), axis=-1)
 
 
-def _simulate_k3_numpy(stage_scores: dict, lay: dict, clicks: np.ndarray,
-                       *, expose: int,
-                       order1: np.ndarray | None = None) -> np.ndarray:
-    """Compaction-based CPU path for the paper cascade layout -> (U, J).
+def _compact_group_tables(stage_scores: dict, lay: dict, clicks: np.ndarray,
+                          *, order1: np.ndarray | None = None,
+                          expose: int):
+    """Decision-independent compaction tables for the k3 layout.
 
-    Two structural facts make the sweep nearly independent of both the
-    corpus size and the chain count after ONE full argsort:
-
-    * only the recall stage needs a global ordering - every later stage
-      only ranks candidates RELATIVE to each other, so ordering the
-      compact candidate lists by (-score, item_id) lexsort reproduces
-      the global stable order restricted to the list, exactly;
-    * the stage-1 survivor list for threshold n3 is a PREFIX of the list
-      for any larger n3 (both walk the same prerank order), so one
-      compact list of length cap = max(n3) per distinct n2 serves every
-      chain, and all chain arithmetic runs on (U, cap) arrays.
+    For each group g = (rank model, effective n2) and user u,
+    ``p_sorted[g, u]`` lists, in the rank model's descending stable
+    order over the group's compact candidate list, each entry's
+    survivor-prefix position (sentinel ``cap`` for invalid tail slots)
+    and ``clicks_sorted[g, u]`` the matching ground-truth clicks.  Every
+    chain in the group is then pure threshold arithmetic on (U, cap)
+    arrays - the shared precompute behind ``_simulate_k3_numpy``, the
+    fused serving pipeline and the Pallas truncation kernel.
+    Returns (p_sorted (G, U, cap), clicks_sorted (G, U, cap), cap).
     """
     m0, m1, mr = lay["stage_names"]
     u_n, i_n = clicks.shape
@@ -416,7 +414,6 @@ def _simulate_k3_numpy(stage_scores: dict, lay: dict, clicks: np.ndarray,
 
     # per group = (rank model, n2): order each compact list by the rank
     # model ((-score, id) again); invalid tail slots sink via -inf
-    g_n = len(gk)
     n2_of_g = np.asarray([n2_pos[n2] for _, n2, _ in gk], np.intp)
     m_of_g = np.asarray([mi for mi, _, _ in gk], np.intp)
     g_items = np.take_along_axis(l_items[None], lpos_c, axis=2)[n2_of_g]
@@ -435,6 +432,32 @@ def _simulate_k3_numpy(stage_scores: dict, lay: dict, clicks: np.ndarray,
                         mperm.astype(qdt), qdt(cap))
     g_clicks = np.take(clicks.ravel(), g_items + rows_off[None]) * g_valid
     clicks_sorted = np.take_along_axis(g_clicks, mperm, axis=2)
+    return p_sorted, clicks_sorted, cap
+
+
+def _simulate_k3_numpy(stage_scores: dict, lay: dict, clicks: np.ndarray,
+                       *, expose: int,
+                       order1: np.ndarray | None = None) -> np.ndarray:
+    """Compaction-based CPU path for the paper cascade layout -> (U, J).
+
+    Two structural facts make the sweep nearly independent of both the
+    corpus size and the chain count after ONE full argsort:
+
+    * only the recall stage needs a global ordering - every later stage
+      only ranks candidates RELATIVE to each other, so ordering the
+      compact candidate lists by (-score, item_id) lexsort reproduces
+      the global stable order restricted to the list, exactly;
+    * the stage-1 survivor list for threshold n3 is a PREFIX of the list
+      for any larger n3 (both walk the same prerank order), so one
+      compact list of length cap = max(n3) per distinct n2 serves every
+      chain, and all chain arithmetic runs on (U, cap) arrays.
+    """
+    u_n = clicks.shape[0]
+    gk = lay["group_key"]
+    g_n = len(gk)
+    p_sorted, clicks_sorted, cap = _compact_group_tables(
+        stage_scores, lay, clicks, order1=order1, expose=expose)
+    qdt = p_sorted.dtype
 
     # all chains batched: chain n3 keeps prefix positions < n3; exposure
     # is the first `expose` of those in rank-model order
@@ -497,6 +520,64 @@ def _revenue_requests(orders, ranks, clicks, slots, keeps, rows, *,
     return jax.vmap(one)(rows, slots, keeps)
 
 
+@dataclass
+class CompactPlan:
+    """Decision-independent serving tables for the k3 cascade layout.
+
+    Per request the whole cascade collapses to threshold arithmetic on a
+    (cap,)-wide row: gather ``p_sorted[group, user]`` (survivor-prefix
+    positions in rank-model order) and ``clicks_sorted[group, user]``,
+    keep positions < n3, expose the first ``expose`` survivors.  Built
+    once at server start; the jitted ``_revenue_compact`` (XLA) and the
+    Pallas truncation kernel (TPU) both execute it.
+    """
+
+    p_sorted: np.ndarray  # (G, U, cap) int32, sentinel cap = invalid
+    clicks_sorted: np.ndarray  # (G, U, cap) float32
+    group_of_chain: np.ndarray  # (J,) int32
+    n3_of_chain: np.ndarray  # (J,) int32, min(n3, cap)
+    cap: int
+    expose: int
+
+
+def build_compact_plan(stage_scores: dict, chains: ActionChainSet,
+                       clicks: np.ndarray, *,
+                       expose: int) -> CompactPlan | None:
+    """CompactPlan for the serving universe, or None off the k3 layout."""
+    lay = _k3_layout(chains, n_items=clicks.shape[1])
+    if lay is None:
+        return None
+    p_sorted, clicks_sorted, cap = _compact_group_tables(
+        stage_scores, lay, np.asarray(clicks, np.float32), expose=expose)
+    g_of = np.empty(chains.n_chains, np.int32)
+    n3_of = np.empty(chains.n_chains, np.int32)
+    pos = 0
+    for g, (_, _, n3list) in enumerate(lay["group_key"]):
+        for n3 in n3list:
+            j = int(lay["chain_order"][pos])
+            g_of[j] = g
+            n3_of[j] = min(int(n3), cap)
+            pos += 1
+    return CompactPlan(p_sorted.astype(np.int32),
+                       clicks_sorted.astype(np.float32), g_of, n3_of,
+                       int(cap), int(expose))
+
+
+@partial(jax.jit, static_argnames=("expose",))
+def _revenue_compact(p_sorted, clicks_sorted, groups, rows, n3, *, expose):
+    """Per-request revenue on CompactPlan tables (XLA path).
+
+    groups/rows/n3: (B,) int32 - request b reads row (groups[b], rows[b])
+    and keeps survivor positions < n3[b], exposing the first `expose`.
+    """
+    p = p_sorted[groups, rows]  # (B, cap)
+    ck = clicks_sorted[groups, rows]
+    m = p < n3[:, None]
+    q3 = jnp.cumsum(m.astype(jnp.int32), axis=1)  # inclusive
+    m = m & (q3 <= expose)
+    return jnp.sum(jnp.where(m, ck, 0.0), axis=1)
+
+
 def simulate_revenue_matrix(stage_scores: dict, chains: ActionChainSet,
                             clicks: np.ndarray, *, expose: int = 20,
                             ranked: RankedScores | None = None) -> np.ndarray:
@@ -552,12 +633,16 @@ class CascadeServer:
     The same rank-based kernel as offline simulation, vmapped over
     requests: per-request chain ids go straight into one jitted pass
     (the seed grouped requests by chain and re-ran NumPy top-k per
-    group)."""
+    group).  On accelerator backends the k3 layout additionally runs
+    through the Pallas gather+cumsum truncation kernel on CompactPlan
+    tables (``use_pallas``); the lax.scan ``_revenue_requests`` path is
+    the CPU / interpret-mode fallback and the parity oracle."""
 
     stage_scores: dict  # precomputed for the serving user universe
     chains: ActionChainSet
     clicks: np.ndarray
     expose: int = 20
+    use_pallas: bool | None = None  # None: auto (accelerator backends)
 
     def __post_init__(self):
         self._ranked = rank_stage_scores(self.stage_scores)
@@ -567,16 +652,45 @@ class CascadeServer:
         self._orders = jnp.asarray(self._ranked.orders)
         self._ranks = jnp.asarray(self._ranked.ranks)
         self._clicks = jnp.asarray(self.clicks, jnp.float32)
+        self.compact = build_compact_plan(
+            self.stage_scores, self.chains, self.clicks, expose=self.expose)
+        if self.use_pallas is None:
+            self.use_pallas = jax.default_backend() != "cpu"
+        self._pallas_tables = None
 
-    def serve(self, user_rows: np.ndarray, decisions: np.ndarray):
+    def serve(self, user_rows: np.ndarray, decisions: np.ndarray,
+              *, interpret: bool | None = None):
         """user_rows: indices into the score matrices; decisions: (B,)
-        chain ids.  Returns (revenue (B,), flops (B,))."""
+        chain ids.  Returns (revenue (B,), flops (B,)).
+
+        interpret: None (default) lets ``use_pallas`` pick the path;
+        True forces the Pallas kernel under the interpreter (CPU
+        parity tests); False forces the lax.scan fallback.
+        """
         decisions = np.asarray(decisions, np.int32)
-        rev = _revenue_requests(
-            self._orders, self._ranks, self._clicks,
-            jnp.asarray(self._slots[decisions]),
-            jnp.asarray(self._keeps[decisions]),
-            jnp.asarray(np.asarray(user_rows, np.int32)),
-            n_stages=self.chains.n_stages)
+        rows = np.asarray(user_rows, np.int32)
+        pallas = (self.use_pallas if interpret is None
+                  else interpret) and self.compact is not None
+        if pallas:
+            from repro.kernels import ops
+            if self._pallas_tables is None:
+                self._pallas_tables = (
+                    jnp.asarray(self.compact.p_sorted),
+                    jnp.asarray(self.compact.clicks_sorted))
+            p_tab, c_tab = self._pallas_tables
+            rev = ops.cascade_truncate(
+                p_tab, c_tab,
+                jnp.asarray(self.compact.group_of_chain[decisions]),
+                jnp.asarray(rows),
+                jnp.asarray(self.compact.n3_of_chain[decisions]),
+                expose=self.compact.expose,
+                **({} if interpret is None else {"interpret": True}))
+        else:
+            rev = _revenue_requests(
+                self._orders, self._ranks, self._clicks,
+                jnp.asarray(self._slots[decisions]),
+                jnp.asarray(self._keeps[decisions]),
+                jnp.asarray(rows),
+                n_stages=self.chains.n_stages)
         flops = self.chains.costs[decisions]
         return np.asarray(rev), flops

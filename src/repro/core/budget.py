@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core.action_chain import ActionChainSet
 from repro.core.primal_dual import DynamicPrimalDual, DualDescentConfig
+from repro.serving.guard import downgrade_guard_np
 
 
 @dataclass
@@ -49,35 +50,20 @@ class BudgetController:
         """
         decisions = np.asarray(self.pd.decide(rewards))
         costs = self.chains.costs
-        spend = np.cumsum(costs[decisions])
         downgraded = 0
-        if self.guard and spend[-1] > self.budget_per_window:
-            cheap = self.chains.cheapest()
-            c_min = costs[cheap]
-            n = len(decisions)
-            # greedy with tail reserve: request i keeps its chain only if
-            # the spend so far + its cost + a cheapest-chain reservation
-            # for everyone behind it still fits; else it is downgraded.
-            # Guarantees spend <= budget whenever n * c_min <= budget.
-            kept_prefix = np.concatenate(
-                [[0.0], np.cumsum(costs[decisions])[:-1]])
-            # iterate: downgrading shifts prefixes; 2 passes converge for
-            # the monotone tail-reserve rule (first crossing only moves up)
-            for _ in range(4):
-                reserve = c_min * (n - 1 - np.arange(n))
-                over = kept_prefix + costs[decisions] + reserve \
-                    > self.budget_per_window
-                if not over.any():
-                    break
-                decisions = np.where(over, cheap, decisions)
-                kept_prefix = np.concatenate(
-                    [[0.0], np.cumsum(costs[decisions])[:-1]])
-                downgraded = int(over.sum())
-            spend = np.cumsum(costs[decisions])
+        spend = float(np.sum(costs[decisions]))
+        if self.guard:
+            # greedy with tail reserve (repro.serving.guard): request i
+            # keeps its chain only if the spend so far + its cost + a
+            # cheapest-chain reservation for everyone behind it still
+            # fits.  Guarantees spend <= budget whenever n*c_min <= budget.
+            decisions, downgraded, spend = downgrade_guard_np(
+                decisions, costs, self.budget_per_window,
+                self.chains.cheapest())
 
         lam = self.pd.update(rewards)
         self.stats.append(WindowStats(
-            n_requests=len(decisions), spend=float(spend[-1]),
+            n_requests=len(decisions), spend=spend,
             budget=self.budget_per_window, lam=lam, downgraded=downgraded))
         return decisions
 

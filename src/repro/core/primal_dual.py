@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 
-@partial(jax.jit, static_argnames=())
+@jax.jit
 def allocate(rewards: jnp.ndarray, costs: jnp.ndarray,
              lam: jnp.ndarray) -> jnp.ndarray:
     """Eq. 10: per-request argmax of the lagrangian score.
@@ -37,10 +37,18 @@ def allocate(rewards: jnp.ndarray, costs: jnp.ndarray,
 
 
 def consumption(rewards: jnp.ndarray, costs: jnp.ndarray,
-                lam: jnp.ndarray) -> jnp.ndarray:
-    """Total FLOPs consumed if lambda is the dual price."""
+                lam: jnp.ndarray, mask: jnp.ndarray | None = None,
+                *, axis_name: str | None = None) -> jnp.ndarray:
+    """Total FLOPs consumed if lambda is the dual price.
+
+    mask (I,) zeroes padded requests; axis_name sums across a request
+    mesh axis (shard_map), so the padded + sharded fused pipeline sees
+    the same window-global consumption as the host loop.
+    """
     j_star = allocate(rewards, costs, lam)
-    return jnp.sum(jnp.take(costs, j_star))
+    taken = jnp.take(costs, j_star)
+    used = jnp.sum(taken if mask is None else taken * mask)
+    return used if axis_name is None else jax.lax.psum(used, axis_name)
 
 
 def realized_reward(rewards: jnp.ndarray, j_star: jnp.ndarray) -> jnp.ndarray:
@@ -60,24 +68,40 @@ class DualDescentConfig:
     lam_init: float = 0.0
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
+@partial(jax.jit, static_argnames=("max_iters", "axis_name"))
 def dual_descent(rewards: jnp.ndarray, costs: jnp.ndarray, budget: float,
-                 lam0: jnp.ndarray, *, max_iters: int = 200,
-                 step_size: float = 1.0, step_decay: float = 0.999):
+                 lam0: jnp.ndarray, *, mask: jnp.ndarray | None = None,
+                 max_iters: int = 200, step_size: float = 1.0,
+                 step_decay: float = 0.999, axis_name: str | None = None):
     """Algorithm 1 inner loop (steps 5-9), vectorized over all requests.
 
     The raw subgradient C - sum c_j x_ij has the scale of the budget, while
     useful lambda values have the scale of reward-per-FLOP; we therefore
     normalize the step by (I * mean(c)^2) so `step_size` is dimensionless
     and stable across budgets.  Returns (lam, trace_of_gaps).
+
+    mask/axis_name (see ``consumption``) let the fused serving pipeline
+    run the update on padded, request-sharded windows: I in the step
+    normalization becomes the VALID request count, and every shard sees
+    the same (replicated) lambda trajectory.
     """
     costs = costs.astype(jnp.float32)
     rewards = rewards.astype(jnp.float32)
-    norm = rewards.shape[0] * jnp.mean(costs) ** 2 + 1e-30
+    if mask is None:
+        n_eff = jnp.float32(rewards.shape[0])
+        if axis_name is not None:
+            n_eff = jax.lax.psum(n_eff, axis_name)
+    else:
+        n_eff = jnp.sum(mask.astype(jnp.float32))
+        if axis_name is not None:
+            n_eff = jax.lax.psum(n_eff, axis_name)
+    # an all-masked (empty) window carries no information: floor n_eff so
+    # the step normalization cannot explode and slam lambda to 0
+    norm = jnp.maximum(n_eff, 1.0) * jnp.mean(costs) ** 2 + 1e-30
 
     def body(carry, _):
         lam, eta = carry
-        used = consumption(rewards, costs, lam)
+        used = consumption(rewards, costs, lam, mask, axis_name=axis_name)
         grad = budget - used  # dL/dlambda
         lam_new = jnp.maximum(0.0, lam - eta * grad / norm)
         return (lam_new, eta * step_decay), (budget - used)

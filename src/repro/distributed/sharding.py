@@ -16,6 +16,12 @@ from jax.sharding import PartitionSpec as P
 
 BATCH_AXES = ("pod", "data")  # logical batch axis = pod x data
 
+# Serving request axis: the fused ServingPipeline shard_maps its window
+# pass over a 1-D ("req",) mesh (launch.mesh.make_request_mesh); guard
+# prefix sums and dual consumption stitch across it with
+# all_gather/psum.  One name, shared by mesh builders and the pipeline.
+REQUEST_AXIS = "req"
+
 
 from repro.distributed.compat import current_mesh  # noqa: F401 (re-export)
 

@@ -385,6 +385,61 @@ def evaluate_methods(exp: Experiment, budgets_frac=(0.3, 0.5, 0.7, 0.9),
     return rows
 
 
+def serve_config(*, small: bool = False) -> ExperimentConfig:
+    """The serving demo/benchmark world (launch/serve.py --small flag)."""
+    return ExperimentConfig(
+        world=WorldConfig(n_users=800 if small else 2000,
+                          n_items=200 if small else 400,
+                          hist_len=10, seed=11),
+        expose=8, n_scales=4,
+        cascade_steps=100 if small else 200,
+        reward_steps=200 if small else 400, batch=48)
+
+
+def build_serving_stack(cfg: ExperimentConfig | None = None, *,
+                        small: bool = False, cache: bool = True,
+                        verbose: bool = False):
+    """Experiment + trained reward model + CascadeServer over the eval
+    users - the serving universe shared by ``launch/serve.py`` and
+    ``benchmarks/bench_serve.py``.  Returns (exp, server, params, rcfg).
+
+    The built experiment (not the reward model - it trains in seconds)
+    is pickled under results/cache keyed by every size-relevant field.
+    """
+    import os
+    import pickle
+
+    from repro.cascade.engine import CascadeServer, precompute_stage_scores
+
+    cfg = cfg or serve_config(small=small)
+    exp = None
+    path = None
+    if cache:
+        w = cfg.world
+        key = (f"serve_u{w.n_users}_i{w.n_items}_h{w.hist_len}"
+               f"_ws{w.seed}_s{cfg.seed}_c{cfg.cascade_steps}"
+               f"_e{cfg.expose}_ns{cfg.n_scales}_b{cfg.batch}"
+               f"_r{cfg.reward_steps}.pkl")
+        root = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "results", "cache")
+        os.makedirs(root, exist_ok=True)
+        path = os.path.join(root, key)
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                exp = pickle.load(f)
+    if exp is None:
+        exp = build_experiment(cfg, verbose=verbose)
+        if path is not None:
+            with open(path, "wb") as f:
+                pickle.dump(exp, f)
+    params, rcfg = train_reward_model(exp)
+    scores = precompute_stage_scores(exp.models, exp.world,
+                                     exp.split.final_eval)
+    server = CascadeServer(stage_scores=scores, chains=exp.chains,
+                           clicks=exp.clicks_eval, expose=cfg.expose)
+    return exp, server, params, rcfg
+
+
 def cras_stage_rewards(exp: Experiment, ctx_users: str = "eval") -> list:
     """Per-stage independent reward estimates (Yang et al. 2021 setup):
     stage-action value = mean true revenue over chains sharing the action,

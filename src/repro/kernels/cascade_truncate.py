@@ -1,0 +1,84 @@
+"""Pallas gather+cumsum truncation kernel for the survivor-compaction
+round (cascade/engine.py CompactPlan execution).
+
+One grid step per request.  The request's (group, user) coordinates are
+SCALAR-PREFETCHED and drive the table BlockSpecs' index_map, so the
+pipeline DMAs exactly the two (1, 1, cap) rows the request needs from
+the (G, U, cap) tables - the TPU-idiomatic gather (same structure as
+``embedding_bag``).  Inside the kernel the truncation round is pure
+VPU/MXU work:
+
+    mask   = p_row < n3[b]                 (survivors of the n3 cut)
+    q      = inclusive cumsum of mask      (survivor prefix position)
+    keep   = mask & (q <= expose)          (the exposed set)
+    out[b] = sum(keep * clicks_row)        (revenue@expose)
+
+The cumsum runs as a triangular-ones matmul so it maps onto the MXU
+without any lane-wise scan support; counts are small integers, exact in
+float32.  ``interpret=True`` (CPU) runs the same body under the Pallas
+interpreter - that path is CI-tested against the lax.scan engine path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+
+
+@functools.partial(jax.jit, static_argnames=("expose", "interpret"))
+def compact_truncate_revenue(p_sorted: jnp.ndarray,
+                             clicks_sorted: jnp.ndarray,
+                             groups: jnp.ndarray, rows: jnp.ndarray,
+                             n3: jnp.ndarray, *, expose: int,
+                             interpret: bool = False) -> jnp.ndarray:
+    """Revenue@expose per request from CompactPlan tables.
+
+    p_sorted (G, U, C) int32 (sentinel >= cap for invalid slots),
+    clicks_sorted (G, U, C) float32, groups/rows/n3 (B,) int32.
+    Returns (B,) float32.  Matches engine._revenue_compact exactly.
+    """
+    g_n, u_n, c_n = p_sorted.shape
+    b_n = groups.shape[0]
+    # pad the lane axis to the TPU tile width; padded slots carry the
+    # sentinel (>= any n3 <= cap) so they never survive the n3 cut
+    c_pad = max(_LANES, ((c_n + _LANES - 1) // _LANES) * _LANES)
+    if c_pad != c_n:
+        p_sorted = jnp.pad(p_sorted, ((0, 0), (0, 0), (0, c_pad - c_n)),
+                           constant_values=c_n)
+        clicks_sorted = jnp.pad(clicks_sorted,
+                                ((0, 0), (0, 0), (0, c_pad - c_n)))
+
+    def kernel(g_ref, r_ref, n3_ref, p_ref, c_ref, o_ref):
+        b = pl.program_id(0)
+        thr = n3_ref[b]
+        p = p_ref[0, 0, :].reshape(1, c_pad)
+        m = (p < thr).astype(jnp.float32)
+        # inclusive cumsum as a triangular matmul: q[c] = sum_{c'<=c} m
+        r_ids = jax.lax.broadcasted_iota(jnp.int32, (c_pad, c_pad), 0)
+        c_ids = jax.lax.broadcasted_iota(jnp.int32, (c_pad, c_pad), 1)
+        tri = (r_ids <= c_ids).astype(jnp.float32)
+        q = jnp.dot(m, tri, preferred_element_type=jnp.float32)
+        keep = m * (q <= expose)
+        o_ref[0, 0] = jnp.sum(keep * c_ref[0, 0, :].reshape(1, c_pad))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b_n,),
+        in_specs=[
+            pl.BlockSpec((1, 1, c_pad), lambda b, g, r, n3: (g[b], r[b], 0)),
+            pl.BlockSpec((1, 1, c_pad), lambda b, g, r, n3: (g[b], r[b], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, g, r, n3: (b, 0)),
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b_n, 1), jnp.float32),
+        interpret=interpret,
+    )(groups.astype(jnp.int32), rows.astype(jnp.int32),
+      n3.astype(jnp.int32), p_sorted, clicks_sorted)
+    return out[:, 0]

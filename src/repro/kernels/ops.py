@@ -44,5 +44,12 @@ def cin_layer(w, x_prev, x0, **kw):
     return _cin(w, x_prev, x0, **kw)
 
 
+def cascade_truncate(p_sorted, clicks_sorted, groups, rows, n3, **kw):
+    from repro.kernels.cascade_truncate import compact_truncate_revenue
+    kw.setdefault("interpret", INTERPRET)
+    return compact_truncate_revenue(p_sorted, clicks_sorted, groups, rows,
+                                    n3, **kw)
+
+
 # the oracles, re-exported so callers can assert parity in one import
 references = ref

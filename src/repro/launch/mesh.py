@@ -22,6 +22,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def make_request_mesh(n_shards: int | None = None):
+    """1-D mesh over the serving request axis (sharding.REQUEST_AXIS).
+
+    The fused ServingPipeline shard_maps its window pass over this axis:
+    per-request work (scoring, Eq. 10, cascade execution) stays local
+    while the guard and the dual update stitch global sums.  Defaults to
+    all local devices.
+    """
+    from repro.distributed.sharding import REQUEST_AXIS
+
+    n = n_shards if n_shards is not None else len(jax.devices())
+    return make_mesh((n,), (REQUEST_AXIS,))
+
+
 def resolve_spec(spec, mesh):
     """Drop axis names not present in ``mesh`` from a PartitionSpec.
 

@@ -1,90 +1,183 @@
-"""GreenFlow serving driver: the paper's system end to end.
+"""GreenFlow streaming serving driver: the paper's online system end to
+end on the fused ServingPipeline (repro/serving/).
 
-    PYTHONPATH=src python -m repro.launch.serve --windows 12 --spike 3.0
+    PYTHONPATH=src python -m repro.launch.serve --small --windows 12
+    PYTHONPATH=src python -m repro.launch.serve --scenario diurnal
+    PYTHONPATH=src python -m repro.launch.serve --scenario tenants \
+        --tenants 4 --tenant-mode shared
+    PYTHONPATH=src python -m repro.launch.serve --shards 2   # request mesh
+    PYTHONPATH=src python -m repro.launch.serve --legacy     # old loop
 
-Builds (or loads from the benchmark cache) the trained cascade + reward
-model, then runs an online serving simulation: batched request windows
-flow through the GreenFlow allocator (nearline dual updates + online
-Eq. 10 decisions + downgrade guard) and the cascade executes the
-allocated chains.  Reports per-window spend/λ/revenue and the final PFEC
-comparison against EQUAL at the same realized computation.
+Builds (or loads from the results/cache) the trained cascade + reward
+model, then streams request windows through the fused
+score->decide->guard->execute pass with double-buffered host prep; the
+nearline dual update chains on-device and never blocks a response.
+
+Scenario flags
+--------------
+--scenario constant   steady traffic at --requests per window
+--scenario spike      a --spike x burst in the middle third (Fig. 5)
+--scenario diurnal    day-curve sinusoid between 0.4x and 1.6x
+--scenario tenants    --tenants equal blocks per window; --tenant-mode
+                      `shared` = per-tenant budgets under ONE dual price
+                      (the fused per-tenant guard); `independent` = one
+                      pipeline (own price + budget) per tenant
+--shards N            shard_map the pass over an N-way request mesh
+--legacy              run the seed's host loop (scoring + NumPy guard +
+                      separate serve kernel) instead, for comparison
+
+Reports per-window spend/lambda/downgrades/revenue, host dispatch time,
+and the final PFEC summary.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
-from repro.cascade.engine import CascadeServer, precompute_stage_scores
-from repro.core.budget import BudgetController
 from repro.core.pfec import pfec_report
-from repro.experiments import (ExperimentConfig, build_experiment,
-                               predicted_rewards, train_reward_model)
-from repro.data.synthetic import WorldConfig
+from repro.experiments import build_serving_stack, serve_config
+from repro.serving.pipeline import ServingPipeline
+from repro.serving.stream import TrafficScenario, run_stream
+
+
+def make_legacy_window(exp, server, params, rcfg, budget):
+    """The seed's serving path, packaged for reuse (CLI --legacy and
+    benchmarks/bench_serve.py share ONE definition of "legacy"): four
+    host/device crossings per window - jitted scoring, NumPy controller
+    (decide + guard + synchronous dual), jitted cascade execution.
+
+    Returns (controller, window_fn) with window_fn(ctx, rows) ->
+    (decisions, revenue).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.budget import BudgetController
+    from repro.core.reward_model import denormalize_rewards, reward_matrix
+
+    mo = jnp.asarray(exp.chains.model_onehot)
+    sh = jnp.asarray(exp.chains.scale_multihot)
+    score = jax.jit(lambda p, c: denormalize_rewards(
+        p, reward_matrix(p, rcfg, c, mo, sh)))
+    ctl = BudgetController(exp.chains, budget)
+
+    def window(ctx, rows):
+        rewards = np.asarray(score(params, jnp.asarray(ctx, jnp.float32)))
+        dec = ctl.step_window(rewards)
+        rev, _ = server.serve(rows, dec)
+        return dec, rev
+
+    return ctl, window
+
+
+def _legacy_loop(exp, server, params, rcfg, sizes, budget):
+    import time
+
+    ctl, window = make_legacy_window(exp, server, params, rcfg, budget)
+    rng = np.random.default_rng(0)
+    n_eval = exp.ctx_eval.shape[0]
+    total_rev = total_flops = 0.0
+    print(f"{'win':>4} {'n':>5} {'spend/budget':>13} {'lam':>12} "
+          f"{'downgraded':>10} {'revenue':>9} {'window_ms':>9}")
+    for t, n in enumerate(sizes):
+        t0 = time.perf_counter()
+        rows = rng.integers(0, n_eval, n)
+        dec, rev = window(exp.ctx_eval[rows], rows)
+        dt = (time.perf_counter() - t0) * 1e3
+        s = ctl.stats[-1]
+        total_rev += rev.sum()
+        total_flops += s.spend
+        print(f"{t:>4} {n:>5} {s.spend / s.budget:>13.3f} {s.lam:>12.3e} "
+              f"{s.downgraded:>10d} {rev.sum():>9.1f} {dt:>9.2f}")
+    return total_rev, total_flops
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--windows", type=int, default=10)
+    ap = argparse.ArgumentParser(
+        description="GreenFlow streaming serving (fused pipeline)")
+    ap.add_argument("--windows", type=int, default=12)
     ap.add_argument("--requests", type=int, default=96,
                     help="requests per normal window")
+    ap.add_argument("--scenario", default="spike",
+                    choices=("constant", "spike", "diurnal", "tenants"))
     ap.add_argument("--spike", type=float, default=3.0,
                     help="traffic multiplier on the spike windows")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--tenant-mode", default="shared",
+                    choices=("shared", "independent"))
     ap.add_argument("--budget-frac", type=float, default=0.6)
+    ap.add_argument("--shards", type=int, default=0,
+                    help=">0: shard_map over an N-way request mesh")
     ap.add_argument("--small", action="store_true", help="CI-sized world")
+    ap.add_argument("--legacy", action="store_true",
+                    help="run the seed's host loop instead")
     args = ap.parse_args()
 
-    cfg = ExperimentConfig(
-        world=WorldConfig(n_users=800 if args.small else 2000,
-                          n_items=200 if args.small else 400,
-                          hist_len=10, seed=11),
-        expose=8, n_scales=4,
-        cascade_steps=100 if args.small else 200,
-        reward_steps=200 if args.small else 400, batch=48)
     print("[serve] building world + training cascade & reward models ...")
-    exp = build_experiment(cfg, verbose=True)
-    rp, rc = train_reward_model(exp)
+    exp, server, params, rcfg = build_serving_stack(
+        serve_config(small=args.small), verbose=True)
+    chains = exp.chains
+    budget = args.budget_frac * chains.costs.max() * args.requests
+    n_tenants = args.tenants if args.scenario == "tenants" else 1
+    sc = TrafficScenario(args.scenario, args.windows, args.requests,
+                         spike_mult=args.spike, n_tenants=n_tenants)
+    sizes = sc.window_sizes()
 
-    # serving universe = the eval users; ground-truth clicks already sampled
-    scores = precompute_stage_scores(exp.models, exp.world,
-                                     exp.split.final_eval)
-    server = CascadeServer(stage_scores=scores, chains=exp.chains,
-                           clicks=exp.clicks_eval, expose=cfg.expose)
-    pred = predicted_rewards(exp, rp, rc, exp.ctx_eval)
+    if args.legacy:
+        total_rev, total_flops = _legacy_loop(exp, server, params, rcfg,
+                                              sizes, budget)
+    else:
+        mesh = None
+        if args.shards > 0:
+            from repro.launch.mesh import make_request_mesh
+            mesh = make_request_mesh(args.shards)
+        rng = np.random.default_rng(0)
+        n_eval = exp.ctx_eval.shape[0]
 
-    budget = args.budget_frac * exp.chains.costs.max() * args.requests
-    ctl = BudgetController(exp.chains, budget)
-    rng = np.random.default_rng(0)
-    n_eval = pred.shape[0]
+        def sample_window(t, n):
+            rows = rng.integers(0, n_eval, n)
+            return exp.ctx_eval[rows], rows
 
-    total_rev = total_flops = 0.0
-    serve_ms = []
-    print(f"{'win':>4} {'traffic':>8} {'spend/budget':>13} {'lam':>12} "
-          f"{'downgraded':>10} {'revenue':>8} {'serve_ms':>9}")
-    for t in range(args.windows):
-        mult = args.spike if args.windows // 3 <= t < args.windows // 3 + 3 \
-            else 1.0
-        n_t = int(args.requests * mult)
-        rows = rng.integers(0, n_eval, n_t)
-        decisions = ctl.step_window(pred[rows])
-        t0 = time.perf_counter()
-        # one batched kernel pass over the whole window - chain ids go in
-        # per request, no per-chain-group recomputation
-        rev, flops = server.serve(rows, decisions)
-        dt_ms = (time.perf_counter() - t0) * 1e3
-        serve_ms.append(dt_ms)
-        total_rev += rev.sum()
-        total_flops += flops.sum()
-        s = ctl.stats[-1]
-        print(f"{t:>4} {mult:>8.1f} {s.spend/s.budget:>13.3f} "
-              f"{s.lam:>12.3e} {s.downgraded:>10d} {rev.sum():>8.1f} "
-              f"{dt_ms:>9.2f}")
-    print(f"[serve] cascade execution: median {np.median(serve_ms):.2f} ms"
-          f"/window, p95 {np.percentile(serve_ms, 95):.2f} ms")
+        if args.scenario == "tenants" and args.tenant_mode == "independent":
+            pipes = [ServingPipeline(server, params, rcfg,
+                                     budget / n_tenants)
+                     for _ in range(n_tenants)]
+            stats = []
+            for p in pipes:
+                stats.append(run_stream(
+                    p, [n // n_tenants for n in sizes], sample_window))
+            total_rev = sum(s.total_revenue for s in stats)
+            total_flops = sum(s.total_spend for s in stats)
+            for t in range(len(sizes)):
+                spends = [float(s.windows[t].spend) for s in stats]
+                print(f"win {t:>3}: per-tenant spend/budget "
+                      + " ".join(f"{sp / (budget / n_tenants):.3f}"
+                                 for sp in spends))
+        else:
+            tb = None
+            if args.scenario == "tenants":  # shared dual price
+                tb = np.full(n_tenants, budget / n_tenants, np.float32)
+            pipe = ServingPipeline(server, params, rcfg, budget,
+                                   mesh=mesh, tenant_budgets=tb)
+            st = run_stream(pipe, sizes, sample_window)
+            total_rev, total_flops = st.total_revenue, st.total_spend
+            print(f"{'win':>4} {'n':>5} {'spend/budget':>13} {'lam':>12} "
+                  f"{'downgraded':>10} {'revenue':>9} {'dispatch_ms':>11}")
+            for t, r in enumerate(st.windows):
+                print(f"{t:>4} {r.n_valid:>5} "
+                      f"{float(r.spend) / r.budget:>13.3f} "
+                      f"{float(r.lam_after):>12.3e} "
+                      f"{int(r.downgraded):>10d} "
+                      f"{r.revenue_np.sum():>9.1f} "
+                      f"{st.dispatch_ms[t]:>11.2f}")
+            c_min = float(chains.costs.min())
+            print(f"[serve] {len(sizes)} windows in {st.wall_s:.2f}s "
+                  f"({len(sizes) / st.wall_s:.1f} win/s), worst overshoot "
+                  f"vs cap: {st.overshoot(c_min) * 100:.3f}%")
 
     print("\n[serve] PFEC (GreenFlow serving run):")
-    rep = pfec_report(clicks=total_rev, flops=total_flops)
+    rep = pfec_report(clicks=float(total_rev), flops=float(total_flops))
     for k, v in rep.as_row().items():
         print(f"    {k:14s} {v}")
     return 0

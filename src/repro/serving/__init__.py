@@ -1,0 +1,46 @@
+"""Unified streaming serving runtime (paper §4.3-§5.3 online system).
+
+The seed's serving path was a host-side Python loop that crossed the
+host/device boundary four times per window: jitted reward scoring, a
+jitted Eq. 10 argmax, a multi-pass NumPy downgrade guard, and a jitted
+cascade-execution kernel, with jnp<->np conversions between every step.
+This package refactors those four layers into ONE pipeline:
+
+  * ``guard``     - the budget downgrade guard as a vectorized,
+    jit-compatible pass (cumsum formulation of the tail-reserve rule,
+    mask-aware for padded windows, shardable over the request axis);
+  * ``pipeline``  - ``ServingPipeline``: reward scoring (model-prefix
+    grouped), Eq. 10 allocation, the fused guard, cascade execution on
+    compaction tables, and the nearline dual update, all inside a single
+    jitted per-window pass; optionally ``shard_map``-ped over a request
+    mesh axis with uneven-window padding so traffic spikes never
+    recompile;
+  * ``stream``    - a double-buffered streaming driver (host prepares
+    window t+1 while the device executes window t) plus pluggable
+    traffic scenarios: constant, spike, diurnal sinusoid, and
+    multi-tenant (per-tenant budgets sharing one dual price vs.
+    independent controllers).
+
+``launch/serve.py`` is the CLI front end; ``benchmarks/bench_serve.py``
+measures the fused pass against the legacy loop (BENCH_serve.json).
+"""
+import importlib
+
+from repro.serving.guard import downgrade_guard, downgrade_guard_np
+
+_LAZY = {
+    "ServingPipeline": "repro.serving.pipeline",
+    "WindowResult": "repro.serving.pipeline",
+    "StreamStats": "repro.serving.stream",
+    "TrafficScenario": "repro.serving.stream",
+    "run_stream": "repro.serving.stream",
+    "scenario_windows": "repro.serving.stream",
+}
+
+__all__ = ["downgrade_guard", "downgrade_guard_np", *_LAZY]
+
+
+def __getattr__(name):  # PEP 562: keep core.budget's import chain light
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(name)

@@ -1,0 +1,139 @@
+"""Budget downgrade guard: tail-reserve rule, loop-free and jittable.
+
+The guard (paper: "computation downgrade") keeps realized spend within
+the window budget even when the dual price lags a traffic spike.  The
+rule: walking the window in arrival order, request i keeps its allocated
+chain only if
+
+    spend_so_far(i) + c_{j(i)} + c_min * (#requests after i)  <=  B_t
+
+i.e. its own cost plus a cheapest-chain reservation for everyone behind
+it still fits; otherwise it is forced onto the cheapest chain.  This
+guarantees spend <= B_t whenever n * c_min <= B_t, and spend <= n * c_min
+otherwise (Eq. 3b serves every request exactly one chain).
+
+Downgrading shifts later prefix sums DOWN, which can un-trip requests
+that looked over-budget, so the rule is iterated; the first crossing
+only ever moves up, and ``GUARD_PASSES`` passes converge (extra passes
+are no-ops once no request is over).  Both implementations here run the
+same pass structure:
+
+  * ``downgrade_guard_np``  - NumPy float64, the legacy
+    ``BudgetController`` semantics (extracted so the controller and the
+    fused pipeline share one definition);
+  * ``downgrade_guard``     - jnp float32, a fixed-pass cumsum
+    formulation that traces under jit, supports a validity mask for
+    padded windows, and shards over a request mesh axis (prefix/tail
+    sums are stitched across shards with all_gather/psum).
+
+``downgraded`` counts requests whose FINAL decision differs from the
+allocator's (the seed overwrote the counter each pass, under-reporting
+multi-pass windows; requests already on the cheapest chain are never
+counted - nothing was downgraded about them).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GUARD_PASSES = 4
+
+
+def downgrade_guard_np(decisions: np.ndarray, costs: np.ndarray,
+                       budget: float, cheap: int,
+                       *, passes: int = GUARD_PASSES):
+    """Legacy-path guard (NumPy float64).
+
+    decisions: (n,) chain index per request (arrival order);
+    costs: (J,) FLOPs per chain; cheap: index of the cheapest chain.
+    Returns (decisions, downgraded, spend).
+    """
+    decisions = np.asarray(decisions).copy()
+    costs = np.asarray(costs)
+    n = len(decisions)
+    if n == 0:
+        return decisions, 0, 0.0
+    orig = decisions.copy()
+    c_min = costs[cheap]
+    spend = np.cumsum(costs[decisions])
+    if spend[-1] > budget:
+        kept_prefix = np.concatenate([[0.0], spend[:-1]])
+        reserve = c_min * (n - 1 - np.arange(n))
+        for _ in range(passes):
+            over = kept_prefix + costs[decisions] + reserve > budget
+            if not over.any():
+                break
+            decisions = np.where(over, cheap, decisions)
+            kept_prefix = np.concatenate(
+                [[0.0], np.cumsum(costs[decisions])[:-1]])
+        spend = np.cumsum(costs[decisions])
+    downgraded = int((decisions != orig).sum())
+    return decisions, downgraded, float(spend[-1])
+
+
+def _exclusive_shard_offset(local_total, axis_name):
+    """Sum of ``local_total`` over shards strictly before this one."""
+    totals = jax.lax.all_gather(local_total, axis_name)  # (n_shards,)
+    idx = jax.lax.axis_index(axis_name)
+    before = jnp.arange(totals.shape[0]) < idx
+    return jnp.sum(jnp.where(before, totals, 0))
+
+
+def downgrade_guard(decisions: jnp.ndarray, costs: jnp.ndarray,
+                    budget, cheap: int, valid: jnp.ndarray | None = None,
+                    *, passes: int = GUARD_PASSES,
+                    axis_name: str | None = None):
+    """Vectorized guard: same passes as the NumPy path, jit/shard ready.
+
+    decisions: (b,) int32; costs: (J,) float32; valid: (b,) 1.0 for real
+    requests, 0.0 for padding (None = all real).  Under ``shard_map`` the
+    (b,) arrays are the per-shard slice and ``axis_name`` names the
+    request axis; prefix spends and tail counts are made global.
+    Returns (decisions, downgraded, spend) - scalars are window-global.
+    """
+    decisions = decisions.astype(jnp.int32)
+    costs = costs.astype(jnp.float32)
+    if valid is None:
+        valid = jnp.ones(decisions.shape, jnp.float32)
+    else:
+        valid = valid.astype(jnp.float32)
+    c_min = costs[cheap]
+
+    # tail reserve: count of VALID requests strictly after i (globally)
+    n_prefix = jnp.cumsum(valid)  # inclusive, local
+    n_local = n_prefix[-1] if decisions.shape[0] else jnp.float32(0.0)
+    if axis_name is not None:
+        n_total = jax.lax.psum(n_local, axis_name)
+        n_prefix = n_prefix + _exclusive_shard_offset(n_local, axis_name)
+    else:
+        n_total = n_local
+    tail = n_total - n_prefix  # (b,)
+    reserve = c_min * tail
+
+    orig = decisions
+
+    def one_pass(dec, _):
+        cd = jnp.take(costs, dec) * valid
+        prefix = jnp.cumsum(cd)  # inclusive, local
+        total_local = prefix[-1] if dec.shape[0] else jnp.float32(0.0)
+        if axis_name is not None:
+            prefix = prefix + _exclusive_shard_offset(total_local, axis_name)
+        kept_prefix = prefix - cd  # exclusive: spend strictly before i
+        over = (valid > 0) & (kept_prefix + jnp.take(costs, dec) + reserve
+                              > budget)
+        return jnp.where(over, cheap, dec), None
+
+    # the no-op property (over empty once total fits) makes a fixed pass
+    # count equivalent to the legacy early-break loop
+    decisions, _ = jax.lax.scan(one_pass, decisions, None, length=passes)
+
+    cd = jnp.take(costs, decisions) * valid
+    spend_local = jnp.sum(cd)
+    changed = jnp.sum(((decisions != orig) & (valid > 0)).astype(jnp.int32))
+    if axis_name is not None:
+        spend = jax.lax.psum(spend_local, axis_name)
+        downgraded = jax.lax.psum(changed, axis_name)
+    else:
+        spend, downgraded = spend_local, changed
+    return decisions, downgraded, spend

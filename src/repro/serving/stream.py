@@ -1,0 +1,115 @@
+"""Double-buffered streaming driver + pluggable traffic scenarios.
+
+``run_stream`` drives a ServingPipeline through a traffic scenario the
+way a production frontend would: window t's pass is DISPATCHED (jax
+async dispatch - device arrays come back immediately), then the host
+prepares window t+1 (sampling arrivals, building contexts, padding)
+while the device is still executing, and only then does the host read
+window t's results.  The nearline price update chains device-side, so
+the host never blocks on it.
+
+Scenarios yield per-window request counts:
+
+  constant  - n_base forever;
+  spike     - n_base, with a ``spike_mult`` x burst in the middle third
+              (paper Fig. 5 protocol);
+  diurnal   - a day-curve sinusoid between ~0.4x and 1.6x of n_base;
+  tenants   - constant traffic split into T equal tenant blocks; the
+              pipeline enforces per-tenant budgets under ONE shared dual
+              price (vs. running T independent pipelines - see
+              launch/serve.py --tenant-mode).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.serving.pipeline import ServingPipeline, WindowResult
+
+
+@dataclass(frozen=True)
+class TrafficScenario:
+    name: str
+    n_windows: int
+    n_base: int
+    spike_mult: float = 3.0
+    n_tenants: int = 1
+
+    def window_sizes(self) -> list[int]:
+        return scenario_windows(self)
+
+
+def scenario_windows(sc: TrafficScenario) -> list[int]:
+    """Per-window request counts for a scenario."""
+    sizes = []
+    for t in range(sc.n_windows):
+        if sc.name == "constant" or sc.name == "tenants":
+            n = sc.n_base
+        elif sc.name == "spike":
+            burst = sc.n_windows // 3 <= t < sc.n_windows // 3 + 3
+            n = int(sc.n_base * (sc.spike_mult if burst else 1.0))
+        elif sc.name == "diurnal":
+            phase = 2.0 * math.pi * t / max(1, sc.n_windows)
+            n = int(sc.n_base * (1.0 + 0.6 * math.sin(phase)))
+        else:
+            raise ValueError(f"unknown scenario {sc.name!r}")
+        if sc.n_tenants > 1:  # keep tenant blocks equal-sized
+            n = max(sc.n_tenants, n - n % sc.n_tenants)
+        sizes.append(max(1, n))
+    return sizes
+
+
+@dataclass
+class StreamStats:
+    """Host-side view of a finished streaming run."""
+
+    windows: list[WindowResult]
+    sizes: list[int]
+    dispatch_ms: list[float]  # host time per submit (prep + dispatch)
+    wall_s: float
+
+    @property
+    def total_revenue(self) -> float:
+        return float(sum(r.revenue_np.sum() for r in self.windows))
+
+    @property
+    def total_spend(self) -> float:
+        return float(sum(float(r.spend) for r in self.windows))
+
+    def overshoot(self, c_min: float) -> float:
+        """Max relative spend overshoot vs. max(budget, n*c_min)."""
+        worst = 0.0
+        for r in self.windows:
+            cap = max(r.budget, r.n_valid * c_min)
+            worst = max(worst, float(r.spend) / cap - 1.0)
+        return worst
+
+
+def run_stream(pipeline: ServingPipeline, sizes: list[int],
+               sample_window, *, lam_trace=None) -> StreamStats:
+    """Drive the pipeline through ``sizes``, double-buffering host prep.
+
+    sample_window(t, n) -> (ctx (n, d), rows (n,)) produces window t's
+    arrivals; it runs while the device executes window t-1.  lam_trace
+    optionally pins the per-window entry price (parity testing).
+    """
+    t0 = time.perf_counter()
+    dispatch_ms: list[float] = []
+    results: list[WindowResult] = []
+    nxt = sample_window(0, sizes[0])
+    for t, n in enumerate(sizes):
+        ctx, rows = nxt
+        d0 = time.perf_counter()
+        lam = None if lam_trace is None else lam_trace[t]
+        results.append(pipeline.serve_window(ctx, rows, lam=lam))
+        dispatch_ms.append((time.perf_counter() - d0) * 1e3)
+        if t + 1 < len(sizes):  # prep t+1 while the device runs t
+            nxt = sample_window(t + 1, sizes[t + 1])
+    for r in results:  # drain: force every window's device work
+        r.revenue_np
+    return StreamStats(windows=results, sizes=list(sizes),
+                       dispatch_ms=dispatch_ms,
+                       wall_s=time.perf_counter() - t0)

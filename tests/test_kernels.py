@@ -146,3 +146,62 @@ def test_cin_matches_xdeepfm_model():
     kern_out = ops.cin_layer(p["cin"][0], x0, x0, block_b=8, block_h=8)
     np.testing.assert_allclose(np.asarray(kern_out), np.asarray(model_out),
                                rtol=1e-4, atol=1e-4)
+
+
+# -- cascade truncation (survivor compaction) --------------------------------
+
+
+@pytest.mark.parametrize("u,i,b,seed", [(24, 150, 64, 0), (40, 200, 96, 1)])
+def test_cascade_truncate_matches_scan_path(u, i, b, seed):
+    """Interpret-mode Pallas gather+cumsum truncation vs the lax.scan
+    engine path (exercised on CPU runners - the ISSUE CI gate)."""
+    from repro.cascade.engine import CascadeServer
+    from repro.core.action_chain import (ModelInstance, StageSpec,
+                                         generate_action_chains)
+
+    rng = np.random.default_rng(seed)
+    scores = {k: rng.normal(size=(u, i)).astype(np.float32)
+              for k in ("DSSM", "YDNN", "DIN", "DIEN")}
+    clicks = (rng.random((u, i)) < 0.15).astype(np.float32)
+    n2 = tuple(int(x) for x in np.linspace(0.2 * i, 0.5 * i, 4))
+    n3 = tuple(int(x) for x in np.linspace(8, 0.2 * i, 4))
+    chains = generate_action_chains((
+        StageSpec("recall", (ModelInstance("DSSM", 13e3),), (i,), 4),
+        StageSpec("prerank", (ModelInstance("YDNN", 123e3),), n2, 4),
+        StageSpec("rank", (ModelInstance("DIN", 7020e3),
+                           ModelInstance("DIEN", 7098e3)), n3, 4),
+    ))
+    server = CascadeServer(stage_scores=scores, chains=chains,
+                           clicks=clicks, expose=8)
+    rows = rng.integers(0, u, b).astype(np.int32)
+    dec = rng.integers(0, chains.n_chains, b).astype(np.int32)
+    rev_scan, _ = server.serve(rows, dec)  # CPU default: lax.scan path
+    rev_pallas, _ = server.serve(rows, dec, interpret=True)
+    np.testing.assert_array_equal(rev_scan, rev_pallas)
+
+
+def test_cascade_truncate_direct_tables():
+    """Kernel-level check on hand-built tables incl. the padded tail."""
+    from repro.kernels.cascade_truncate import compact_truncate_revenue
+
+    g_count, u_count, cap = 3, 5, 40  # cap not a multiple of 128: pads
+    rng = np.random.default_rng(3)
+    p = np.empty((g_count, u_count, cap), np.int32)
+    for g in range(g_count):
+        for uu in range(u_count):
+            p[g, uu] = rng.permutation(cap)
+    ck = rng.random((g_count, u_count, cap)).astype(np.float32)
+    groups = rng.integers(0, g_count, 32).astype(np.int32)
+    rows = rng.integers(0, u_count, 32).astype(np.int32)
+    n3 = rng.integers(1, cap + 1, 32).astype(np.int32)
+    expose = 6
+    got = np.asarray(compact_truncate_revenue(
+        jnp.asarray(p), jnp.asarray(ck), jnp.asarray(groups),
+        jnp.asarray(rows), jnp.asarray(n3), expose=expose, interpret=True))
+    for idx in range(32):
+        prow = p[groups[idx], rows[idx]]
+        m = prow < n3[idx]
+        q = np.cumsum(m)
+        keep = m & (q <= expose)
+        want = (ck[groups[idx], rows[idx]] * keep).sum()
+        np.testing.assert_allclose(got[idx], want, rtol=1e-6)

@@ -66,6 +66,57 @@ def test_dual_descent_converges_near_bisect():
     assert r_d >= 0.95 * r_b
 
 
+def test_bisect_lam_hi_bound_near_equal_costs():
+    """Pins the smallest-POSITIVE-gap logic in dual_bisect's upper bound.
+
+    Two chains with nearly equal costs need a huge price to separate:
+    lambda* ~ r_span / gap.  A bound built from min/max cost (the naive
+    choice) would cap bisection far below lambda* and return an
+    infeasible price."""
+    n = 32
+    costs = jnp.asarray([1.0, 1.0 + 1e-6], jnp.float32)
+    gap = float(costs[1]) - float(costs[0])  # f32-rounded gap
+    rewards = jnp.tile(jnp.asarray([[0.0, 1.0]], jnp.float32), (n, 1))
+    c_hi = float(consumption(rewards, costs, jnp.float32(0.0)))
+    c_lo = n * float(costs[0])
+    budget = 0.5 * (c_hi + c_lo)  # only the cheap chain fits
+    lam = dual_bisect(rewards, costs, budget)
+    assert float(consumption(rewards, costs, lam)) <= budget * (1 + 1e-6)
+    # the returned price must actually be of the ~r_span/gap magnitude
+    assert float(lam) > 0.5 / gap
+
+
+def test_bisect_all_equal_costs_uses_fallback_bound():
+    """All costs equal -> no positive gap -> lam_hi falls back to
+    max(costs); consumption is constant in lambda so either the budget
+    fits at 0 or the cheapest-possible spend is the best bisection can
+    certify."""
+    costs = jnp.asarray([2.0, 2.0, 2.0], jnp.float32)
+    rewards, _ = _random_problem(9, j=3)
+    n = rewards.shape[0]
+    assert float(dual_bisect(rewards, costs, 2.0 * n + 1.0)) == 0.0
+    lam = dual_bisect(rewards, costs, 1.0 * n)  # infeasible budget
+    assert float(consumption(rewards, costs, lam)) == 2.0 * n
+
+
+def test_consumption_and_descent_ignore_padded_requests():
+    """mask zeroes padding: the fused pipeline's padded windows must see
+    the same dual trajectory as the unpadded host loop."""
+    rewards, costs = _random_problem(5, i=128)
+    budget = 0.6 * float(consumption(rewards, costs, jnp.float32(0.0)))
+    lam_a, _ = dual_descent(rewards, costs, budget, 0.0, max_iters=50)
+    padded = jnp.concatenate(
+        [rewards, 7.7 * jnp.ones((32, rewards.shape[1]), jnp.float32)], 0)
+    mask = jnp.concatenate([jnp.ones(128, jnp.float32),
+                            jnp.zeros(32, jnp.float32)])
+    used_a = float(consumption(rewards, costs, jnp.float32(0.1)))
+    used_b = float(consumption(padded, costs, jnp.float32(0.1), mask))
+    np.testing.assert_allclose(used_a, used_b, rtol=1e-6)
+    lam_b, _ = dual_descent(padded, costs, budget, 0.0, mask=mask,
+                            max_iters=50)
+    np.testing.assert_allclose(float(lam_a), float(lam_b), rtol=1e-6)
+
+
 def test_unconstrained_budget_gives_zero_price():
     rewards, costs = _random_problem(7)
     huge = 1e9
