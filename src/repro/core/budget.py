@@ -35,6 +35,10 @@ class BudgetController:
     budget_per_window: float
     dual_cfg: DualDescentConfig = field(default_factory=DualDescentConfig)
     guard: bool = True
+    # optional repro.carbon.ledger.CarbonLedger (duck-typed: anything with
+    # .record(decisions, t=...)): every served window is metered into
+    # kWh/gCO2e at that window's grid intensity
+    ledger: object = None
 
     def __post_init__(self):
         self.pd = DynamicPrimalDual(self.chains.costs, self.budget_per_window,
@@ -60,6 +64,8 @@ class BudgetController:
             decisions, downgraded, spend = downgrade_guard_np(
                 decisions, costs, self.budget_per_window,
                 self.chains.cheapest())
+        if self.ledger is not None:
+            self.ledger.record(decisions, t=len(self.stats))
 
         lam = self.pd.update(rewards)
         self.stats.append(WindowStats(

@@ -32,6 +32,19 @@ class EnergyConfig:
     sustained_flops_per_s: float = 2.0e13
     ram_cpu_fraction: float = 0.15  # fraction of device-hours billed to ram+cpu
 
+    def __post_init__(self):
+        if self.pue < 1.0:
+            raise ValueError(
+                f"pue must be >= 1.0 (total/IT power ratio), got {self.pue}")
+        for name in ("carbon_intensity_g_per_kwh", "p_ram_w", "p_cpu_w",
+                     "p_gpu_w", "sustained_flops_per_s"):
+            v = getattr(self, name)
+            if not v > 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+        if self.ram_cpu_fraction < 0:
+            raise ValueError(f"ram_cpu_fraction must be >= 0, "
+                             f"got {self.ram_cpu_fraction}")
+
 
 @dataclass
 class PFECReport:
@@ -51,8 +64,15 @@ class PFECReport:
         }
 
 
-def energy_from_flops(flops: float, cfg: EnergyConfig = EnergyConfig()) -> float:
+def _resolve(cfg: EnergyConfig | None) -> EnergyConfig:
+    """One place builds the default config (a ``cfg=EnergyConfig()`` default
+    arg would be evaluated once at import and silently pin its constants)."""
+    return EnergyConfig() if cfg is None else cfg
+
+
+def energy_from_flops(flops: float, cfg: EnergyConfig | None = None) -> float:
     """FLOPs -> kWh via Eq. 1 with usage-hours derived from throughput."""
+    cfg = _resolve(cfg)
     hours = flops / cfg.sustained_flops_per_s / 3600.0
     e_gpu = hours
     e_cpu = hours * cfg.ram_cpu_fraction
@@ -61,13 +81,19 @@ def energy_from_flops(flops: float, cfg: EnergyConfig = EnergyConfig()) -> float
     return cfg.pue * watts / 1000.0  # W*h -> kWh
 
 
-def carbon_from_energy(kwh: float, cfg: EnergyConfig = EnergyConfig()) -> float:
+def kwh_per_flop(cfg: EnergyConfig | None = None) -> float:
+    """kappa: the (linear) Eq. 1 slope, kWh consumed per FLOP served."""
+    return energy_from_flops(1.0, cfg)
+
+
+def carbon_from_energy(kwh: float, cfg: EnergyConfig | None = None) -> float:
     """Eq. 2: CE = EC * CI  [gCO2e]."""
-    return kwh * cfg.carbon_intensity_g_per_kwh
+    return kwh * _resolve(cfg).carbon_intensity_g_per_kwh
 
 
 def pfec_report(*, clicks: float, flops: float,
-                cfg: EnergyConfig = EnergyConfig(), **meta) -> PFECReport:
+                cfg: EnergyConfig | None = None, **meta) -> PFECReport:
+    cfg = _resolve(cfg)
     kwh = energy_from_flops(flops, cfg)
     return PFECReport(
         performance=float(clicks),
@@ -84,6 +110,11 @@ def revenue_at_e(click_labels: np.ndarray, ranked_items: np.ndarray,
 
     click_labels: (n_items,) 0/1 ground-truth clicks for the request's
     candidate set; ranked_items: indices ordered by the final stage.
+    ``e`` past the ranking length exposes everything ranked; an empty
+    ranking exposes nothing (0 clicks).  Labels of any numeric dtype or
+    layout (views/slices) are accepted.
     """
-    top = ranked_items[:e]
-    return float(np.asarray(click_labels)[top].sum())
+    top = np.asarray(ranked_items, dtype=np.intp).reshape(-1)[:e]
+    if top.size == 0:
+        return 0.0
+    return float(np.asarray(click_labels, dtype=np.float64)[top].sum())

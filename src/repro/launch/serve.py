@@ -5,6 +5,8 @@ end on the fused ServingPipeline (repro/serving/).
     PYTHONPATH=src python -m repro.launch.serve --scenario diurnal
     PYTHONPATH=src python -m repro.launch.serve --scenario tenants \
         --tenants 4 --tenant-mode shared
+    PYTHONPATH=src python -m repro.launch.serve --scenario carbon \
+        --ci-trace duck --ci-phase-h 6      # carbon-budgeted day
     PYTHONPATH=src python -m repro.launch.serve --shards 2   # request mesh
     PYTHONPATH=src python -m repro.launch.serve --legacy     # old loop
 
@@ -22,9 +24,22 @@ Scenario flags
                       `shared` = per-tenant budgets under ONE dual price
                       (the fused per-tenant guard); `independent` = one
                       pipeline (own price + budget) per tenant
+--scenario carbon     diurnal traffic priced against a grid-intensity
+                      trace: per-window budgets in gCO2e, chain costs
+                      c_j(t) = flops_j*kappa*CI(t), dual price in
+                      reward-per-gram; the run is one 24 h day
+                      (window_s = 86400/windows), metered by a
+                      CarbonLedger into results/carbon_report.csv.
+                      Knobs: --ci-trace diurnal|duck|constant (or
+                      --ci-csv FILE), --ci-mean, --ci-phase-h (grid vs
+                      traffic phase offset), --carbon-pricing
+                      carbon|flops (native gram costs vs the
+                      effective-FLOPs-budget reduction)
 --shards N            shard_map the pass over an N-way request mesh
 --legacy              run the seed's host loop (scoring + NumPy guard +
                       separate serve kernel) instead, for comparison
+                      (with --scenario carbon: the CarbonBudgetController
+                      host loop)
 
 Reports per-window spend/lambda/downgrades/revenue, host dispatch time,
 and the final PFEC summary.
@@ -41,6 +56,20 @@ from repro.serving.pipeline import ServingPipeline
 from repro.serving.stream import TrafficScenario, run_stream
 
 
+def make_legacy_scorer(exp, rcfg):
+    """The seed's jitted reward scorer - the ONE definition every legacy
+    host loop (FLOPs or carbon) shares: score(params, ctx) -> (n, J)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.reward_model import denormalize_rewards, reward_matrix
+
+    mo = jnp.asarray(exp.chains.model_onehot)
+    sh = jnp.asarray(exp.chains.scale_multihot)
+    return jax.jit(lambda p, c: denormalize_rewards(
+        p, reward_matrix(p, rcfg, c, mo, sh)))
+
+
 def make_legacy_window(exp, server, params, rcfg, budget):
     """The seed's serving path, packaged for reuse (CLI --legacy and
     benchmarks/bench_serve.py share ONE definition of "legacy"): four
@@ -50,16 +79,11 @@ def make_legacy_window(exp, server, params, rcfg, budget):
     Returns (controller, window_fn) with window_fn(ctx, rows) ->
     (decisions, revenue).
     """
-    import jax
     import jax.numpy as jnp
 
     from repro.core.budget import BudgetController
-    from repro.core.reward_model import denormalize_rewards, reward_matrix
 
-    mo = jnp.asarray(exp.chains.model_onehot)
-    sh = jnp.asarray(exp.chains.scale_multihot)
-    score = jax.jit(lambda p, c: denormalize_rewards(
-        p, reward_matrix(p, rcfg, c, mo, sh)))
+    score = make_legacy_scorer(exp, rcfg)
     ctl = BudgetController(exp.chains, budget)
 
     def window(ctx, rows):
@@ -93,6 +117,76 @@ def _legacy_loop(exp, server, params, rcfg, sizes, budget):
     return total_rev, total_flops
 
 
+def _build_ci_trace(args):
+    from repro.carbon.intensity import (constant_trace, diurnal_trace,
+                                        load_ci_csv, solar_duck_trace)
+
+    if args.ci_csv:
+        return load_ci_csv(args.ci_csv)
+    if args.ci_trace == "diurnal":
+        return diurnal_trace(mean=args.ci_mean)
+    if args.ci_trace == "duck":
+        return solar_duck_trace(mean=args.ci_mean)
+    return constant_trace(args.ci_mean)
+
+
+def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
+                   sample_window, pricing, mesh=None):
+    """Fused-pipeline carbon day: per-window gram budgets + CI-scaled
+    costs threaded through run_stream (carbon pricing) or the
+    effective-FLOPs-budget reduction (flops pricing)."""
+    sched = cb.schedule(len(sizes))
+    pipe = ServingPipeline(server, params, rcfg, cb.flops_ref,
+                           ledger=ledger, mesh=mesh)
+    if pricing == "carbon":
+        st = run_stream(pipe, sizes, sample_window,
+                        budget_trace=sched["grams"],
+                        scale_trace=sched["scale"])
+    else:
+        st = run_stream(pipe, sizes, sample_window,
+                        budget_trace=sched["flops_budget"])
+    print(f"{'win':>4} {'n':>5} {'ci_g/kwh':>9} {'spend/budget':>13} "
+          f"{'lam':>12} {'downgraded':>10} {'revenue':>9} "
+          f"{'dispatch_ms':>11}")
+    for t, r in enumerate(st.windows):
+        print(f"{t:>4} {r.n_valid:>5} {sched['ci'][t]:>9.1f} "
+              f"{float(r.spend) / r.budget:>13.3f} "
+              f"{float(r.lam_after):>12.3e} {int(r.downgraded):>10d} "
+              f"{r.revenue_np.sum():>9.1f} {st.dispatch_ms[t]:>11.2f}")
+    total_flops = float(sum(float(r.flops) for r in st.windows))
+    print(f"[serve] {len(sizes)} windows in {st.wall_s:.2f}s "
+          f"({len(sizes) / st.wall_s:.1f} win/s)")
+    return st.total_revenue, total_flops
+
+
+def _legacy_carbon_loop(exp, server, params, rcfg, sizes, cb, ledger,
+                        sample_window, pricing):
+    """Host-loop carbon day on CarbonBudgetController (the --legacy twin
+    of _carbon_stream)."""
+    import jax.numpy as jnp
+
+    from repro.carbon.controller import CarbonBudgetController
+
+    score = make_legacy_scorer(exp, rcfg)
+    ctl = CarbonBudgetController(exp.chains, cb, ledger=ledger,
+                                 pricing=pricing)
+    total_rev = total_flops = 0.0
+    print(f"{'win':>4} {'n':>5} {'ci_g/kwh':>9} {'spend_g/budget_g':>17} "
+          f"{'lam':>12} {'downgraded':>10} {'revenue':>9}")
+    for t, n in enumerate(sizes):
+        ctx, rows = sample_window(t, n)
+        rewards = np.asarray(score(params, jnp.asarray(ctx, jnp.float32)))
+        dec = ctl.step_window(rewards)
+        rev, _ = server.serve(rows, dec)
+        s = ctl.stats[-1]
+        total_rev += rev.sum()
+        total_flops += s.flops
+        print(f"{t:>4} {n:>5} {s.ci_g_per_kwh:>9.1f} "
+              f"{s.spend_g / s.budget_g:>17.3f} {s.lam:>12.3e} "
+              f"{s.downgraded:>10d} {rev.sum():>9.1f}")
+    return total_rev, total_flops
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="GreenFlow streaming serving (fused pipeline)")
@@ -100,7 +194,8 @@ def main():
     ap.add_argument("--requests", type=int, default=96,
                     help="requests per normal window")
     ap.add_argument("--scenario", default="spike",
-                    choices=("constant", "spike", "diurnal", "tenants"))
+                    choices=("constant", "spike", "diurnal", "tenants",
+                             "carbon"))
     ap.add_argument("--spike", type=float, default=3.0,
                     help="traffic multiplier on the spike windows")
     ap.add_argument("--tenants", type=int, default=4)
@@ -112,6 +207,21 @@ def main():
     ap.add_argument("--small", action="store_true", help="CI-sized world")
     ap.add_argument("--legacy", action="store_true",
                     help="run the seed's host loop instead")
+    ap.add_argument("--ci-trace", default="diurnal",
+                    choices=("diurnal", "duck", "constant"),
+                    help="grid-intensity shape for --scenario carbon")
+    ap.add_argument("--ci-csv", default=None,
+                    help="load the intensity trace from an exported CSV "
+                         "(ichnos parse_ci_intervals layouts)")
+    ap.add_argument("--ci-mean", type=float, default=450.0,
+                    help="mean grid intensity, gCO2e/kWh")
+    ap.add_argument("--ci-phase-h", type=float, default=0.0,
+                    help="hours the intensity day leads the traffic day")
+    ap.add_argument("--carbon-pricing", default="carbon",
+                    choices=("carbon", "flops"))
+    ap.add_argument("--carbon-report", default=None,
+                    help="CSV path for the carbon ledger (default: "
+                         "results/carbon_report.csv)")
     args = ap.parse_args()
 
     print("[serve] building world + training cascade & reward models ...")
@@ -123,22 +233,67 @@ def main():
     sc = TrafficScenario(args.scenario, args.windows, args.requests,
                          spike_mult=args.spike, n_tenants=n_tenants)
     sizes = sc.window_sizes()
+    rng = np.random.default_rng(0)
+    n_eval = exp.ctx_eval.shape[0]
 
-    if args.legacy:
+    def sample_window(t, n):
+        rows = rng.integers(0, n_eval, n)
+        return exp.ctx_eval[rows], rows
+
+    mesh = None
+    if args.shards > 0 and not args.legacy:
+        from repro.launch.mesh import make_request_mesh
+        mesh = make_request_mesh(args.shards)
+
+    if args.scenario == "carbon":
+        # the run is one 24 h day: the diurnal traffic curve spans the
+        # n_windows horizon, so the intensity day must span it too
+        import os
+
+        from repro.carbon.controller import CarbonBudget
+        from repro.carbon.ledger import DAY_S, CarbonLedger
+
+        trace = _build_ci_trace(args)
+        window_s = DAY_S / len(sizes)
+        cb = CarbonBudget.from_flops(
+            float(budget), trace, window_s=window_s,
+            phase_s=args.ci_phase_h * 3600.0)
+        ledger = CarbonLedger(chains, trace, window_s=window_s,
+                              phase_s=cb.phase_s)
+        print(f"[serve] carbon day: {len(sizes)} windows x "
+              f"{window_s / 3600.0:.2f} h, CI '{trace.name}' mean "
+              f"{trace.mean():.0f} g/kWh, budget "
+              f"{cb.grams_per_window:.3e} g/window "
+              f"({args.carbon_pricing} pricing)")
+        if args.legacy:
+            total_rev, total_flops = _legacy_carbon_loop(
+                exp, server, params, rcfg, sizes, cb, ledger,
+                sample_window, args.carbon_pricing)
+        else:
+            total_rev, total_flops = _carbon_stream(
+                server, params, rcfg, sizes, cb, ledger,
+                sample_window, args.carbon_pricing, mesh=mesh)
+        report_path = args.carbon_report or os.path.join(
+            os.path.dirname(__file__), "..", "..", "..", "results",
+            "carbon_report.csv")
+        ledger.to_csv(report_path)
+        rep = ledger.report()
+        print(f"\n[serve] carbon ledger -> {os.path.abspath(report_path)}")
+        print(f"    realized      {rep['kwh']:.4e} kWh  "
+              f"{rep['gco2e']:.4e} gCO2e")
+        print(f"    all-max base  {rep['baseline_kwh']:.4e} kWh  "
+              f"{rep['baseline_gco2e']:.4e} gCO2e")
+        print(f"    daily savings {rep['daily_saved_kwh']:.4e} kWh/day  "
+              f"{rep['daily_saved_tco2e']:.4e} tCO2e/day "
+              f"(vs all-max-chain)")
+        for s, v in rep["stage_flops"].items():
+            print(f"    stage {s:10s} {v:.4e} FLOPs")
+        for m, v in rep["model_flops"].items():
+            print(f"    model {m:10s} {v:.4e} FLOPs")
+    elif args.legacy:
         total_rev, total_flops = _legacy_loop(exp, server, params, rcfg,
                                               sizes, budget)
     else:
-        mesh = None
-        if args.shards > 0:
-            from repro.launch.mesh import make_request_mesh
-            mesh = make_request_mesh(args.shards)
-        rng = np.random.default_rng(0)
-        n_eval = exp.ctx_eval.shape[0]
-
-        def sample_window(t, n):
-            rows = rng.integers(0, n_eval, n)
-            return exp.ctx_eval[rows], rows
-
         if args.scenario == "tenants" and args.tenant_mode == "independent":
             pipes = [ServingPipeline(server, params, rcfg,
                                      budget / n_tenants)

@@ -17,9 +17,11 @@ This package refactors those four layers into ONE pipeline:
     recompile;
   * ``stream``    - a double-buffered streaming driver (host prepares
     window t+1 while the device executes window t) plus pluggable
-    traffic scenarios: constant, spike, diurnal sinusoid, and
-    multi-tenant (per-tenant budgets sharing one dual price vs.
-    independent controllers).
+    traffic scenarios: constant, spike, diurnal sinusoid, multi-tenant
+    (per-tenant budgets sharing one dual price vs. independent
+    controllers), and carbon (diurnal traffic priced against a grid
+    intensity trace via per-window budget/cost-scale traces - see
+    ``repro.carbon``).
 
 ``launch/serve.py`` is the CLI front end; ``benchmarks/bench_serve.py``
 measures the fused pass against the legacy loop (BENCH_serve.json).
@@ -33,6 +35,7 @@ _LAZY = {
     "WindowResult": "repro.serving.pipeline",
     "StreamStats": "repro.serving.stream",
     "TrafficScenario": "repro.serving.stream",
+    "SCENARIOS": "repro.serving.stream",
     "run_stream": "repro.serving.stream",
     "scenario_windows": "repro.serving.stream",
 }

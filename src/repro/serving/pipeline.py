@@ -61,7 +61,13 @@ from repro.serving.guard import downgrade_guard
 
 @dataclass
 class WindowResult:
-    """One served window; arrays stay on device until read."""
+    """One served window; arrays stay on device until read.
+
+    ``budget``/``spend`` are in the window's ACTIVE cost units - FLOPs by
+    default, gCO2e when a carbon ``cost_scale`` was applied (see
+    ``serve_window``); ``flops`` is always the realized FLOPs, so carbon
+    ledgers and PFEC reports meter the same quantity either way.
+    """
 
     n_valid: int
     budget: float
@@ -73,6 +79,8 @@ class WindowResult:
     downgraded: jnp.ndarray
     valid: np.ndarray = None  # (B,) 1.0 on real requests
     tenant_spend: jnp.ndarray | None = None
+    flops: jnp.ndarray | None = None  # realized FLOPs (unit-independent)
+    cost_scale: float = 1.0  # active-units per FLOP (1.0 = FLOPs mode)
 
     @property
     def decisions_np(self) -> np.ndarray:
@@ -109,8 +117,9 @@ class ServingPipeline:
                  reward_cfg: RewardModelConfig, budget_per_window: float,
                  *, dual_cfg: DualDescentConfig | None = None,
                  guard: bool = True, mesh=None, pad_quantum: int = 32,
-                 tenant_budgets=None, lam_init: float = 0.0):
+                 tenant_budgets=None, lam_init: float = 0.0, ledger=None):
         self.server = server
+        self.ledger = ledger  # optional CarbonLedger (lazy metering hook)
         self.chains = server.chains
         self.reward_params = reward_params
         self.reward_cfg = reward_cfg
@@ -170,27 +179,35 @@ class ServingPipeline:
         return rev * valid
 
     def _build_main_fn(self, b: int, padded: bool):
-        """Online response path: score -> decide -> guard -> execute."""
+        """Online response path: score -> decide -> guard -> execute.
+
+        ``budget`` and ``scale`` ride through as TRACED scalars, so
+        per-window budgets (traffic reshaping) and per-window cost scales
+        (carbon pricing: costs become c_j(t) = flops_j * kappa * CI(t))
+        reuse the compiled pass instead of recompiling.  ``scale`` = 1.0
+        multiplies bit-exactly, keeping the FLOPs path unchanged.
+        """
         axis = AXIS if self.mesh is not None else None
         costs, cheap = self._costs, self._cheap
         tb = self.tenant_budgets
 
-        def fn(params, tables, ctx, rows, valid, lam):
+        def fn(params, tables, ctx, rows, valid, lam, budget, scale):
             rewards = denormalize_rewards(params, reward_matrix_grouped(
                 params, self.reward_cfg, ctx, self._sh, self._prefix_plan))
-            dec = allocate(rewards, costs, lam)
+            costs_eff = costs * scale  # active units (FLOPs or gCO2e)
+            dec = allocate(rewards, costs_eff, lam)
             mask = valid if padded else None
             tenant_spend = None
             if not self.guard:
                 dg = jnp.int32(0)
-                spend = jnp.sum(jnp.take(costs, dec) * valid)
+                spend = jnp.sum(jnp.take(costs_eff, dec) * valid)
                 if axis is not None:
                     spend = jax.lax.psum(spend, axis)
             elif tb is not None:
                 t_n = len(tb)
                 gfn = jax.vmap(
-                    lambda d, v, bud: downgrade_guard(d, costs, bud, cheap,
-                                                      v))
+                    lambda d, v, bud: downgrade_guard(d, costs_eff, bud,
+                                                      cheap, v))
                 dec_t, dg_t, spend_t = gfn(
                     dec.reshape(t_n, -1), valid.reshape(t_n, -1),
                     jnp.asarray(tb))
@@ -198,34 +215,40 @@ class ServingPipeline:
                 dg, spend, tenant_spend = dg_t.sum(), spend_t.sum(), spend_t
             else:
                 dec, dg, spend = downgrade_guard(
-                    dec, costs, self.budget, cheap, mask, axis_name=axis)
+                    dec, costs_eff, budget, cheap, mask, axis_name=axis)
+            flops = jnp.sum(jnp.take(costs, dec) * valid)
+            if axis is not None:
+                flops = jax.lax.psum(flops, axis)
             rev = self._execute(tables, dec, rows, valid)
-            return rewards, dec, rev, spend, dg, tenant_spend
+            return rewards, dec, rev, spend, flops, dg, tenant_spend
 
         if self.mesh is not None:
             fn = shard_map(
                 fn, mesh=self.mesh,
-                in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS), P()),
-                out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P()))
+                in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS), P(), P(),
+                          P()),
+                out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(), P()))
         return jax.jit(fn)
 
     def _build_dual_fn(self, b: int, padded: bool):
-        """Nearline price update: Algorithm 1 on the window's rewards."""
+        """Nearline price update: Algorithm 1 on the window's rewards,
+        against the same traced (budget, scale) pair as the online pass -
+        in carbon mode the published price is reward-per-gCO2e."""
         axis = AXIS if self.mesh is not None else None
         cfg = self.dual_cfg
         costs = self._costs
 
-        def fn(rewards, valid, lam):
+        def fn(rewards, valid, lam, budget, scale):
             mask = valid if padded else None
             lam_new, _ = dual_descent(
-                rewards, costs, self.budget, lam, mask=mask,
+                rewards, costs * scale, budget, lam, mask=mask,
                 max_iters=cfg.max_iters, step_size=cfg.step_size,
                 step_decay=cfg.step_decay, axis_name=axis)
             return lam_new
 
         if self.mesh is not None:
             fn = shard_map(fn, mesh=self.mesh,
-                           in_specs=(P(AXIS), P(AXIS), P()),
+                           in_specs=(P(AXIS), P(AXIS), P(), P(), P()),
                            out_specs=P())
         return jax.jit(fn)
 
@@ -236,25 +259,42 @@ class ServingPipeline:
     # -- public API -----------------------------------------------------------
 
     def serve_window(self, ctx: np.ndarray, rows: np.ndarray, *,
-                     lam=None, update_lam: bool = True) -> WindowResult:
+                     lam=None, update_lam: bool = True, budget=None,
+                     cost_scale=None) -> WindowResult:
         """Serve one traffic window.
 
         ctx (n, d_context) raw contexts, rows (n,) user indices into the
         server's score tables.  Decisions use ``lam`` (default: the
         pipeline's nearline price, i.e. lambda_{t-1}); the pass then
         publishes lambda_t unless ``update_lam=False``.
+
+        ``budget`` overrides this window's budget (default: the
+        pipeline's); ``cost_scale`` re-denominates the window's costs as
+        ``costs * cost_scale`` - carbon pricing passes kappa*CI(t)
+        [gCO2e/FLOP] here together with a gCO2e ``budget``, making the
+        dual price reward-per-gram.  Both are traced, so time-varying
+        values never recompile.
         """
         n = len(rows)
         ctx = np.asarray(ctx, np.float32)
         rows = np.asarray(rows, np.int32)
+        if (budget is not None or cost_scale is not None) \
+                and self.tenant_budgets is not None:
+            raise NotImplementedError(
+                "per-window budget/cost_scale overrides with tenant blocks")
+        bud = self.budget if budget is None else float(budget)
+        sc = 1.0 if cost_scale is None else float(cost_scale)
         if n == 0:  # zero-arrival window: nothing to serve or learn from
             res = WindowResult(
-                n_valid=0, budget=self.budget, lam_before=self.lam,
+                n_valid=0, budget=bud, lam_before=self.lam,
                 lam_after=self.lam, decisions=jnp.zeros(0, jnp.int32),
                 revenue=jnp.zeros(0, jnp.float32),
                 spend=jnp.float32(0.0), downgraded=jnp.int32(0),
-                valid=np.zeros(0, np.float32))
+                valid=np.zeros(0, np.float32), flops=jnp.float32(0.0),
+                cost_scale=sc)
             self.stats.append(res)
+            if self.ledger is not None:
+                self.ledger.record_result(res)
             return res
         if self.tenant_budgets is not None:
             # tenant windows carry T equal blocks; padding must land at
@@ -290,20 +330,24 @@ class ServingPipeline:
         main_fn, dual_fn = self._fns[key]
         lam_in = self.lam if lam is None else jnp.float32(lam)
         valid_j = jnp.asarray(valid)
-        rewards, dec, rev, spend, dg, t_spend = main_fn(
+        bud_j, sc_j = jnp.float32(bud), jnp.float32(sc)
+        rewards, dec, rev, spend, flops, dg, t_spend = main_fn(
             self.reward_params, self._tables, jnp.asarray(ctx),
-            jnp.asarray(rows, jnp.int32), valid_j, lam_in)
+            jnp.asarray(rows, jnp.int32), valid_j, lam_in, bud_j, sc_j)
         # nearline: the price update never blocks the response - it is a
         # second dispatch reusing the on-device reward matrix, and the
         # NEXT window's decisions depend on its (device-side) output
-        lam_new = dual_fn(rewards, valid_j, lam_in)
+        lam_new = dual_fn(rewards, valid_j, lam_in, bud_j, sc_j)
         if update_lam:
             self.lam = lam_new
         res = WindowResult(
-            n_valid=n, budget=self.budget, lam_before=lam_in,
+            n_valid=n, budget=bud, lam_before=lam_in,
             lam_after=lam_new, decisions=dec, revenue=rev, spend=spend,
-            downgraded=dg, valid=valid, tenant_spend=t_spend)
+            downgraded=dg, valid=valid, tenant_spend=t_spend, flops=flops,
+            cost_scale=sc)
         self.stats.append(res)
+        if self.ledger is not None:
+            self.ledger.record_result(res)
         return res
 
     def spend_trace(self) -> np.ndarray:

@@ -8,16 +8,10 @@ while the device is still executing, and only then does the host read
 window t's results.  The nearline price update chains device-side, so
 the host never blocks on it.
 
-Scenarios yield per-window request counts:
-
-  constant  - n_base forever;
-  spike     - n_base, with a ``spike_mult`` x burst in the middle third
-              (paper Fig. 5 protocol);
-  diurnal   - a day-curve sinusoid between ~0.4x and 1.6x of n_base;
-  tenants   - constant traffic split into T equal tenant blocks; the
-              pipeline enforces per-tenant budgets under ONE shared dual
-              price (vs. running T independent pipelines - see
-              launch/serve.py --tenant-mode).
+Scenarios yield per-window request counts (see ``TrafficScenario`` for
+the shape of each); ``run_stream`` optionally threads per-window budget
+and cost-scale traces into the pipeline, which is how the carbon
+scenario prices each window at its grid intensity.
 """
 from __future__ import annotations
 
@@ -30,8 +24,32 @@ import numpy as np
 from repro.serving.pipeline import ServingPipeline, WindowResult
 
 
+SCENARIOS = ("constant", "spike", "diurnal", "tenants", "carbon")
+
+
 @dataclass(frozen=True)
 class TrafficScenario:
+    """A named per-window traffic shape.
+
+    ``name`` selects the shape:
+
+    * ``constant`` - ``n_base`` requests every window (steady state);
+    * ``spike``    - ``n_base`` with a ``spike_mult`` x burst over the 3
+      windows starting at the first third (paper Fig. 5 protocol: the
+      dual price lags the burst, the guard absorbs it);
+    * ``diurnal``  - one full day-curve sinusoid over ``n_windows``,
+      swinging between ~0.4x and ~1.6x of ``n_base``;
+    * ``tenants``  - constant traffic in ``n_tenants`` equal blocks per
+      window (per-tenant budgets under one shared dual price, or
+      independent pipelines - see launch/serve.py --tenant-mode);
+    * ``carbon``   - the diurnal day-curve, intended to be paired with a
+      grid-intensity trace (intensity x traffic): the driver prices each
+      window at kappa*CI(t) and budgets it in gCO2e (see repro.carbon
+      and launch/serve.py --scenario carbon).  Window counts are the
+      same day shape as ``diurnal``; the carbon part lives in the
+      per-window (budget, cost_scale) traces fed to ``run_stream``.
+    """
+
     name: str
     n_windows: int
     n_base: int
@@ -51,11 +69,12 @@ def scenario_windows(sc: TrafficScenario) -> list[int]:
         elif sc.name == "spike":
             burst = sc.n_windows // 3 <= t < sc.n_windows // 3 + 3
             n = int(sc.n_base * (sc.spike_mult if burst else 1.0))
-        elif sc.name == "diurnal":
+        elif sc.name in ("diurnal", "carbon"):
             phase = 2.0 * math.pi * t / max(1, sc.n_windows)
             n = int(sc.n_base * (1.0 + 0.6 * math.sin(phase)))
         else:
-            raise ValueError(f"unknown scenario {sc.name!r}")
+            raise ValueError(f"unknown scenario {sc.name!r}: valid "
+                             f"scenarios are {', '.join(SCENARIOS)}")
         if sc.n_tenants > 1:  # keep tenant blocks equal-sized
             n = max(sc.n_tenants, n - n % sc.n_tenants)
         sizes.append(max(1, n))
@@ -89,12 +108,16 @@ class StreamStats:
 
 
 def run_stream(pipeline: ServingPipeline, sizes: list[int],
-               sample_window, *, lam_trace=None) -> StreamStats:
+               sample_window, *, lam_trace=None, budget_trace=None,
+               scale_trace=None) -> StreamStats:
     """Drive the pipeline through ``sizes``, double-buffering host prep.
 
     sample_window(t, n) -> (ctx (n, d), rows (n,)) produces window t's
     arrivals; it runs while the device executes window t-1.  lam_trace
-    optionally pins the per-window entry price (parity testing).
+    optionally pins the per-window entry price (parity testing);
+    budget_trace / scale_trace set each window's budget and cost scale
+    (e.g. a ``CarbonBudget.schedule``'s grams + kappa*CI(t) columns) -
+    both are traced by the pipeline, so they never recompile.
     """
     t0 = time.perf_counter()
     dispatch_ms: list[float] = []
@@ -104,7 +127,10 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
         ctx, rows = nxt
         d0 = time.perf_counter()
         lam = None if lam_trace is None else lam_trace[t]
-        results.append(pipeline.serve_window(ctx, rows, lam=lam))
+        results.append(pipeline.serve_window(
+            ctx, rows, lam=lam,
+            budget=None if budget_trace is None else budget_trace[t],
+            cost_scale=None if scale_trace is None else scale_trace[t]))
         dispatch_ms.append((time.perf_counter() - d0) * 1e3)
         if t + 1 < len(sizes):  # prep t+1 while the device runs t
             nxt = sample_window(t + 1, sizes[t + 1])

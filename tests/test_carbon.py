@@ -1,0 +1,395 @@
+"""Carbon subsystem: traces, ledger math, and the budget-equivalence
+(parity) acceptance gate.
+
+Covers the ISSUE acceptance criteria:
+  * constant-CI trace => the carbon-denominated controller reproduces
+    today's FLOPs-budget decisions BIT-IDENTICALLY (both the fused
+    ServingPipeline path and the CarbonBudgetController host loop);
+  * diurnal trace => per-window gCO2e spend respects the gram cap;
+  * ledger metering equals the Eq. 1-2 arithmetic, with per-stage and
+    per-model attribution summing to the total.
+
+Parity tests use INTEGER-VALUED CI and hour-aligned windows so the
+trace's window means and the ratio-form effective budget are float-exact
+(the designed invariant: x/x == 1.0).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.carbon.controller import (CarbonBudget, CarbonBudgetController,
+                                     carbon_costs, grams_per_flop)
+from repro.carbon.intensity import (HOUR_S, IntensityTrace, constant_trace,
+                                    diurnal_trace, load_ci_csv,
+                                    solar_duck_trace, two_region_traces)
+from repro.carbon.ledger import DAY_S, CarbonLedger
+from repro.core.action_chain import (ModelInstance, StageSpec,
+                                     generate_action_chains)
+from repro.core.budget import BudgetController
+from repro.core.pfec import EnergyConfig, energy_from_flops, kwh_per_flop
+
+
+# ---------------------------------------------------------------------------
+# Intensity traces
+# ---------------------------------------------------------------------------
+
+
+def test_trace_generators_shapes_and_shape_properties():
+    d = diurnal_trace(mean=450.0, rel_amplitude=0.4)
+    assert len(d) == 24 and d.period_s == HOUR_S
+    assert np.all(d.values > 0)
+    assert int(np.argmax(d.values)) == 19  # evening peak
+    np.testing.assert_allclose(d.mean(), 450.0, rtol=1e-12)
+
+    duck = solar_duck_trace(mean=450.0)
+    base = diurnal_trace(mean=450.0, rel_amplitude=0.35)
+    assert duck.values[13] < base.values[13]  # midday solar depression
+    assert np.all(duck.values >= 0.1 * 450.0 - 1e-9)
+
+    regions = two_region_traces(offset_h=8.0)
+    a, b = regions["region_a"], regions["region_b"]
+    assert int(np.argmax(a.values)) == 19
+    assert int(np.argmax(b.values)) == (19 + 8) % 24
+
+    c = constant_trace(615.0, n=24)
+    assert np.all(c.values == 615.0)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        IntensityTrace(np.array([1.0, -2.0]), 3600.0)
+    with pytest.raises(ValueError):
+        IntensityTrace(np.array([1.0, 2.0]), 0.0)
+    with pytest.raises(ValueError):
+        diurnal_trace(rel_amplitude=1.5)
+    # day-curve generators must span exactly 24 h (else the cyclic trace
+    # would wrap mid-curve with a silent discontinuity)
+    with pytest.raises(ValueError, match="span one day"):
+        diurnal_trace(n=24, period_s=1800.0)
+    with pytest.raises(ValueError, match="span one day"):
+        solar_duck_trace(n=12)
+    assert len(diurnal_trace(n=48, period_s=1800.0)) == 48
+
+
+def test_trace_resample_and_wraparound():
+    v = np.arange(1.0, 25.0)  # 1..24, hourly
+    tr = IntensityTrace(v, HOUR_S)
+    # aligned hourly resample reproduces the samples
+    np.testing.assert_array_equal(tr.resample(24, HOUR_S), v)
+    # cyclic wrap: window 24 sees hour 0 again
+    np.testing.assert_array_equal(tr.resample(26, HOUR_S)[24:], v[:2])
+    # 2-hour windows take the mean of their two hours
+    np.testing.assert_allclose(tr.resample(12, 2 * HOUR_S),
+                               v.reshape(12, 2).mean(axis=1))
+    # phase shift slides the trace under the windows
+    np.testing.assert_array_equal(
+        tr.resample(4, HOUR_S, phase_s=3 * HOUR_S), v[3:7])
+    # at() is piecewise-constant and cyclic
+    assert tr.at(0.0) == 1.0 and tr.at(3600.0 * 25.5) == 2.0
+
+
+def test_load_ci_csv_uk_layout(tmp_path):
+    p = tmp_path / "uk.csv"
+    p.write_text(
+        "date,start,end,forecast,actual,index\n"
+        "2024-03-01,00:00,00:30,210,200,moderate\n"
+        "2024-03-01,00:30,01:00,205,190,moderate\n"
+        "2024-03-01,01:00,01:30,195,,low\n"  # blank -> forward-fill
+        "2024-03-01,01:30,02:00,180,170,low\n")
+    tr = load_ci_csv(str(p))
+    assert tr.period_s == 1800.0
+    np.testing.assert_array_equal(tr.values, [200.0, 190.0, 190.0, 170.0])
+
+    p2 = tmp_path / "simple.csv"
+    p2.write_text("date,start,actual\n"
+                  "2024-03-01,00:00,300\n"
+                  "2024-03-01,01:00,350\n"
+                  "2024-03-02,00:00,400\n")  # day boundary, gaps filled
+    tr2 = load_ci_csv(str(p2))
+    assert tr2.period_s == 3600.0 and len(tr2) == 25
+    assert tr2.values[0] == 300.0 and tr2.values[1] == 350.0
+    assert np.all(tr2.values[2:24] == 350.0) and tr2.values[24] == 400.0
+
+    bad = tmp_path / "bad.csv"
+    bad.write_text("date,start,actual\n2024-03-01,00:00,100\n"
+                   "2024-03-01,00:07,110\n2024-03-01,00:10,120\n")
+    with pytest.raises(ValueError, match="non-uniform"):
+        load_ci_csv(str(bad))
+
+
+# ---------------------------------------------------------------------------
+# Carbon budgets & cost vectors
+# ---------------------------------------------------------------------------
+
+
+def test_carbon_cost_and_budget_arithmetic():
+    cfg = EnergyConfig()
+    assert grams_per_flop(500.0, cfg) == kwh_per_flop(cfg) * 500.0
+    costs = np.array([1e6, 2e6, 4e6])
+    np.testing.assert_allclose(carbon_costs(costs, 500.0, cfg),
+                               costs * kwh_per_flop(cfg) * 500.0)
+
+    tr = constant_trace(600.0, n=24)
+    cb = CarbonBudget.from_flops(1e9, tr, cfg=cfg)
+    np.testing.assert_allclose(cb.grams_per_window,
+                               1e9 * kwh_per_flop(cfg) * 600.0, rtol=1e-12)
+    # the designed ratio-form invariant: constant CI => the effective
+    # FLOPs budget is TODAY'S budget, bit-exactly, every window
+    for t in range(30):
+        assert cb.flops_budget(t) == 1e9
+    # grams round-trip
+    cb2 = CarbonBudget.from_grams(cb.grams_per_window, tr, cfg=cfg)
+    np.testing.assert_allclose(cb2.flops_ref, 1e9, rtol=1e-12)
+
+    sched = cb.schedule(6)
+    np.testing.assert_array_equal(sched["flops_budget"], np.full(6, 1e9))
+    np.testing.assert_allclose(sched["scale"],
+                               np.full(6, grams_per_flop(600.0, cfg)))
+    # diurnal: greener window => larger effective FLOPs budget
+    cbd = CarbonBudget.from_flops(1e9, diurnal_trace(mean=450.0), cfg=cfg)
+    green = int(np.argmin([cbd.ci(t) for t in range(24)]))
+    dirty = int(np.argmax([cbd.ci(t) for t in range(24)]))
+    assert cbd.flops_budget(green) > 1e9 > cbd.flops_budget(dirty)
+
+
+# ---------------------------------------------------------------------------
+# Ledger metering (Eq. 1-2 per window + attribution)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_chains():
+    return generate_action_chains((
+        StageSpec("recall", (ModelInstance("DSSM", 13e3),), (150,), 4),
+        StageSpec("prerank", (ModelInstance("YDNN", 123e3),), (30, 60), 4),
+        StageSpec("rank", (ModelInstance("DIN", 7020e3),
+                           ModelInstance("DIEN", 7098e3)), (8, 16), 4),
+    ))
+
+
+def test_ledger_meters_eq1_eq2_with_attribution(tmp_path):
+    chains = _tiny_chains()
+    cfg = EnergyConfig()
+    tr = IntensityTrace(np.array([300.0, 600.0]), HOUR_S)
+    led = CarbonLedger(chains, tr, cfg=cfg, window_s=HOUR_S)
+    rng = np.random.default_rng(0)
+    decs = [rng.integers(0, chains.n_chains, 40) for _ in range(2)]
+    for d in decs:
+        led.record(d)
+    for t, (e, d) in enumerate(zip(led.entries, decs)):
+        flops = float(chains.costs[d].sum())
+        np.testing.assert_allclose(e.flops, flops, rtol=1e-12)
+        np.testing.assert_allclose(e.kwh, energy_from_flops(flops, cfg),
+                                   rtol=1e-12)
+        assert e.ci_g_per_kwh == tr.values[t]
+        np.testing.assert_allclose(e.gco2e, e.kwh * tr.values[t],
+                                   rtol=1e-12)
+        # attribution closes: stages and models each sum to the total
+        np.testing.assert_allclose(sum(e.stage_flops.values()), flops,
+                                   rtol=1e-9)
+        np.testing.assert_allclose(sum(e.model_flops.values()), flops,
+                                   rtol=1e-9)
+        np.testing.assert_allclose(
+            e.baseline_flops, 40 * chains.costs.max(), rtol=1e-12)
+        assert e.baseline_gco2e > e.gco2e
+    rep = led.report()
+    assert rep["n_windows"] == 2 and rep["n_requests"] == 80
+    # 2 recorded 1 h windows extrapolate x12 to the day
+    np.testing.assert_allclose(rep["daily_saved_kwh"],
+                               (rep["baseline_kwh"] - rep["kwh"]) * 12,
+                               rtol=1e-12)
+    np.testing.assert_allclose(rep["daily_saved_tco2e"],
+                               rep["daily_saved_gco2e"] / 1e6, rtol=1e-12)
+    path = str(tmp_path / "carbon_report.csv")
+    led.to_csv(path)
+    lines = open(path).read().strip().splitlines()
+    header = lines[0].split(",")
+    assert lines[0].startswith("window,ci_g_per_kwh,n_requests,flops,kwh")
+    assert len(lines) == 4 and lines[-1].startswith("TOTAL")
+    assert all(len(ln.split(",")) == len(header) for ln in lines[1:])
+    assert "stage_rank_flops" in header and "model_DIEN_flops" in header
+
+
+def test_ledger_mixed_recording_stays_ordered():
+    """Parked WindowResults drain before a direct record() infers its
+    window index, so mixing the two paths keeps windows ordered and each
+    metered at its own CI."""
+    chains = _tiny_chains()
+    tr = IntensityTrace(np.array([100.0, 200.0, 300.0]), HOUR_S)
+    led = CarbonLedger(chains, tr, window_s=HOUR_S)
+
+    class FakeResult:  # duck-typed WindowResult
+        def __init__(self, d):
+            self.decisions_np = d
+
+    led.record_result(FakeResult(np.zeros(5, np.int64)))
+    led.record(np.zeros(3, np.int64))  # must land AFTER the parked window
+    assert [e.window for e in led.entries] == [0, 1]
+    assert [e.n_requests for e in led.entries] == [5, 3]
+    assert [e.ci_g_per_kwh for e in led.entries] == [100.0, 200.0]
+
+
+def test_budget_controller_ledger_hook():
+    chains = _tiny_chains()
+    tr = constant_trace(615.0)
+    led = CarbonLedger(chains, tr)
+    ctl = BudgetController(chains, float(np.median(chains.costs)) * 50,
+                           ledger=led)
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        ctl.step_window(rng.random((50, chains.n_chains)).astype(np.float32))
+    assert len(led.entries) == 3
+    for e, s in zip(led.entries, ctl.stats):
+        np.testing.assert_allclose(e.flops, s.spend, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# A tiny serving universe (no training - random scores/params)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def carbon_stack():
+    from repro.cascade.engine import CascadeServer
+    from repro.core.reward_model import RewardModelConfig, reward_model_init
+
+    rng = np.random.default_rng(0)
+    u, i = 40, 150
+    scores = {k: rng.normal(size=(u, i)).astype(np.float32)
+              for k in ("DSSM", "YDNN", "DIN", "DIEN")}
+    clicks = (rng.random((u, i)) < 0.15).astype(np.float32)
+    n2 = tuple(int(x) for x in np.linspace(0.2 * i, 0.5 * i, 4))
+    n3 = tuple(int(x) for x in np.linspace(8, 0.2 * i, 4))
+    chains = generate_action_chains((
+        StageSpec("recall", (ModelInstance("DSSM", 13e3),), (i,), 4),
+        StageSpec("prerank", (ModelInstance("YDNN", 123e3),), n2, 4),
+        StageSpec("rank", (ModelInstance("DIN", 7020e3),
+                           ModelInstance("DIEN", 7098e3)), n3, 4),
+    ))
+    server = CascadeServer(stage_scores=scores, chains=chains,
+                           clicks=clicks, expose=8)
+    rcfg = RewardModelConfig(n_stages=3, max_models=2, n_scale_groups=4,
+                             d_context=12, d_feature=16, d_hidden=16,
+                             d_state=8)
+    params = dict(reward_model_init(jax.random.PRNGKey(0), rcfg))
+    params["label_norm"] = jnp.asarray(
+        np.linspace(1.0, 3.0, chains.n_chains).astype(np.float32))
+    return chains, server, params, rcfg
+
+
+def _windows(u, n_windows=6, n=64, seed=1):
+    rng = np.random.default_rng(seed)
+    return [(rng.normal(size=(n, 12)).astype(np.float32),
+             rng.integers(0, u, n)) for _ in range(n_windows)]
+
+
+# ---------------------------------------------------------------------------
+# THE parity gate: constant CI == today's FLOPs pipeline, bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_constant_ci_pipeline_parity_bit_identical(carbon_stack):
+    """Acceptance: a constant-CI carbon budget reproduces the plain
+    FLOPs-budget pipeline decision-for-decision (and, for the ratio-form
+    flops pricing, price-for-price bitwise)."""
+    from repro.serving.pipeline import ServingPipeline
+
+    chains, server, params, rcfg = carbon_stack
+    b_f = 0.5 * float(chains.costs.max()) * 64
+    tr = constant_trace(600.0, n=24)
+    cb = CarbonBudget.from_flops(b_f, tr, window_s=HOUR_S)
+    wins = _windows(40)
+
+    pipe_ref = ServingPipeline(server, params, rcfg, b_f)
+    pipe_flops = ServingPipeline(server, params, rcfg, b_f)
+    pipe_carbon = ServingPipeline(server, params, rcfg, b_f)
+    for t, (ctx, rows) in enumerate(wins):
+        r_ref = pipe_ref.serve_window(ctx, rows)
+        # flops pricing: ratio-form effective budget, bitwise the same
+        r_f = pipe_flops.serve_window(ctx, rows,
+                                      budget=cb.flops_budget(t))
+        np.testing.assert_array_equal(r_ref.decisions_np, r_f.decisions_np)
+        assert float(r_ref.lam_after) == float(r_f.lam_after)
+        np.testing.assert_array_equal(np.asarray(r_ref.spend),
+                                      np.asarray(r_f.spend))
+        # native carbon pricing: gram budget + kappa*CI costs; same LP up
+        # to a positive scalar => identical decisions
+        r_c = pipe_carbon.serve_window(ctx, rows,
+                                       budget=cb.grams_per_window,
+                                       cost_scale=cb.scale(t))
+        np.testing.assert_array_equal(r_ref.decisions_np, r_c.decisions_np)
+        np.testing.assert_array_equal(r_ref.revenue_np, r_c.revenue_np)
+        assert int(r_ref.downgraded) == int(r_c.downgraded)
+        # spend is re-denominated, FLOPs metering is not
+        np.testing.assert_allclose(float(r_c.flops), float(r_ref.flops),
+                                   rtol=1e-6)
+
+
+def test_constant_ci_controller_parity_bit_identical(carbon_stack):
+    """Same gate for the host-loop controllers: CarbonBudgetController at
+    constant CI == BudgetController, decision-for-decision."""
+    chains, _, _, _ = carbon_stack
+    b_f = 0.5 * float(chains.costs.max()) * 48
+    tr = constant_trace(615.0, n=24)
+    cb = CarbonBudget.from_flops(b_f, tr, window_s=HOUR_S)
+    rng = np.random.default_rng(3)
+    rewards = [rng.random((48, chains.n_chains)).astype(np.float32) * 3.0
+               for _ in range(5)]
+
+    ref = BudgetController(chains, b_f)
+    ctl_f = CarbonBudgetController(chains, cb, pricing="flops")
+    ctl_c = CarbonBudgetController(chains, cb, pricing="carbon")
+    for r in rewards:
+        d_ref = ref.step_window(r)
+        d_f = ctl_f.step_window(r)
+        d_c = ctl_c.step_window(r)
+        np.testing.assert_array_equal(d_ref, d_f)
+        np.testing.assert_array_equal(d_ref, d_c)
+        s_ref, s_f = ref.stats[-1], ctl_f.stats[-1]
+        assert s_ref.downgraded == s_f.downgraded
+        assert s_f.lam == s_ref.lam  # bitwise: same descent, same floats
+        np.testing.assert_allclose(ctl_c.stats[-1].flops, s_ref.spend,
+                                   rtol=1e-12)
+
+
+def test_diurnal_carbon_run_respects_gram_cap(carbon_stack):
+    """Carbon pricing on a diurnal grid: every window's gCO2e spend stays
+    under max(gram budget, floor) and dirty hours downgrade chains."""
+    from repro.serving.pipeline import ServingPipeline
+
+    chains, server, params, rcfg = carbon_stack
+    n = 64
+    tr = diurnal_trace(mean=450.0, rel_amplitude=0.45)
+    # tight: 30% of the all-max spend at mean CI
+    cb = CarbonBudget.from_flops(0.3 * float(chains.costs.max()) * n, tr,
+                                 window_s=HOUR_S)
+    led = CarbonLedger(chains, tr, cfg=cb.cfg, window_s=HOUR_S)
+    pipe = ServingPipeline(server, params, rcfg, cb.flops_ref, ledger=led)
+    c_min = float(chains.costs.min())
+    wins = _windows(40, n_windows=8, n=n, seed=5)
+    for t, (ctx, rows) in enumerate(wins):
+        s = cb.scale(t)
+        r = pipe.serve_window(ctx, rows, budget=cb.grams_per_window,
+                              cost_scale=s)
+        cap = max(cb.grams_per_window, n * c_min * s)
+        assert float(r.spend) <= cap * (1 + 1e-5)
+        # spend is the realized FLOPs re-priced at this window's CI
+        np.testing.assert_allclose(float(r.spend), float(r.flops) * s,
+                                   rtol=1e-5)
+    assert any(int(r.downgraded) > 0 for r in pipe.stats)
+    # the ledger metered every window lazily, at the right CI
+    assert len(led.entries) == len(wins)
+    for t, e in enumerate(led.entries):
+        assert e.ci_g_per_kwh == pytest.approx(tr.values[t % 24])
+
+
+def test_carbon_scenario_windows_and_unknown_error():
+    from repro.serving.stream import TrafficScenario, scenario_windows
+
+    carbon = scenario_windows(TrafficScenario("carbon", 12, 96))
+    diurnal = scenario_windows(TrafficScenario("diurnal", 12, 96))
+    assert carbon == diurnal  # same day curve; carbon adds the CI pairing
+    with pytest.raises(ValueError, match="carbon"):
+        scenario_windows(TrafficScenario("nope", 4, 8))

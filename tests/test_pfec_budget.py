@@ -20,6 +20,26 @@ def test_energy_and_carbon_follow_paper_constants():
     assert energy_from_flops(1e15, cfg2) == pytest.approx(2 * kwh)
 
 
+def test_energy_config_validation():
+    with pytest.raises(ValueError, match="pue"):
+        EnergyConfig(pue=0.8)
+    with pytest.raises(ValueError, match="p_gpu_w"):
+        EnergyConfig(p_gpu_w=0.0)
+    with pytest.raises(ValueError, match="sustained_flops_per_s"):
+        EnergyConfig(sustained_flops_per_s=-1e12)
+    with pytest.raises(ValueError, match="carbon_intensity_g_per_kwh"):
+        EnergyConfig(carbon_intensity_g_per_kwh=0.0)
+    with pytest.raises(ValueError, match="ram_cpu_fraction"):
+        EnergyConfig(ram_cpu_fraction=-0.1)
+
+
+def test_default_cfg_is_fresh_not_import_time():
+    # cfg=None routes through one fresh default; the old `=EnergyConfig()`
+    # default arg was evaluated once at import
+    assert energy_from_flops(1e15) == energy_from_flops(1e15, EnergyConfig())
+    assert carbon_from_energy(2.0) == 2.0 * 615.0
+
+
 def test_pfec_report_fields():
     r = pfec_report(clicks=123.0, flops=1e12, extra="x")
     row = r.as_row()
@@ -29,6 +49,18 @@ def test_pfec_report_fields():
     assert row["extra"] == "x"
 
 
+def test_pfec_report_meta_passthrough():
+    r = pfec_report(clicks=1.0, flops=1e9, method="greenflow",
+                    budget_frac=0.5, window=3)
+    row = r.as_row()
+    assert (row["method"], row["budget_frac"], row["window"]) == \
+        ("greenflow", 0.5, 3)
+    assert r.meta == {"method": "greenflow", "budget_frac": 0.5, "window": 3}
+    # meta never clobbers the four PFEC columns
+    assert set(row) == {"performance", "flops", "energy_kwh", "carbon_g",
+                        "method", "budget_frac", "window"}
+
+
 def test_revenue_at_e():
     clicks = np.zeros(50)
     clicks[[3, 7, 40]] = 1.0
@@ -36,6 +68,23 @@ def test_revenue_at_e():
     assert revenue_at_e(clicks, ranked, e=20) == 3.0
     ranked_bad = np.arange(50)[::-1]
     assert revenue_at_e(clicks, ranked_bad, e=5) == 0.0
+
+
+def test_revenue_at_e_edge_cases():
+    clicks = np.zeros(10)
+    clicks[[1, 4]] = 1.0
+    ranked = np.argsort(-clicks, kind="stable")
+    # e beyond the candidate set exposes everything ranked
+    assert revenue_at_e(clicks, ranked, e=500) == 2.0
+    # empty ranking exposes nothing (and must not crash on fancy-indexing)
+    assert revenue_at_e(clicks, np.array([], dtype=np.int64), e=5) == 0.0
+    assert revenue_at_e(clicks, [], e=5) == 0.0
+    # non-contiguous / non-float labels: a strided int view and a bool view
+    clicks_int = np.zeros(20, np.int32)
+    clicks_int[[2, 6]] = 1
+    strided = clicks_int[::2]  # items 0,2,4,...: clicks at positions 1, 3
+    assert revenue_at_e(strided, np.array([1, 3, 0]), e=2) == 2.0
+    assert revenue_at_e(clicks.astype(bool), ranked, e=3) == 2.0
 
 
 def test_budget_controller_guard_caps_spend():
