@@ -52,30 +52,21 @@ def _exact_alloc(R: np.ndarray, costs: np.ndarray, s_req: np.ndarray,
 
     R (N, J) predicted rewards; costs (J,) FLOPs; s_req (N,) per-request
     cost scale (1 = FLOPs pricing, kappa*CI(t_i) = carbon pricing), so
-    request i's effective cost vector is s_req[i] * costs.  Spend
-    sum_i s_req[i]*costs[dec_i] is non-increasing in the price =>
-    bisection is exact up to float resolution (cf. dual_bisect).
+    request i's effective cost vector is s_req[i] * costs.  Delegates to
+    the ONE bisection oracle (``bench_geo._exact_alloc``, the general
+    per-request-per-option form) so the two benchmarks' "exact dual"
+    arms can never drift apart.
     """
+    try:
+        from benchmarks.bench_geo import _exact_alloc as general
+    except ModuleNotFoundError:  # script mode: repo root not on sys.path
+        import sys
 
-    def alloc(lam):
-        return np.argmax(R - (lam * s_req)[:, None] * costs[None, :],
-                         axis=1)
+        sys.path.insert(0, REPO)
+        from benchmarks.bench_geo import _exact_alloc as general
 
-    def spend(dec):
-        return float(np.sum(s_req * costs[dec]))
-
-    if spend(alloc(0.0)) <= budget:
-        return alloc(0.0)
-    lo, hi = 0.0, 1.0
-    while spend(alloc(hi)) > budget and hi < 1e30:
-        hi *= 2.0
-    for _ in range(iters):
-        mid = 0.5 * (lo + hi)
-        if spend(alloc(mid)) <= budget:
-            hi = mid
-        else:
-            lo = mid
-    return alloc(hi)
+    return general(R, s_req[:, None] * costs[None, :], budget,
+                   iters=iters)
 
 
 def run(*, windows: int = 24, requests: int = 64, band_frac: float = 0.5,

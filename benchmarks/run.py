@@ -3,6 +3,12 @@ micro-latency + roofline summary.  Prints ``name,us_per_call,derived``
 CSV rows (plus per-table columns), per the repo skeleton contract.
 
     PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run --all   # every BENCH_*.json
+
+``--all`` is the one-stop regeneration entrypoint: it reruns every
+standalone benchmark (chain simulation, fused serving, carbon
+allocation, geo-shifting) and rewrites the corresponding
+``BENCH_*.json`` at the repo root, then exits.
 """
 from __future__ import annotations
 
@@ -113,12 +119,58 @@ def bench_kernels() -> list[dict]:
     return rows
 
 
+def run_all_json(fast: bool = False) -> dict:
+    """Regenerate every BENCH_*.json from one entrypoint; returns
+    {bench name: json path}.  ``fast`` shrinks each bench to a
+    CI-smoke size (minutes -> tens of seconds; numbers are NOT
+    comparable to the full-size records)."""
+    import os
+
+    from benchmarks import (bench_carbon, bench_chain_sim, bench_geo,
+                            bench_serve)
+
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    out = {}
+    print("[run --all] chain simulation ...")
+    bench_chain_sim.run(json_path=os.path.join(repo,
+                                               "BENCH_chain_sim.json"),
+                        **({"repeats": 3} if fast else {}))
+    out["chain_sim"] = "BENCH_chain_sim.json"
+    print("[run --all] fused serving vs legacy loop ...")
+    bench_serve.run(json_path=os.path.join(repo, "BENCH_serve.json"),
+                    **({"windows": 10, "requests": 48} if fast else {}))
+    out["serve"] = "BENCH_serve.json"
+    print("[run --all] carbon-aware vs constant-CI allocation ...")
+    bench_carbon.run(json_path=os.path.join(repo, "BENCH_carbon.json"),
+                     report_path=os.path.join(repo, "results",
+                                              "carbon_report.csv"),
+                     **({"windows": 12, "requests": 24,
+                         "phases": (0.0, 12.0)} if fast else {}))
+    out["carbon"] = "BENCH_carbon.json"
+    print("[run --all] geo-shifted vs pinned-region serving ...")
+    bench_geo.run(json_path=os.path.join(repo, "BENCH_geo.json"),
+                  **({"windows": 12, "requests": 24,
+                      "phases": (0.0, 12.0)} if fast else {}))
+    out["geo"] = "BENCH_geo.json"
+    for name, path in out.items():
+        print(f"[run --all] {name:10s} -> {path}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller world (CI-sized)")
     ap.add_argument("--skip-tables", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="regenerate every BENCH_*.json and exit "
+                         "(--fast shrinks each bench to smoke size; "
+                         "--skip-tables is implied)")
     args = ap.parse_args()
+
+    if args.all:
+        run_all_json(fast=args.fast)
+        return
 
     from benchmarks import roofline, tables
     from repro.data.synthetic import WorldConfig

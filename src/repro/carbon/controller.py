@@ -38,8 +38,7 @@ import numpy as np
 from repro.carbon.intensity import IntensityTrace
 from repro.core.action_chain import ActionChainSet
 from repro.core.pfec import EnergyConfig, kwh_per_flop
-from repro.core.primal_dual import DualDescentConfig, allocate, dual_descent
-from repro.serving.guard import downgrade_guard_np
+from repro.core.primal_dual import DualDescentConfig, window_step
 
 
 def grams_per_flop(ci_g_per_kwh: float,
@@ -169,8 +168,11 @@ class CarbonBudgetController:
         self.stats: list[CarbonWindowStats] = []
 
     def step_window(self, rewards: np.ndarray) -> np.ndarray:
-        """Serve one window: Eq. 10 decide -> guard -> ledger -> dual."""
-        jnp = self._jnp
+        """Serve one window: Eq. 10 decide -> guard -> ledger -> dual.
+
+        The loop body is ``core.primal_dual.window_step`` - the SAME
+        implementation the FLOPs-budget ``BudgetController`` wraps;
+        pricing carbon is only a change of cost vector and cap."""
         t = len(self.stats)
         ci = self.budget.ci(t)
         scale = self.budget.scale(t)
@@ -180,22 +182,12 @@ class CarbonBudgetController:
         else:  # flops reduction: same LP, costs stay in FLOPs
             costs = self.chains.costs
             cap = self.budget.flops_budget(t)
-        costs_j = jnp.asarray(costs, jnp.float32)
-        cfg = self.dual_cfg
-        decisions = np.asarray(allocate(jnp.asarray(rewards), costs_j,
-                                        self.lam))
-        downgraded = 0
-        spend = float(np.sum(costs[decisions]))
-        if self.guard:
-            decisions, downgraded, spend = downgrade_guard_np(
-                decisions, costs, cap, self.chains.cheapest())
+        decisions, downgraded, spend, self.lam = window_step(
+            rewards, costs, cap, self.lam, cheap=self.chains.cheapest(),
+            guard=self.guard, cfg=self.dual_cfg)
         flops = float(np.sum(self.chains.costs[decisions]))
         if self.ledger is not None:
             self.ledger.record(decisions, t=t, ci=ci)
-        self.lam, _ = dual_descent(
-            jnp.asarray(rewards), costs_j, cap, self.lam,
-            max_iters=cfg.max_iters, step_size=cfg.step_size,
-            step_decay=cfg.step_decay)
         spend_g = spend if self.pricing == "carbon" else spend * scale
         self.stats.append(CarbonWindowStats(
             n_requests=len(decisions), ci_g_per_kwh=ci, flops=flops,

@@ -18,6 +18,18 @@ Windows recorded through :meth:`CarbonLedger.record_result` (the
 ``ServingPipeline`` hook) are metered LAZILY: the ledger parks the
 ``WindowResult`` and only reads its device arrays when a report is
 requested, so metering never blocks the double-buffered stream.
+
+EMBODIED carbon: the hardware's manufacturing footprint amortized over
+its service life (the ichnos ``EmbodiedCarbon.py`` model - a constant
+gCO2e per device-hour) accrues per window as
+``embodied_g_per_device_h * n_devices * window_s / 3600`` regardless of
+load, so reports and the CSV carry operational AND total footprints -
+a serving day is never under-reported as operational-only.  The default
+constant amortizes a ~1.3 tCO2e server manufacture over a 4-year life.
+
+Geo serving keeps ONE ledger PER REGION (each metered at its region's
+CI trace); ``geo_report_csv`` merges them into a single CSV with a
+leading ``region`` column - the per-region attribution artifact.
 """
 from __future__ import annotations
 
@@ -31,6 +43,10 @@ from repro.core.action_chain import ActionChainSet
 from repro.core.pfec import EnergyConfig, energy_from_flops
 
 DAY_S = 86400.0
+
+# ichnos EmbodiedCarbon-style amortization constant: ~1.3 tCO2e server
+# manufacture / (4 y * 365 d * 24 h) ~= 37 g per device-hour
+DEFAULT_EMBODIED_G_PER_DEVICE_H = 37.0
 
 
 @dataclass(frozen=True)
@@ -46,8 +62,14 @@ class WindowCarbonEntry:
     baseline_flops: float  # all-max-chain counterfactual
     baseline_kwh: float
     baseline_gco2e: float
+    embodied_gco2e: float = 0.0  # amortized manufacture, load-independent
     stage_flops: dict[str, float] = field(default_factory=dict)
     model_flops: dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_gco2e(self) -> float:
+        """Operational + embodied footprint of the window."""
+        return self.gco2e + self.embodied_gco2e
 
 
 class CarbonLedger:
@@ -62,16 +84,26 @@ class CarbonLedger:
     cfg: Eq. 1 energy constants (default: fresh ``EnergyConfig``).
     window_s: serving-window length in seconds (sets the windows-per-day
         extrapolation of the daily report).
+    embodied_g_per_device_h / n_devices: amortized embodied carbon
+        accrued per window (0.0 disables the line; pass
+        ``DEFAULT_EMBODIED_G_PER_DEVICE_H`` for the ichnos-style server
+        constant).
+    name: label used by multi-ledger (per-region) reports.
     """
 
     def __init__(self, chains: ActionChainSet, trace: IntensityTrace, *,
                  cfg: EnergyConfig | None = None, window_s: float = 3600.0,
-                 phase_s: float = 0.0):
+                 phase_s: float = 0.0,
+                 embodied_g_per_device_h: float = 0.0, n_devices: int = 1,
+                 name: str = "serving"):
         self.chains = chains
         self.trace = trace
         self.cfg = cfg or EnergyConfig()
         self.window_s = float(window_s)
         self.phase_s = float(phase_s)
+        self.embodied_g_per_device_h = float(embodied_g_per_device_h)
+        self.n_devices = int(n_devices)
+        self.name = name
         self._entries: list[WindowCarbonEntry] = []
         self._pending: list = []  # WindowResults awaiting metering
 
@@ -121,10 +153,12 @@ class CarbonLedger:
         base_kwh = energy_from_flops(base_flops, self.cfg)
         per_stage = counts @ self._stage_table  # (K,)
         per_model = counts @ self._model_table  # (M,)
+        embodied = (self.embodied_g_per_device_h * self.n_devices
+                    * self.window_s / 3600.0)
         entry = WindowCarbonEntry(
             window=t, ci_g_per_kwh=ci, n_requests=n, flops=flops, kwh=kwh,
             gco2e=kwh * ci, baseline_flops=base_flops, baseline_kwh=base_kwh,
-            baseline_gco2e=base_kwh * ci,
+            baseline_gco2e=base_kwh * ci, embodied_gco2e=embodied,
             stage_flops={s: float(v)
                          for s, v in zip(self.stage_names, per_stage)},
             model_flops={m: float(v)
@@ -161,7 +195,8 @@ class CarbonLedger:
             raise ValueError("carbon ledger is empty: no windows recorded")
         tot = {k: float(sum(getattr(e, k) for e in entries))
                for k in ("flops", "kwh", "gco2e", "baseline_flops",
-                         "baseline_kwh", "baseline_gco2e")}
+                         "baseline_kwh", "baseline_gco2e",
+                         "embodied_gco2e")}
         n_w = len(entries)
         day_factor = (DAY_S / self.window_s) / n_w
         saved_kwh = tot["baseline_kwh"] - tot["kwh"]
@@ -170,6 +205,7 @@ class CarbonLedger:
                  for s in self.stage_names}
         model = {m: float(sum(e.model_flops.get(m, 0.0) for e in entries))
                  for m in self.model_names}
+        total_g = tot["gco2e"] + tot["embodied_gco2e"]
         return {
             "n_windows": n_w,
             "window_s": self.window_s,
@@ -177,10 +213,13 @@ class CarbonLedger:
             "mean_ci_g_per_kwh": float(np.mean(
                 [e.ci_g_per_kwh for e in entries])),
             **tot,
+            "total_gco2e": total_g,
             "saved_kwh": saved_kwh,
             "saved_gco2e": saved_g,
             "daily_kwh": tot["kwh"] * day_factor,
             "daily_gco2e": tot["gco2e"] * day_factor,
+            "daily_embodied_gco2e": tot["embodied_gco2e"] * day_factor,
+            "daily_total_gco2e": total_g * day_factor,
             "daily_saved_kwh": saved_kwh * day_factor,
             "daily_saved_gco2e": saved_g * day_factor,
             "daily_saved_tco2e": saved_g * day_factor / 1e6,
@@ -188,34 +227,68 @@ class CarbonLedger:
             "model_flops": model,
         }
 
-    def to_csv(self, path: str) -> str:
-        """Write per-window rows + a TOTAL row; returns the path."""
-        entries = self.entries
+    def _csv_columns(self) -> list[str]:
         cols = ["window", "ci_g_per_kwh", "n_requests", "flops", "kwh",
                 "gco2e", "baseline_flops", "baseline_kwh", "baseline_gco2e",
                 "saved_kwh", "saved_gco2e"]
         cols += [f"stage_{s}_flops" for s in self.stage_names]
         cols += [f"model_{m}_flops" for m in self.model_names]
+        cols += ["embodied_gco2e", "total_gco2e"]
+        return cols
+
+    def _csv_rows(self) -> list[list]:
+        rows = []
+        for e in self.entries:
+            row = [e.window, e.ci_g_per_kwh, e.n_requests, e.flops,
+                   e.kwh, e.gco2e, e.baseline_flops, e.baseline_kwh,
+                   e.baseline_gco2e, e.baseline_kwh - e.kwh,
+                   e.baseline_gco2e - e.gco2e]
+            row += [e.stage_flops[s] for s in self.stage_names]
+            row += [e.model_flops[m] for m in self.model_names]
+            row += [e.embodied_gco2e, e.total_gco2e]
+            rows.append(row)
+        r = self.report()
+        row = ["TOTAL", r["mean_ci_g_per_kwh"], r["n_requests"],
+               r["flops"], r["kwh"], r["gco2e"], r["baseline_flops"],
+               r["baseline_kwh"], r["baseline_gco2e"], r["saved_kwh"],
+               r["saved_gco2e"]]
+        row += [r["stage_flops"][s] for s in self.stage_names]
+        row += [r["model_flops"][m] for m in self.model_names]
+        row += [r["embodied_gco2e"], r["total_gco2e"]]
+        rows.append(row)
+        return rows
+
+    def to_csv(self, path: str) -> str:
+        """Write per-window rows + a TOTAL row; returns the path."""
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         with open(path, "w") as f:
-            f.write(",".join(cols) + "\n")
-            for e in entries:
-                row = [e.window, e.ci_g_per_kwh, e.n_requests, e.flops,
-                       e.kwh, e.gco2e, e.baseline_flops, e.baseline_kwh,
-                       e.baseline_gco2e, e.baseline_kwh - e.kwh,
-                       e.baseline_gco2e - e.gco2e]
-                row += [e.stage_flops[s] for s in self.stage_names]
-                row += [e.model_flops[m] for m in self.model_names]
+            f.write(",".join(self._csv_columns()) + "\n")
+            for row in self._csv_rows():
                 f.write(",".join(_fmt(v) for v in row) + "\n")
-            r = self.report()
-            row = ["TOTAL", r["mean_ci_g_per_kwh"], r["n_requests"],
-                   r["flops"], r["kwh"], r["gco2e"], r["baseline_flops"],
-                   r["baseline_kwh"], r["baseline_gco2e"], r["saved_kwh"],
-                   r["saved_gco2e"]]
-            row += [r["stage_flops"][s] for s in self.stage_names]
-            row += [r["model_flops"][m] for m in self.model_names]
-            f.write(",".join(_fmt(v) for v in row) + "\n")
         return path
+
+
+def geo_report_csv(ledgers: dict[str, "CarbonLedger"], path: str) -> str:
+    """Merge per-region ledgers into one CSV with a ``region`` column.
+
+    ``ledgers`` maps region name -> that region's ledger (each metered
+    at its own CI trace) - the per-region attribution artifact of a
+    geo-shifted serving day.  Rows keep each ledger's windows + TOTAL.
+    """
+    if not ledgers:
+        raise ValueError("geo_report_csv needs at least one ledger")
+    first = next(iter(ledgers.values()))
+    cols = ["region"] + first._csv_columns()
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for name, led in ledgers.items():
+            if led._csv_columns() != cols[1:]:
+                raise ValueError(f"ledger {name!r} has a different "
+                                 f"column layout")
+            for row in led._csv_rows():
+                f.write(",".join(_fmt(v) for v in [name] + row) + "\n")
+    return path
 
 
 def _fmt(v) -> str:

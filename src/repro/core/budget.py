@@ -16,8 +16,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.action_chain import ActionChainSet
-from repro.core.primal_dual import DynamicPrimalDual, DualDescentConfig
-from repro.serving.guard import downgrade_guard_np
+from repro.core.primal_dual import (DualDescentConfig, DynamicPrimalDual,
+                                    window_step)
 
 
 @dataclass
@@ -49,28 +49,26 @@ class BudgetController:
         """Serve one traffic window: decide with lambda_{t-1}, meter spend,
         apply the downgrade guard, then update the price for t+1.
 
+        The whole decide -> tail-reserve guard -> Algorithm 1 body is
+        ``core.primal_dual.window_step`` (shared with the carbon-priced
+        controller); this wrapper only meters the ledger and keeps the
+        DynamicPrimalDual tracker's price/history in sync.
+
         rewards: (I_t, J) estimated rewards for this window's requests.
         Returns the (possibly downgraded) chain index per request.
         """
-        decisions = np.asarray(self.pd.decide(rewards))
-        costs = self.chains.costs
-        downgraded = 0
-        spend = float(np.sum(costs[decisions]))
-        if self.guard:
-            # greedy with tail reserve (repro.serving.guard): request i
-            # keeps its chain only if the spend so far + its cost + a
-            # cheapest-chain reservation for everyone behind it still
-            # fits.  Guarantees spend <= budget whenever n*c_min <= budget.
-            decisions, downgraded, spend = downgrade_guard_np(
-                decisions, costs, self.budget_per_window,
-                self.chains.cheapest())
+        decisions, downgraded, spend, lam_new = window_step(
+            rewards, self.chains.costs, self.budget_per_window, self.pd.lam,
+            cheap=self.chains.cheapest(), guard=self.guard,
+            cfg=self.dual_cfg)
         if self.ledger is not None:
             self.ledger.record(decisions, t=len(self.stats))
-
-        lam = self.pd.update(rewards)
+        self.pd.lam = lam_new
+        self.pd.history.append(float(lam_new))
         self.stats.append(WindowStats(
             n_requests=len(decisions), spend=spend,
-            budget=self.budget_per_window, lam=lam, downgraded=downgraded))
+            budget=self.budget_per_window, lam=float(lam_new),
+            downgraded=downgraded))
         return decisions
 
     def spend_trace(self) -> np.ndarray:

@@ -1,20 +1,58 @@
-"""Dynamic primal-dual optimization (paper §4.3, Algorithm 1).
+"""Vectorized multi-price allocator core (paper §4.3, Algorithm 1).
 
-The assignment LP (Eq. 3) has ONE coupling constraint (the global FLOPs
-budget), so its Lagrangian dual is a scalar problem in the dual price
-lambda.  Given lambda, the inner max decomposes per request:
+This module is the ONE implementation of GreenFlow's Eq. 10 / Algorithm 1
+machinery; everything that prices computation builds on it:
+
+  * the fused serving pass  - ``serving.pipeline.ServingPipeline`` calls
+    ``allocate``/``dual_descent`` inside its jitted window pass (scalar
+    price, per-tenant prices, or per-region geo prices);
+  * the host loops          - ``core.budget.BudgetController`` and
+    ``carbon.controller.CarbonBudgetController`` are thin wrappers over
+    ``window_step`` (decide -> guard -> dual) with FLOPs- or
+    carbon-denominated costs;
+  * the downgrade guard     - ``serving.guard.downgrade_guard`` shares
+    the same scalar/vector duality (per-constraint budgets via ``k_of``).
+
+The assignment LP (Eq. 3) couples requests through budget constraints.
+With ONE global budget the Lagrangian dual is a scalar price lambda and
+the inner max decomposes per request:
 
     x_ij = 1  iff  j = argmax_j (R_ij - lambda * c_j)          (Eq. 10)
 
-and the dual subgradient is  dL/dlambda = C - sum_i c_{j*(i)}.
+The general form prices K >= 1 constraints at once - K ranges over
+tenant x region in the serving system, but the core is agnostic:
+
+    x_im = 1  iff  m = argmax_m (R_im - sum_k lam_k * A_imk)
+
+where m indexes OPTIONS (chains, or chains x serving regions) and the
+consumption tensor factors as  A_imk = member_ik * C_mk  with
+
+    C      (M, K)  cost map: what option m draws from constraint k
+                   (e.g. c_{j,r}(t) = flops_j * kappa * CI_r(t) in
+                   column r for geo options, zero elsewhere);
+    member (I, K)  which constraints request i is subject to (tenant
+                   one-hot; None = every request subject to all K).
+
+Every function below accepts BOTH forms and the scalar form is the K=1
+special case executing the identical floating-point operations - the
+bit-parity gate in tests/test_multi_price.py:
+
+  * scalar: ``lam`` a scalar, ``costs`` (M,);
+  * vector: ``lam`` (K,), ``costs`` (M, K) (an (M, 1) column broadcasts
+    across K when ``member`` carries the constraint structure).
 
 We provide:
-  * ``dual_descent``  - Algorithm 1 verbatim as a lax.scan (jit-able, runs
-    the whole nearline window on-device).
-  * ``dual_bisect``   - an exact oracle: consumption(lambda) is a step
-    function, non-increasing in lambda, so the optimal price is found by
-    bisection.  Used for tests and as a warm-start.
   * ``allocate``      - Eq. 10 decisions for a batch of requests.
+  * ``consumption``   - per-constraint spend at a given price (psum-able
+    across a request mesh axis for the sharded fused pipeline).
+  * ``dual_descent``  - Algorithm 1 as a lax.scan (jit-able, runs the
+    whole nearline window on-device); K prices descend jointly on the
+    per-constraint subgradients.
+  * ``dual_bisect``   - an exact scalar oracle (single constraint =>
+    consumption is a step function, non-increasing in lambda); used for
+    tests, benchmarks and warm-starts.
+  * ``window_step``   - the host-loop window body (decide -> NumPy guard
+    -> dual update) shared by the budget controllers.
 """
 from __future__ import annotations
 
@@ -25,29 +63,77 @@ import jax
 import jax.numpy as jnp
 
 
+def _as_cost_map(costs: jnp.ndarray) -> jnp.ndarray:
+    """(M,) or (M, K) costs -> (M, K) cost map."""
+    return costs if costs.ndim == 2 else costs[:, None]
+
+
+def _option_prices(costs, lam, member):
+    """The lagrangian price term, broadcast to (I, M) or (M,).
+
+    Scalar lam: lam * costs (the original Eq. 10 term).  Vector lam:
+    sum_k lam_k * member_ik * C_mk - an (I, K) @ (K, M) matmul when
+    member is given, else the (M,) column combination C @ lam.
+    """
+    if jnp.ndim(lam) == 0:
+        return lam * costs
+    cm = _as_cost_map(costs)
+    if member is None:
+        if cm.shape[1] != lam.shape[0]:  # an (M, 1) column only spans K
+            raise ValueError(             # constraints through member
+                f"cost map with {cm.shape[1]} columns cannot be priced "
+                f"by {lam.shape[0]} duals without a member matrix")
+        return cm @ lam
+    return member @ (cm * lam[None, :]).T
+
+
 @jax.jit
 def allocate(rewards: jnp.ndarray, costs: jnp.ndarray,
-             lam: jnp.ndarray) -> jnp.ndarray:
+             lam: jnp.ndarray, member: jnp.ndarray | None = None
+             ) -> jnp.ndarray:
     """Eq. 10: per-request argmax of the lagrangian score.
 
-    rewards: (I, J), costs: (J,), lam: scalar -> (I,) int32 chain index.
+    rewards: (I, M); costs: (M,) with scalar ``lam`` (the K=1 path,
+    bit-identical to the historical scalar implementation), or (M, K)
+    with ``lam`` (K,) and optional ``member`` (I, K).  Returns (I,)
+    int32 option index.
     """
-    score = rewards - lam * costs[None, :]
+    if jnp.ndim(lam) == 0:
+        score = rewards - lam * costs[None, :]
+    else:
+        price = _option_prices(costs, lam, member)
+        score = rewards - (price if price.ndim == 2 else price[None, :])
     return jnp.argmax(score, axis=1).astype(jnp.int32)
 
 
 def consumption(rewards: jnp.ndarray, costs: jnp.ndarray,
                 lam: jnp.ndarray, mask: jnp.ndarray | None = None,
-                *, axis_name: str | None = None) -> jnp.ndarray:
-    """Total FLOPs consumed if lambda is the dual price.
+                *, member: jnp.ndarray | None = None,
+                axis_name: str | None = None) -> jnp.ndarray:
+    """Spend per constraint if ``lam`` is the dual price.
 
-    mask (I,) zeroes padded requests; axis_name sums across a request
-    mesh axis (shard_map), so the padded + sharded fused pipeline sees
-    the same window-global consumption as the host loop.
+    Scalar ``lam``: the total (scalar) spend - unchanged semantics.
+    Vector ``lam``: (K,) per-constraint spend sum_i member_ik *
+    C[m*_i, k].  mask (I,) zeroes padded requests; axis_name sums across
+    a request mesh axis (shard_map), so the padded + sharded fused
+    pipeline sees the same window-global consumption as the host loop.
     """
-    j_star = allocate(rewards, costs, lam)
-    taken = jnp.take(costs, j_star)
-    used = jnp.sum(taken if mask is None else taken * mask)
+    j_star = allocate(rewards, costs, lam, member)
+    if jnp.ndim(lam) == 0:
+        taken = jnp.take(costs, j_star)
+        used = jnp.sum(taken if mask is None else taken * mask)
+    else:
+        taken = _as_cost_map(costs)[j_star]  # (I, K) or (I, 1)
+        # one (I,) reduction per constraint, not a (I, K) axis-0 sum:
+        # XLA lowers the two differently, and the K=1 column must run
+        # the scalar path's exact reduction to stay bit-identical
+        cols = []
+        for k in range(int(lam.shape[0])):
+            tk = taken[:, min(k, taken.shape[1] - 1)]
+            if member is not None:
+                tk = tk * member[:, k]
+            cols.append(jnp.sum(tk if mask is None else tk * mask))
+        used = jnp.stack(cols)
     return used if axis_name is None else jax.lax.psum(used, axis_name)
 
 
@@ -69,24 +155,32 @@ class DualDescentConfig:
 
 
 @partial(jax.jit, static_argnames=("max_iters", "axis_name"))
-def dual_descent(rewards: jnp.ndarray, costs: jnp.ndarray, budget: float,
+def dual_descent(rewards: jnp.ndarray, costs: jnp.ndarray, budget,
                  lam0: jnp.ndarray, *, mask: jnp.ndarray | None = None,
+                 member: jnp.ndarray | None = None,
                  max_iters: int = 200, step_size: float = 1.0,
                  step_decay: float = 0.999, axis_name: str | None = None):
     """Algorithm 1 inner loop (steps 5-9), vectorized over all requests.
 
-    The raw subgradient C - sum c_j x_ij has the scale of the budget, while
-    useful lambda values have the scale of reward-per-FLOP; we therefore
-    normalize the step by (I * mean(c)^2) so `step_size` is dimensionless
-    and stable across budgets.  Returns (lam, trace_of_gaps).
+    Scalar ``lam0``/``budget``: the single-price update (bit-identical
+    to the historical scalar implementation).  Vector ``lam0`` (K,) with
+    ``budget`` (K,): all K prices descend jointly, each on its own
+    subgradient B_k - used_k.
 
-    mask/axis_name (see ``consumption``) let the fused serving pipeline
-    run the update on padded, request-sharded windows: I in the step
-    normalization becomes the VALID request count, and every shard sees
-    the same (replicated) lambda trajectory.
+    The raw subgradient has the scale of the budget, while useful lambda
+    values have the scale of reward-per-unit-cost; the step is therefore
+    normalized by (n_k * mean_cost_k^2) so `step_size` is dimensionless
+    and stable across budgets (n_k = requests subject to constraint k,
+    mean_cost_k = mean over the options that draw from k).
+
+    mask/member/axis_name (see ``consumption``) let the fused serving
+    pipeline run the update on padded, request-sharded windows: n_k
+    counts VALID requests only, and every shard sees the same
+    (replicated) price trajectory.  Returns (lam, trace_of_gaps).
     """
     costs = costs.astype(jnp.float32)
     rewards = rewards.astype(jnp.float32)
+    vector = jnp.ndim(lam0) > 0
     if mask is None:
         n_eff = jnp.float32(rewards.shape[0])
         if axis_name is not None:
@@ -95,14 +189,39 @@ def dual_descent(rewards: jnp.ndarray, costs: jnp.ndarray, budget: float,
         n_eff = jnp.sum(mask.astype(jnp.float32))
         if axis_name is not None:
             n_eff = jax.lax.psum(n_eff, axis_name)
-    # an all-masked (empty) window carries no information: floor n_eff so
-    # the step normalization cannot explode and slam lambda to 0
-    norm = jnp.maximum(n_eff, 1.0) * jnp.mean(costs) ** 2 + 1e-30
+    if not vector:
+        # an all-masked (empty) window carries no information: floor
+        # n_eff so the step normalization cannot explode and slam the
+        # price to 0
+        norm = jnp.maximum(n_eff, 1.0) * jnp.mean(costs) ** 2 + 1e-30
+    else:
+        cm = _as_cost_map(costs)
+        if member is not None:
+            m = member if mask is None else member * mask[:, None]
+            n_k = jnp.sum(m, axis=0)
+            if axis_name is not None:
+                n_k = jax.lax.psum(n_k, axis_name)
+        else:
+            n_k = n_eff
+        # per-constraint norm n_k * mean_k^2 where mean_k averages the
+        # options that DRAW from the constraint (a geo cost map is zero
+        # off its region's column).  Structured as the scalar path's
+        # exact expression times a sparsity correction (M/cnt_k)^2 -
+        # exactly 1.0 for fully active columns - so the K=1 case stays
+        # BIT-identical to the scalar norm: folding the correction into
+        # the mean instead lets XLA reassociate the constant divisor
+        # chain and drift the last mantissa bits.
+        active = (cm > 0).astype(jnp.float32)
+        cnt = jnp.maximum(jnp.sum(active, axis=0), 1.0)
+        corr = (jnp.float32(cm.shape[0]) / cnt) ** 2
+        base = jnp.maximum(n_k, 1.0) * jnp.mean(cm, axis=0) ** 2 + 1e-30
+        norm = jnp.broadcast_to(base * corr, lam0.shape)
 
     def body(carry, _):
         lam, eta = carry
-        used = consumption(rewards, costs, lam, mask, axis_name=axis_name)
-        grad = budget - used  # dL/dlambda
+        used = consumption(rewards, costs, lam, mask, member=member,
+                           axis_name=axis_name)
+        grad = budget - used  # dL/dlambda (per constraint)
         lam_new = jnp.maximum(0.0, lam - eta * grad / norm)
         return (lam_new, eta * step_decay), (budget - used)
 
@@ -122,9 +241,10 @@ def dual_bisect(rewards: jnp.ndarray, costs: jnp.ndarray, budget: float,
                 *, iters: int = 64, lam_hi_init: float = None):
     """Smallest lambda >= 0 with consumption(lambda) <= budget.
 
-    consumption is non-increasing in lambda (higher price -> cheaper chains)
-    so bisection is exact up to float resolution. If even lambda=0 fits the
-    budget, returns 0 (budget slack; constraint inactive).
+    Single-constraint only: consumption is non-increasing in lambda
+    (higher price -> cheaper chains) so bisection is exact up to float
+    resolution.  If even lambda=0 fits the budget, returns 0 (budget
+    slack; constraint inactive).
     """
     rewards = rewards.astype(jnp.float32)
     costs = costs.astype(jnp.float32)
@@ -154,6 +274,44 @@ def dual_bisect(rewards: jnp.ndarray, costs: jnp.ndarray, budget: float,
 
 
 # ---------------------------------------------------------------------------
+# The shared host-loop window body (controllers are wrappers over this)
+# ---------------------------------------------------------------------------
+
+
+def window_step(rewards, costs, budget: float, lam, *, cheap: int,
+                guard: bool = True,
+                cfg: DualDescentConfig | None = None):
+    """One host-loop serving window: Eq. 10 decide -> tail-reserve guard
+    -> Algorithm 1 price update, in the single-price (scalar) form.
+
+    ``core.budget.BudgetController`` (FLOPs costs) and
+    ``carbon.controller.CarbonBudgetController`` (carbon-effective
+    costs) both delegate here so the three historical copies of this
+    loop stay ONE implementation.  Returns
+    ``(decisions, downgraded, spend, lam_new)`` with ``decisions`` a
+    host ndarray and ``lam_new`` the published (device) price.
+    """
+    import numpy as np
+
+    from repro.serving.guard import downgrade_guard_np
+
+    cfg = cfg or DualDescentConfig()  # fresh default, never import-time
+    costs = np.asarray(costs)
+    costs_j = jnp.asarray(costs, jnp.float32)
+    rewards_j = jnp.asarray(rewards)
+    decisions = np.asarray(allocate(rewards_j, costs_j, lam))
+    downgraded = 0
+    spend = float(np.sum(costs[decisions]))
+    if guard:
+        decisions, downgraded, spend = downgrade_guard_np(
+            decisions, costs, budget, cheap)
+    lam_new, _ = dual_descent(
+        rewards_j, costs_j, budget, lam, max_iters=cfg.max_iters,
+        step_size=cfg.step_size, step_decay=cfg.step_decay)
+    return decisions, downgraded, spend, lam_new
+
+
+# ---------------------------------------------------------------------------
 # Streaming wrapper (the nearline job, Algorithm 1 outer loop)
 # ---------------------------------------------------------------------------
 
@@ -168,11 +326,11 @@ class DynamicPrimalDual:
     """
 
     def __init__(self, costs, budget_per_window: float,
-                 cfg: DualDescentConfig = DualDescentConfig()):
+                 cfg: DualDescentConfig | None = None):
         self.costs = jnp.asarray(costs, jnp.float32)
         self.budget = float(budget_per_window)
-        self.cfg = cfg
-        self.lam = jnp.float32(cfg.lam_init)
+        self.cfg = cfg or DualDescentConfig()
+        self.lam = jnp.float32(self.cfg.lam_init)
         self.history: list[float] = []
 
     def update(self, rewards) -> float:

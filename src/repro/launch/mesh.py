@@ -22,6 +22,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def mesh_num_shards(mesh) -> int:
+    """Total device count of a mesh (1 for ``None``) - what the serving
+    pipeline's pad quantum and per-shard window slices key off."""
+    if mesh is None:
+        return 1
+    import numpy as np
+
+    return int(np.prod(list(mesh.shape.values())))
+
+
 def make_request_mesh(n_shards: int | None = None):
     """1-D mesh over the serving request axis (sharding.REQUEST_AXIS).
 

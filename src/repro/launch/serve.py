@@ -22,8 +22,11 @@ Scenario flags
 --scenario diurnal    day-curve sinusoid between 0.4x and 1.6x
 --scenario tenants    --tenants equal blocks per window; --tenant-mode
                       `shared` = per-tenant budgets under ONE dual price
-                      (the fused per-tenant guard); `independent` = one
-                      pipeline (own price + budget) per tenant
+                      (the fused per-tenant guard); `priced` = per-tenant
+                      DUAL PRICES inside the one fused pass (a (T,)
+                      price vector, each tenant descending on its own
+                      budget; composes with --shards); `independent` =
+                      one pipeline (own price + budget) per tenant
 --scenario carbon     diurnal traffic priced against a grid-intensity
                       trace: per-window budgets in gCO2e, chain costs
                       c_j(t) = flops_j*kappa*CI(t), dual price in
@@ -34,8 +37,20 @@ Scenario flags
                       --ci-csv FILE), --ci-mean, --ci-phase-h (grid vs
                       traffic phase offset), --carbon-pricing
                       carbon|flops (native gram costs vs the
-                      effective-FLOPs-budget reduction)
+                      effective-FLOPs-budget reduction), --ci-forecast
+                      (nearline dual warm-started on the NEXT window's
+                      CI - closes the lambda-lag gap)
+--scenario georegions the two-region geo-shifting router: each request
+                      picks (chain, serving region) through one priced
+                      argmax with region costs flops_j*kappa*CI_r(t)
+                      (region CI days --geo-offset-h apart), (R,) dual
+                      prices + per-region gram budgets + per-region
+                      guard; per-region CarbonLedgers merge into
+                      results/carbon_report_geo.csv.  --geo-jitter
+                      smooths the degenerate region tie into a
+                      proportional split
 --shards N            shard_map the pass over an N-way request mesh
+                      (composes with tenants and georegions)
 --legacy              run the seed's host loop (scoring + NumPy guard +
                       separate serve kernel) instead, for comparison
                       (with --scenario carbon: the CarbonBudgetController
@@ -131,20 +146,22 @@ def _build_ci_trace(args):
 
 
 def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
-                   sample_window, pricing, mesh=None):
+                   sample_window, pricing, mesh=None, forecast=False):
     """Fused-pipeline carbon day: per-window gram budgets + CI-scaled
     costs threaded through run_stream (carbon pricing) or the
-    effective-FLOPs-budget reduction (flops pricing)."""
+    effective-FLOPs-budget reduction (flops pricing); ``forecast`` aims
+    each nearline dual update at the NEXT window's CI."""
     sched = cb.schedule(len(sizes))
     pipe = ServingPipeline(server, params, rcfg, cb.flops_ref,
                            ledger=ledger, mesh=mesh)
     if pricing == "carbon":
         st = run_stream(pipe, sizes, sample_window,
                         budget_trace=sched["grams"],
-                        scale_trace=sched["scale"])
+                        scale_trace=sched["scale"], forecast=forecast)
     else:
         st = run_stream(pipe, sizes, sample_window,
-                        budget_trace=sched["flops_budget"])
+                        budget_trace=sched["flops_budget"],
+                        forecast=forecast)
     print(f"{'win':>4} {'n':>5} {'ci_g/kwh':>9} {'spend/budget':>13} "
           f"{'lam':>12} {'downgraded':>10} {'revenue':>9} "
           f"{'dispatch_ms':>11}")
@@ -157,6 +174,85 @@ def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
     print(f"[serve] {len(sizes)} windows in {st.wall_s:.2f}s "
           f"({len(sizes) / st.wall_s:.1f} win/s)")
     return st.total_revenue, total_flops
+
+
+def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
+                sample_window, mesh=None):
+    """Two-region geo-shifted serving day: (R,) per-region gram budgets
+    and kappa*CI_r(t) cost scales through the fused router, per-region
+    CarbonLedgers merged into one region-attributed CSV."""
+    import os
+
+    from repro.carbon.controller import grams_per_flop
+    from repro.carbon.intensity import two_region_traces
+    from repro.carbon.ledger import DAY_S, CarbonLedger, geo_report_csv
+    from repro.core.primal_dual import DualDescentConfig
+
+    traces = two_region_traces(mean=args.ci_mean,
+                               offset_h=args.geo_offset_h)
+    names = list(traces)
+    n_w = len(sizes)
+    window_s = DAY_S / n_w
+    phase_s = args.ci_phase_h * 3600.0
+    kpf = grams_per_flop(1.0)
+    ci_w = {r: traces[r].resample(n_w, window_s, phase_s=phase_s)
+            for r in names}
+    scale_trace = np.stack([kpf * ci_w[r] for r in names], axis=1)
+    g_total = flops_budget * kpf * args.ci_mean
+    budget_trace = np.full((n_w, len(names)), g_total / len(names))
+    print(f"[serve] geo day: {n_w} windows x {window_s / 3600.0:.2f} h, "
+          f"regions {names} offset {args.geo_offset_h:.0f} h, "
+          f"{g_total / len(names):.3e} g/window/region, jitter "
+          f"{args.geo_jitter}")
+    pipe = ServingPipeline(
+        server, params, rcfg, flops_budget, mesh=mesh,
+        n_regions=len(names), region_jitter=args.geo_jitter,
+        dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
+    st = run_stream(pipe, sizes, sample_window,
+                    budget_trace=budget_trace, scale_trace=scale_trace,
+                    forecast=args.ci_forecast)
+    header = " ".join(f"{'ci_' + r[-1]:>6} {'spd/bud_' + r[-1]:>9}"
+                      for r in names)
+    print(f"{'win':>4} {'n':>5} {'split':>12} {header} {'revenue':>9} "
+          f"{'dispatch_ms':>11}")
+    ledgers = {
+        r: CarbonLedger(chains, traces[r], window_s=window_s,
+                        phase_s=phase_s, name=r,
+                        embodied_g_per_device_h=args.embodied_g_per_device_h,
+                        n_devices=args.devices)
+        for r in names}
+    total_rev = total_flops = 0.0
+    for t, r in enumerate(st.windows):
+        regions = r.regions_np
+        dec = r.decisions_np
+        split = [int(x) for x in np.bincount(regions,
+                                             minlength=len(names))]
+        spends = np.asarray(r.region_spend)
+        cols = " ".join(
+            f"{ci_w[n_][t]:>6.0f} "
+            f"{spends[k] / r.k_budget[k]:>9.3f}"
+            for k, n_ in enumerate(names))
+        print(f"{t:>4} {r.n_valid:>5} {str(split):>12} {cols} "
+              f"{r.revenue_np.sum():>9.1f} {st.dispatch_ms[t]:>11.2f}")
+        for k, n_ in enumerate(names):
+            ledgers[n_].record(dec[regions == k], t=t, ci=ci_w[n_][t])
+        total_rev += float(r.revenue_np.sum())
+        total_flops += float(r.flops)
+    print(f"[serve] {n_w} windows in {st.wall_s:.2f}s "
+          f"({n_w / st.wall_s:.1f} win/s)")
+    report_path = args.carbon_report or os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results",
+        "carbon_report_geo.csv")
+    geo_report_csv(ledgers, report_path)
+    print(f"\n[serve] per-region carbon ledger -> "
+          f"{os.path.abspath(report_path)}")
+    for n_, led in ledgers.items():
+        rep = led.report()
+        print(f"    {n_}: {rep['gco2e']:.4e} g operational + "
+              f"{rep['embodied_gco2e']:.4e} g embodied = "
+              f"{rep['total_gco2e']:.4e} gCO2e "
+              f"({rep['n_requests']} requests)")
+    return total_rev, total_flops
 
 
 def _legacy_carbon_loop(exp, server, params, rcfg, sizes, cb, ledger,
@@ -195,12 +291,12 @@ def main():
                     help="requests per normal window")
     ap.add_argument("--scenario", default="spike",
                     choices=("constant", "spike", "diurnal", "tenants",
-                             "carbon"))
+                             "carbon", "georegions"))
     ap.add_argument("--spike", type=float, default=3.0,
                     help="traffic multiplier on the spike windows")
     ap.add_argument("--tenants", type=int, default=4)
     ap.add_argument("--tenant-mode", default="shared",
-                    choices=("shared", "independent"))
+                    choices=("shared", "priced", "independent"))
     ap.add_argument("--budget-frac", type=float, default=0.6)
     ap.add_argument("--shards", type=int, default=0,
                     help=">0: shard_map over an N-way request mesh")
@@ -221,8 +317,28 @@ def main():
                     choices=("carbon", "flops"))
     ap.add_argument("--carbon-report", default=None,
                     help="CSV path for the carbon ledger (default: "
-                         "results/carbon_report.csv)")
+                         "results/carbon_report.csv, georegions: "
+                         "results/carbon_report_geo.csv)")
+    ap.add_argument("--ci-forecast", action="store_true",
+                    help="warm-start the nearline dual on the NEXT "
+                         "window's known CI (carbon/georegions)")
+    ap.add_argument("--geo-offset-h", type=float, default=8.0,
+                    help="hours region b's CI peak trails region a's")
+    ap.add_argument("--geo-jitter", type=float, default=0.2,
+                    help="relative region-price jitter smoothing the "
+                         "degenerate region tie (0 = pure argmax)")
+    ap.add_argument("--embodied-g-per-device-h", type=float, default=None,
+                    help="embodied-carbon amortization per device-hour "
+                         "(default: the ichnos-style server constant; "
+                         "0 disables the ledger line)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="devices metered for embodied carbon (per "
+                         "region in georegions)")
     args = ap.parse_args()
+    if args.embodied_g_per_device_h is None:  # resolved ONCE for every
+        from repro.carbon.ledger import \
+            DEFAULT_EMBODIED_G_PER_DEVICE_H  # scenario that meters it
+        args.embodied_g_per_device_h = DEFAULT_EMBODIED_G_PER_DEVICE_H
 
     print("[serve] building world + training cascade & reward models ...")
     exp, server, params, rcfg = build_serving_stack(
@@ -258,8 +374,10 @@ def main():
         cb = CarbonBudget.from_flops(
             float(budget), trace, window_s=window_s,
             phase_s=args.ci_phase_h * 3600.0)
-        ledger = CarbonLedger(chains, trace, window_s=window_s,
-                              phase_s=cb.phase_s)
+        ledger = CarbonLedger(
+            chains, trace, window_s=window_s, phase_s=cb.phase_s,
+            embodied_g_per_device_h=args.embodied_g_per_device_h,
+            n_devices=args.devices)
         print(f"[serve] carbon day: {len(sizes)} windows x "
               f"{window_s / 3600.0:.2f} h, CI '{trace.name}' mean "
               f"{trace.mean():.0f} g/kWh, budget "
@@ -272,7 +390,8 @@ def main():
         else:
             total_rev, total_flops = _carbon_stream(
                 server, params, rcfg, sizes, cb, ledger,
-                sample_window, args.carbon_pricing, mesh=mesh)
+                sample_window, args.carbon_pricing, mesh=mesh,
+                forecast=args.ci_forecast)
         report_path = args.carbon_report or os.path.join(
             os.path.dirname(__file__), "..", "..", "..", "results",
             "carbon_report.csv")
@@ -283,6 +402,9 @@ def main():
               f"{rep['gco2e']:.4e} gCO2e")
         print(f"    all-max base  {rep['baseline_kwh']:.4e} kWh  "
               f"{rep['baseline_gco2e']:.4e} gCO2e")
+        print(f"    embodied      {rep['embodied_gco2e']:.4e} gCO2e "
+              f"({args.devices} device(s) amortized)  total "
+              f"{rep['total_gco2e']:.4e} gCO2e")
         print(f"    daily savings {rep['daily_saved_kwh']:.4e} kWh/day  "
               f"{rep['daily_saved_tco2e']:.4e} tCO2e/day "
               f"(vs all-max-chain)")
@@ -290,6 +412,13 @@ def main():
             print(f"    stage {s:10s} {v:.4e} FLOPs")
         for m, v in rep["model_flops"].items():
             print(f"    model {m:10s} {v:.4e} FLOPs")
+    elif args.scenario == "georegions":
+        if args.legacy:
+            raise SystemExit("--scenario georegions has no legacy loop "
+                             "(the router exists only in the fused pass)")
+        total_rev, total_flops = _geo_stream(
+            chains, server, params, rcfg, sizes, float(budget), args,
+            sample_window, mesh=mesh)
     elif args.legacy:
         total_rev, total_flops = _legacy_loop(exp, server, params, rcfg,
                                               sizes, budget)
@@ -311,18 +440,29 @@ def main():
                                  for sp in spends))
         else:
             tb = None
-            if args.scenario == "tenants":  # shared dual price
+            if args.scenario == "tenants":  # shared or per-tenant prices
                 tb = np.full(n_tenants, budget / n_tenants, np.float32)
             pipe = ServingPipeline(server, params, rcfg, budget,
-                                   mesh=mesh, tenant_budgets=tb)
+                                   mesh=mesh, tenant_budgets=tb,
+                                   tenant_mode=(args.tenant_mode
+                                                if tb is not None
+                                                else "shared"))
             st = run_stream(pipe, sizes, sample_window)
             total_rev, total_flops = st.total_revenue, st.total_spend
-            print(f"{'win':>4} {'n':>5} {'spend/budget':>13} {'lam':>12} "
-                  f"{'downgraded':>10} {'revenue':>9} {'dispatch_ms':>11}")
+            priced = tb is not None and args.tenant_mode == "priced"
+            lam_hdr = "lam(per-tenant)" if priced else "lam"
+            print(f"{'win':>4} {'n':>5} {'spend/budget':>13} "
+                  f"{lam_hdr:>12} {'downgraded':>10} {'revenue':>9} "
+                  f"{'dispatch_ms':>11}")
             for t, r in enumerate(st.windows):
+                if priced:
+                    lam_disp = "/".join(
+                        f"{v:.2e}" for v in np.asarray(r.lam_after))
+                else:
+                    lam_disp = f"{float(r.lam_after):.3e}"
                 print(f"{t:>4} {r.n_valid:>5} "
-                      f"{float(r.spend) / r.budget:>13.3f} "
-                      f"{float(r.lam_after):>12.3e} "
+                      f"{float(np.sum(np.asarray(r.spend))) / r.budget:>13.3f} "
+                      f"{lam_disp:>12} "
                       f"{int(r.downgraded):>10d} "
                       f"{r.revenue_np.sum():>9.1f} "
                       f"{st.dispatch_ms[t]:>11.2f}")

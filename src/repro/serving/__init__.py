@@ -1,30 +1,47 @@
 """Unified streaming serving runtime (paper §4.3-§5.3 online system).
 
-The seed's serving path was a host-side Python loop that crossed the
-host/device boundary four times per window: jitted reward scoring, a
-jitted Eq. 10 argmax, a multi-pass NumPy downgrade guard, and a jitted
-cascade-execution kernel, with jnp<->np conversions between every step.
-This package refactors those four layers into ONE pipeline:
+A map of the unified allocator core and the layers over it:
 
-  * ``guard``     - the budget downgrade guard as a vectorized,
-    jit-compatible pass (cumsum formulation of the tail-reserve rule,
-    mask-aware for padded windows, shardable over the request axis);
-  * ``pipeline``  - ``ServingPipeline``: reward scoring (model-prefix
-    grouped), Eq. 10 allocation, the fused guard, cascade execution on
-    compaction tables, and the nearline dual update, all inside a single
-    jitted per-window pass; optionally ``shard_map``-ped over a request
-    mesh axis with uneven-window padding so traffic spikes never
-    recompile;
-  * ``stream``    - a double-buffered streaming driver (host prepares
-    window t+1 while the device executes window t) plus pluggable
-    traffic scenarios: constant, spike, diurnal sinusoid, multi-tenant
-    (per-tenant budgets sharing one dual price vs. independent
-    controllers), and carbon (diurnal traffic priced against a grid
-    intensity trace via per-window budget/cost-scale traces - see
-    ``repro.carbon``).
+  core.primal_dual        THE multi-price core: Eq. 10 ``allocate``,
+      per-constraint ``consumption``, Algorithm 1 ``dual_descent``.
+      One implementation spans every pricing shape - a scalar price
+      (the paper, K=1, bit-identical), a (K,) price vector against an
+      (M, K) option->constraint cost map (K over tenant x region), and
+      per-request constraint membership.  ``window_step`` is the shared
+      host-loop body the budget controllers wrap.
+  serving.guard           the budget downgrade guard as a vectorized,
+      jit-compatible pass: cumsum tail-reserve walk, mask-aware for
+      padded windows, shardable over the request axis, and -
+      via ``k_of`` - K per-constraint budgets at once (tenant blocks,
+      serving regions), each constraint walking only its own requests.
+  serving.pipeline        ``ServingPipeline``: reward scoring
+      (model-prefix grouped), priced allocation, the fused guard,
+      CompactPlan cascade execution and the nearline dual update in ONE
+      jitted window pass.  Pricing modes: plain scalar; tenants
+      "shared" (one price, per-tenant guard budgets); tenants "priced"
+      ((T,) prices in the same pass); geo (``n_regions``: requests pick
+      (chain, region) through the priced argmax with region costs
+      flops_j * kappa * CI_r(t), per-region budgets + prices).  All
+      modes compose with the ("req",) shard_map mesh and the padded
+      window buckets, and support the CI-forecast dual warm-start
+      (``dual_budget``/``dual_cost_scale``).
+  serving.stream          double-buffered streaming driver (host
+      prepares window t+1 while the device executes t) + traffic
+      scenarios: constant, spike, diurnal, tenants, carbon and
+      georegions; per-window budget/scale traces and
+      ``forecast=True`` thread time-varying carbon constraints through
+      the pipeline without recompiles.
+  carbon.*                the gCO2e side: intensity traces, the
+      CarbonBudget / CarbonBudgetController wrappers, and the
+      CarbonLedger (operational + embodied metering, per-region
+      attribution for geo serving).
 
-``launch/serve.py`` is the CLI front end; ``benchmarks/bench_serve.py``
-measures the fused pass against the legacy loop (BENCH_serve.json).
+``launch/serve.py`` is the CLI front end (--scenario ... --tenant-mode
+shared|priced --shards N); ``benchmarks/bench_serve.py`` measures the
+fused pass against the legacy loop (BENCH_serve.json),
+``benchmarks/bench_carbon.py`` the carbon-aware allocator
+(BENCH_carbon.json) and ``benchmarks/bench_geo.py`` the two-region
+geo-shifting router (BENCH_geo.json).
 """
 import importlib
 

@@ -3,13 +3,13 @@
 The guard (paper: "computation downgrade") keeps realized spend within
 the window budget even when the dual price lags a traffic spike.  The
 rule: walking the window in arrival order, request i keeps its allocated
-chain only if
+option only if
 
-    spend_so_far(i) + c_{j(i)} + c_min * (#requests after i)  <=  B_t
+    spend_so_far(i) + c_{m(i)} + c_min * (#requests after i)  <=  B
 
-i.e. its own cost plus a cheapest-chain reservation for everyone behind
-it still fits; otherwise it is forced onto the cheapest chain.  This
-guarantees spend <= B_t whenever n * c_min <= B_t, and spend <= n * c_min
+i.e. its own cost plus a cheapest-option reservation for everyone behind
+it still fits; otherwise it is forced onto the cheapest option.  This
+guarantees spend <= B whenever n * c_min <= B, and spend <= n * c_min
 otherwise (Eq. 3b serves every request exactly one chain).
 
 Downgrading shifts later prefix sums DOWN, which can un-trip requests
@@ -26,9 +26,19 @@ same pass structure:
     padded windows, and shards over a request mesh axis (prefix/tail
     sums are stitched across shards with all_gather/psum).
 
+``downgrade_guard`` enforces either ONE budget (scalar ``budget``, the
+historical path, bit-identical) or K per-constraint budgets: ``k_of``
+maps each request to its constraint (tenant, serving region, or
+tenant x region), ``budget`` is (K,), and ``cheap`` is the per-constraint
+downgrade option ((K,) - e.g. the cheapest chain *within a request's
+serving region*) or a single shared option.  Each constraint runs the
+tail-reserve walk over ITS OWN requests (per-k prefix sums), so a block
+of tenant windows or a region-split geo window is guarded in one fused
+call - including across request shards.
+
 ``downgraded`` counts requests whose FINAL decision differs from the
 allocator's (the seed overwrote the counter each pass, under-reporting
-multi-pass windows; requests already on the cheapest chain are never
+multi-pass windows; requests already on the cheapest option are never
 counted - nothing was downgraded about them).
 """
 from __future__ import annotations
@@ -73,24 +83,42 @@ def downgrade_guard_np(decisions: np.ndarray, costs: np.ndarray,
 
 
 def _exclusive_shard_offset(local_total, axis_name):
-    """Sum of ``local_total`` over shards strictly before this one."""
-    totals = jax.lax.all_gather(local_total, axis_name)  # (n_shards,)
+    """Sum of ``local_total`` over shards strictly before this one.
+
+    Works for scalar totals (the single-budget guard) and (K,) vector
+    totals (per-constraint prefixes) alike.
+    """
+    totals = jax.lax.all_gather(local_total, axis_name)  # (n_shards, ...)
     idx = jax.lax.axis_index(axis_name)
     before = jnp.arange(totals.shape[0]) < idx
-    return jnp.sum(jnp.where(before, totals, 0))
+    before = before.reshape((-1,) + (1,) * (totals.ndim - 1))
+    return jnp.sum(jnp.where(before, totals, 0), axis=0)
 
 
 def downgrade_guard(decisions: jnp.ndarray, costs: jnp.ndarray,
-                    budget, cheap: int, valid: jnp.ndarray | None = None,
-                    *, passes: int = GUARD_PASSES,
+                    budget, cheap, valid: jnp.ndarray | None = None,
+                    *, k_of: jnp.ndarray | None = None,
+                    passes: int = GUARD_PASSES,
                     axis_name: str | None = None):
     """Vectorized guard: same passes as the NumPy path, jit/shard ready.
 
-    decisions: (b,) int32; costs: (J,) float32; valid: (b,) 1.0 for real
-    requests, 0.0 for padding (None = all real).  Under ``shard_map`` the
-    (b,) arrays are the per-shard slice and ``axis_name`` names the
-    request axis; prefix spends and tail counts are made global.
-    Returns (decisions, downgraded, spend) - scalars are window-global.
+    decisions: (b,) int32 option index; costs: (M,) float32 per-option
+    cost (in the budget's units); valid: (b,) 1.0 for real requests, 0.0
+    for padding (None = all real).
+
+    Single budget (``k_of`` None): ``budget`` scalar, ``cheap`` a static
+    option index - the historical path, bit-identical.
+
+    Per-constraint budgets: ``k_of`` (b,) int32 maps each request to its
+    constraint, ``budget`` is (K,) and ``cheap`` the per-constraint
+    downgrade option ((K,) or a shared scalar).  Every constraint walks
+    its own requests (per-k cumsums; zeros elsewhere keep f32 prefix
+    sums bit-equal to a per-block walk), so ``spend`` comes back (K,).
+
+    Under ``shard_map`` the (b,) arrays are the per-shard slice and
+    ``axis_name`` names the request axis; prefix spends and tail counts
+    are made global.  Returns (decisions, downgraded, spend) -
+    ``downgraded`` and ``spend`` are window-global.
     """
     decisions = decisions.astype(jnp.int32)
     costs = costs.astype(jnp.float32)
@@ -98,6 +126,11 @@ def downgrade_guard(decisions: jnp.ndarray, costs: jnp.ndarray,
         valid = jnp.ones(decisions.shape, jnp.float32)
     else:
         valid = valid.astype(jnp.float32)
+
+    if k_of is not None:
+        return _downgrade_guard_k(decisions, costs, budget, cheap, valid,
+                                  k_of, passes, axis_name)
+
     c_min = costs[cheap]
 
     # tail reserve: count of VALID requests strictly after i (globally)
@@ -130,6 +163,72 @@ def downgrade_guard(decisions: jnp.ndarray, costs: jnp.ndarray,
 
     cd = jnp.take(costs, decisions) * valid
     spend_local = jnp.sum(cd)
+    changed = jnp.sum(((decisions != orig) & (valid > 0)).astype(jnp.int32))
+    if axis_name is not None:
+        spend = jax.lax.psum(spend_local, axis_name)
+        downgraded = jax.lax.psum(changed, axis_name)
+    else:
+        spend, downgraded = spend_local, changed
+    return decisions, downgraded, spend
+
+
+def _downgrade_guard_k(decisions, costs, budget, cheap, valid, k_of,
+                       passes, axis_name):
+    """Per-constraint tail-reserve walk (the k_of path of
+    ``downgrade_guard``): each constraint k guards its own requests
+    against budget[k], all K walks in one vectorized pass."""
+    budget = jnp.asarray(budget, jnp.float32)
+    k_n = int(budget.shape[0])
+    k_of = k_of.astype(jnp.int32)
+    cheap_k = jnp.broadcast_to(jnp.asarray(cheap, jnp.int32), (k_n,))
+    cheap_i = cheap_k[k_of]  # (b,) downgrade option per request
+    c_min_i = costs[cheap_k][k_of]  # (b,) reserve unit per request
+    budget_i = budget[k_of]
+    onehot = (k_of[:, None] == jnp.arange(k_n)[None, :]).astype(jnp.float32)
+
+    # All per-constraint prefixes/totals run one (b,) cumsum/sum PER
+    # COLUMN (K is a static shape), not a single (b, K) axis reduction:
+    # XLA lowers the two differently, and the K=1 column must execute
+    # the single-budget path's exact reductions to stay bit-identical
+    # (zeros off a request's own constraint leave f32 prefix sums
+    # bit-equal to a per-block walk: x + 0.0 == x for x >= 0).
+    def per_k_prefix(x):
+        """(b,) per-request values -> (inclusive local per-k prefix
+        (b, K), global per-k total (K,)), stitched across shards."""
+        prefixes, totals = [], []
+        for k in range(k_n):
+            pk = jnp.cumsum(x * onehot[:, k])
+            prefixes.append(pk)
+            totals.append(pk[-1] if x.shape[0] else jnp.float32(0.0))
+        prefix = jnp.stack(prefixes, axis=1)  # (b, K)
+        local = jnp.stack(totals)  # (K,)
+        if axis_name is not None:
+            total = jax.lax.psum(local, axis_name)
+            prefix = prefix + _exclusive_shard_offset(local, axis_name)
+        else:
+            total = local
+        return prefix, total
+
+    # tail reserve per constraint: valid requests of k strictly after i
+    n_prefix, n_total = per_k_prefix(valid)
+    tail = jnp.sum((n_total[None, :] - n_prefix) * onehot, axis=1)  # (b,)
+    reserve = c_min_i * tail
+
+    orig = decisions
+
+    def one_pass(dec, _):
+        cd = jnp.take(costs, dec) * valid
+        prefix, _ = per_k_prefix(cd)
+        kept_prefix = jnp.sum(prefix * onehot, axis=1) - cd  # exclusive
+        over = (valid > 0) & (kept_prefix + jnp.take(costs, dec) + reserve
+                              > budget_i)
+        return jnp.where(over, cheap_i, dec), None
+
+    decisions, _ = jax.lax.scan(one_pass, decisions, None, length=passes)
+
+    cd = jnp.take(costs, decisions) * valid
+    spend_local = jnp.stack([jnp.sum(cd * onehot[:, k])
+                             for k in range(k_n)])  # (K,)
     changed = jnp.sum(((decisions != orig) & (valid > 0)).astype(jnp.int32))
     if axis_name is not None:
         spend = jax.lax.psum(spend_local, axis_name)

@@ -8,14 +8,14 @@ the whole window is ONE jitted pass:
   1. reward scoring   - ``reward_matrix_grouped`` (model-prefix dedup:
      the recursive state depends on model choices only, so the paper
      layout runs ~2 trunk evaluations per stage instead of J);
-  2. Eq. 10 decisions - ``allocate`` with the window's entry price;
+  2. Eq. 10 decisions - ``allocate`` with the window's entry price(s);
   3. downgrade guard  - ``serving.guard.downgrade_guard`` (vectorized
-     cumsum tail-reserve, mask-aware, optionally per-tenant);
+     cumsum tail-reserve, mask-aware, per-constraint budgets);
   4. cascade execute  - CompactPlan threshold arithmetic (gathers over
      cap-wide rows instead of the item axis) with the lax.scan
      ``_revenue_requests`` kernel as the generic-layout fallback;
   5. nearline update  - ``dual_descent`` (Algorithm 1) on the window's
-     rewards publishes the next window's price.
+     rewards publishes the next window's price(s).
 
 Steps 1-4 are the ONLINE response path: one jitted dispatch whose
 latency is what a request sees.  Step 5 is NEARLINE exactly as in the
@@ -27,15 +27,38 @@ two graphs separate also sidesteps an XLA:CPU scheduling cliff where
 fusing the 200-step dual scan into the serving graph doubles its wall
 time.
 
+Pricing modes (all running the SAME multi-price core,
+``core.primal_dual``; the plain mode is its K=1 case, bit-identical):
+
+  * plain            - one budget, one dual price (the paper's system);
+  * tenants "shared" - T equal-size tenant blocks per window, ONE dual
+    price, the guard enforcing each tenant's own budget (k_of path);
+  * tenants "priced" - a (T,) PRICE VECTOR inside the same fused pass:
+    each tenant's price descends on its own consumption-vs-budget
+    subgradient (per-tenant membership one-hots into the core);
+  * geo (n_regions)  - each request chooses (chain, serving region) by
+    the same priced argmax over J*R options with region-dependent
+    effective costs c_{j,r}(t) = flops_j * scale_r(t) (carbon:
+    scale_r = kappa * CI_r(t)), (R,) per-region budgets/prices, the
+    guard downgrading within a request's decided region.
+
 Request-axis sharding: pass a 1-D mesh (``launch.mesh.make_request_mesh``)
 and the pass runs under ``shard_map`` over axis "req" - per-request work
-stays local while the guard stitches global prefix spends with
-all_gather/psum and the dual update psums consumption.
+stays local while the guard stitches per-constraint prefix spends with
+all_gather/psum and the dual update psums per-constraint consumption.
+Tenant blocks compose with sharding (blocks may span shard boundaries;
+the per-k prefix stitching keeps the walk exact).
 
 Uneven windows: arrivals are padded up to a small set of bucket sizes
 (multiples of ``pad_quantum``) with a validity mask, so a 3x traffic
-spike reuses a handful of compiled shapes instead of recompiling per
-window size.
+spike reuses a handful of compiled shapes instead of recompiling.
+
+CI-forecast warm-start: ``serve_window(dual_budget=..,
+dual_cost_scale=..)`` runs the nearline update against the NEXT
+window's (known or forecast) budget and cost scale while the online
+pass uses the current ones - the published price then lands where the
+next window needs it instead of lagging a CI swing by one window
+(``run_stream(forecast=True)`` threads this automatically).
 """
 from __future__ import annotations
 
@@ -67,20 +90,25 @@ class WindowResult:
     default, gCO2e when a carbon ``cost_scale`` was applied (see
     ``serve_window``); ``flops`` is always the realized FLOPs, so carbon
     ledgers and PFEC reports meter the same quantity either way.
+    ``lam_before``/``lam_after`` are scalars in the single-price modes
+    and (K,) vectors for priced tenants / geo regions.
     """
 
     n_valid: int
     budget: float
     lam_before: jnp.ndarray
     lam_after: jnp.ndarray
-    decisions: jnp.ndarray  # (B,) padded
+    decisions: jnp.ndarray  # (B,) padded CHAIN index
     revenue: jnp.ndarray  # (B,) padded (0 on padding)
     spend: jnp.ndarray
     downgraded: jnp.ndarray
     valid: np.ndarray = None  # (B,) 1.0 on real requests
-    tenant_spend: jnp.ndarray | None = None
+    tenant_spend: jnp.ndarray | None = None  # (T,) per-tenant spend
     flops: jnp.ndarray | None = None  # realized FLOPs (unit-independent)
     cost_scale: float = 1.0  # active-units per FLOP (1.0 = FLOPs mode)
+    regions: jnp.ndarray | None = None  # (B,) serving region (geo mode)
+    region_spend: jnp.ndarray | None = None  # (R,) per-region spend
+    k_budget: np.ndarray | None = None  # (K,) per-constraint budgets
 
     @property
     def decisions_np(self) -> np.ndarray:
@@ -90,10 +118,17 @@ class WindowResult:
     def revenue_np(self) -> np.ndarray:
         return np.asarray(self.revenue)[self.valid > 0]
 
+    @property
+    def regions_np(self) -> np.ndarray | None:
+        if self.regions is None:
+            return None
+        return np.asarray(self.regions)[self.valid > 0]
+
     def stats(self) -> WindowStats:
         return WindowStats(
-            n_requests=self.n_valid, spend=float(self.spend),
-            budget=self.budget, lam=float(self.lam_after),
+            n_requests=self.n_valid, spend=float(np.sum(np.asarray(
+                self.spend))), budget=self.budget,
+            lam=float(np.max(np.asarray(self.lam_after))),
             downgraded=int(self.downgraded))
 
 
@@ -106,18 +141,37 @@ class ServingPipeline:
         scan-kernel fallback - becomes the fused execute step).
     reward_params / reward_cfg: the trained reward model (must carry
         ``label_norm`` if trained on ratio labels).
-    budget_per_window: B_t for the guard and the dual update.
-    mesh: optional 1-D request mesh -> shard_map over axis "req".
+    budget_per_window: B_t for the guard and the dual update (the
+        TOTAL budget; per-tenant/per-region caps refine it below).
+    mesh: optional 1-D request mesh -> shard_map over axis "req"
+        (composes with every pricing mode).
     tenant_budgets: optional (T,) per-tenant budgets; windows then carry
-        T equal-size tenant blocks sharing ONE dual price while the
-        guard enforces each tenant's budget separately.
+        T equal-size tenant blocks.  ``tenant_mode`` selects the price
+        structure: "shared" = ONE dual price, per-tenant guard budgets;
+        "priced" = a (T,) per-tenant price vector inside the fused pass.
+    n_regions: optional R >= 2 -> the geo-shifting router: serve_window
+        then takes (R,) ``budget`` and (R,) ``cost_scale`` and each
+        request picks its serving region through the priced argmax.
+    region_jitter: geo only - relative amplitude of a deterministic
+        per-request perturbation of the priced region costs (host-drawn
+        uniforms riding through the core's ``member`` weights).  The
+        two-region cost structure is PROPORTIONAL (c_{j,r} = s_r *
+        flops_j), so at the dual equilibrium every request is
+        indifferent between regions at once and a pure argmax bang-bangs
+        the whole window between them; a small jitter (e.g. 0.05) turns
+        the knife edge into a proportional split that moves continuously
+        with the price gap.  0.0 (default) keeps the un-jittered argmax
+        - and the bit-exact reduction to a pinned pipeline when the
+        regions are identical.
     """
 
     def __init__(self, server: CascadeServer, reward_params: dict,
                  reward_cfg: RewardModelConfig, budget_per_window: float,
                  *, dual_cfg: DualDescentConfig | None = None,
                  guard: bool = True, mesh=None, pad_quantum: int = 32,
-                 tenant_budgets=None, lam_init: float = 0.0, ledger=None):
+                 tenant_budgets=None, tenant_mode: str = "shared",
+                 n_regions: int | None = None, region_jitter: float = 0.0,
+                 lam_init: float = 0.0, ledger=None):
         self.server = server
         self.ledger = ledger  # optional CarbonLedger (lazy metering hook)
         self.chains = server.chains
@@ -127,12 +181,23 @@ class ServingPipeline:
         self.dual_cfg = dual_cfg or DualDescentConfig()
         self.guard = guard
         self.mesh = mesh
+        if tenant_mode not in ("shared", "priced"):
+            raise ValueError(f"tenant_mode must be 'shared' or 'priced', "
+                             f"got {tenant_mode!r}")
+        self.tenant_mode = tenant_mode
         self.tenant_budgets = (None if tenant_budgets is None
                                else np.asarray(tenant_budgets, np.float32))
-        if mesh is not None and self.tenant_budgets is not None:
-            raise NotImplementedError("tenant blocks + request sharding")
-        self._n_shards = (1 if mesh is None
-                          else int(np.prod(list(mesh.shape.values()))))
+        self.n_regions = None if n_regions is None else int(n_regions)
+        if self.n_regions is not None and self.n_regions < 2:
+            raise ValueError("n_regions needs >= 2 serving regions")
+        self.region_jitter = float(region_jitter)
+        self._jitter_rng = np.random.default_rng(0)
+        if self.n_regions is not None and self.tenant_budgets is not None:
+            raise NotImplementedError("tenant blocks x geo regions in one "
+                                      "pipeline (price the product K "
+                                      "through the core directly)")
+        from repro.launch.mesh import mesh_num_shards
+        self._n_shards = mesh_num_shards(mesh)
         q = math.lcm(int(pad_quantum), self._n_shards)
         if self.tenant_budgets is not None:
             q = math.lcm(q, len(self.tenant_budgets))
@@ -160,7 +225,15 @@ class ServingPipeline:
                 "keeps": jnp.asarray(server._keeps),
             }
             self._expose = server.expose
-        self.lam = jnp.float32(lam_init)
+        # K price components: (T,) for priced tenants, (R,) for geo,
+        # scalar otherwise (shared tenants keep the single price)
+        if self.tenant_budgets is not None and tenant_mode == "priced":
+            self.lam = jnp.full(len(self.tenant_budgets), lam_init,
+                                jnp.float32)
+        elif self.n_regions is not None:
+            self.lam = jnp.full(self.n_regions, lam_init, jnp.float32)
+        else:
+            self.lam = jnp.float32(lam_init)
         self.stats: list[WindowResult] = []
         self._fns: dict = {}
 
@@ -181,15 +254,142 @@ class ServingPipeline:
     def _build_main_fn(self, b: int, padded: bool):
         """Online response path: score -> decide -> guard -> execute.
 
-        ``budget`` and ``scale`` ride through as TRACED scalars, so
-        per-window budgets (traffic reshaping) and per-window cost scales
-        (carbon pricing: costs become c_j(t) = flops_j * kappa * CI(t))
-        reuse the compiled pass instead of recompiling.  ``scale`` = 1.0
-        multiplies bit-exactly, keeping the FLOPs path unchanged.
+        ``budget`` and ``scale`` ride through as TRACED values, so
+        per-window budgets (traffic reshaping) and per-window cost
+        scales (carbon pricing: costs become c_j(t) = flops_j * kappa *
+        CI(t); geo pricing: an (R,) scale vector, one per region's
+        CI_r(t)) reuse the compiled pass instead of recompiling.
+        ``scale`` = 1.0 multiplies bit-exactly, keeping the FLOPs path
+        unchanged.
         """
         axis = AXIS if self.mesh is not None else None
         costs, cheap = self._costs, self._cheap
+        j_n = int(costs.shape[0])
         tb = self.tenant_budgets
+        r_n = self.n_regions
+
+        if r_n is not None:
+            jit_eps = self.region_jitter
+
+            def fn(params, tables, ctx, rows, valid, jit_u, lam, budgets,
+                   scales):
+                rewards = denormalize_rewards(
+                    params, reward_matrix_grouped(
+                        params, self.reward_cfg, ctx, self._sh,
+                        self._prefix_plan))
+                # option axis m = r*J + j: region-major tiling
+                opt_costs = (scales[:, None] * costs[None, :]).reshape(-1)
+                # The joint argmax over (chain, region) factors: the
+                # reward is region-free, so each (request, chain) first
+                # picks its cheapest-PRICED region, then chains compete
+                # by the usual Eq. 10 argmax (first-index ties, exactly
+                # the scalar semantics).  The region argmin runs at
+                # lam + eps_green - an infinitesimal price floor, ~1e-6
+                # of the natural reward-per-cost scale - so a slack
+                # window (lam = 0, every price 0) still routes to the
+                # GREENER region instead of tie-breaking arbitrarily,
+                # while any meaningful price dwarfs it.  Equal regions
+                # keep equal floors, so ties still resolve to region 0
+                # and the pinned-pipeline reduction stays bit-exact.
+                price_r = lam[:, None] * (scales[:, None]
+                                          * costs[None, :])  # (R, J)
+                price_irj = jnp.broadcast_to(
+                    price_r[None], (rewards.shape[0], r_n, j_n))
+                if jit_eps > 0:  # per-request tie-smoothing jitter,
+                    # CENTERED so the mean priced cost is unbiased (a
+                    # [1, 1+eps] scale would throttle spend ~eps/2
+                    # below budget every window)
+                    price_irj = price_irj * (
+                        1.0 + jit_eps * (jit_u - 0.5))[:, :, None]
+                r_max = jnp.max(jnp.abs(rewards))
+                if axis is not None:  # shard-invariant scale
+                    r_max = jax.lax.pmax(r_max, axis)
+                eps_green = 1e-6 * r_max / (jnp.mean(opt_costs) + 1e-30)
+                tie = price_irj + eps_green * (
+                    scales[:, None] * costs[None, :])[None]
+                r_star = jnp.argmin(tie, axis=1)  # (I, J)
+                price_best = jnp.take_along_axis(
+                    price_irj, r_star[:, None, :], axis=1)[:, 0, :]
+                dec = jnp.argmax(rewards - price_best,
+                                 axis=1).astype(jnp.int32)
+                dec_m = (jnp.take_along_axis(
+                    r_star, dec[:, None], axis=1)[:, 0] * j_n + dec)
+                mask = valid if padded else None
+                if not self.guard:
+                    dg = jnp.int32(0)
+                    region_spend = None
+                    spend = jnp.sum(jnp.take(opt_costs, dec_m) * valid)
+                    if axis is not None:
+                        spend = jax.lax.psum(spend, axis)
+                else:
+                    cheap_k = jnp.arange(r_n) * j_n + cheap
+                    dec_m, dg, region_spend = downgrade_guard(
+                        dec_m, opt_costs, budgets, cheap_k, mask,
+                        k_of=dec_m // j_n, axis_name=axis)
+                    spend = jnp.sum(region_spend)
+                dec = dec_m % j_n
+                regions = dec_m // j_n
+                flops = jnp.sum(jnp.take(costs, dec) * valid)
+                if axis is not None:
+                    flops = jax.lax.psum(flops, axis)
+                rev = self._execute(tables, dec, rows, valid)
+                return (rewards, dec, rev, spend, flops, dg, None,
+                        regions, region_spend)
+
+            if self.mesh is not None:
+                fn = shard_map(
+                    fn, mesh=self.mesh,
+                    in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS),
+                              P(AXIS), P(), P(), P()),
+                    out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(),
+                               P(), P(AXIS), P()))
+            return jax.jit(fn)
+
+        if tb is not None:
+            t_n = len(tb)
+            priced = self.tenant_mode == "priced"
+
+            def fn(params, tables, ctx, rows, valid, k_of, lam, budgets,
+                   scale):
+                rewards = denormalize_rewards(
+                    params, reward_matrix_grouped(
+                        params, self.reward_cfg, ctx, self._sh,
+                        self._prefix_plan))
+                costs_eff = costs * scale  # active units (FLOPs or gCO2e)
+                if priced:
+                    member = (k_of[:, None] == jnp.arange(t_n)[None, :]
+                              ).astype(jnp.float32)
+                    dec = allocate(rewards, costs_eff[:, None], lam,
+                                   member)
+                else:
+                    dec = allocate(rewards, costs_eff, lam)
+                mask = valid if padded else None
+                tenant_spend = None
+                if not self.guard:
+                    dg = jnp.int32(0)
+                    spend = jnp.sum(jnp.take(costs_eff, dec) * valid)
+                    if axis is not None:
+                        spend = jax.lax.psum(spend, axis)
+                else:
+                    dec, dg, tenant_spend = downgrade_guard(
+                        dec, costs_eff, budgets, cheap, mask, k_of=k_of,
+                        axis_name=axis)
+                    spend = jnp.sum(tenant_spend)
+                flops = jnp.sum(jnp.take(costs, dec) * valid)
+                if axis is not None:
+                    flops = jax.lax.psum(flops, axis)
+                rev = self._execute(tables, dec, rows, valid)
+                return (rewards, dec, rev, spend, flops, dg, tenant_spend,
+                        None, None)
+
+            if self.mesh is not None:
+                fn = shard_map(
+                    fn, mesh=self.mesh,
+                    in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS),
+                              P(AXIS), P(), P(), P()),
+                    out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(),
+                               P(), P(), P()))
+            return jax.jit(fn)
 
         def fn(params, tables, ctx, rows, valid, lam, budget, scale):
             rewards = denormalize_rewards(params, reward_matrix_grouped(
@@ -197,22 +397,11 @@ class ServingPipeline:
             costs_eff = costs * scale  # active units (FLOPs or gCO2e)
             dec = allocate(rewards, costs_eff, lam)
             mask = valid if padded else None
-            tenant_spend = None
             if not self.guard:
                 dg = jnp.int32(0)
                 spend = jnp.sum(jnp.take(costs_eff, dec) * valid)
                 if axis is not None:
                     spend = jax.lax.psum(spend, axis)
-            elif tb is not None:
-                t_n = len(tb)
-                gfn = jax.vmap(
-                    lambda d, v, bud: downgrade_guard(d, costs_eff, bud,
-                                                      cheap, v))
-                dec_t, dg_t, spend_t = gfn(
-                    dec.reshape(t_n, -1), valid.reshape(t_n, -1),
-                    jnp.asarray(tb))
-                dec = dec_t.reshape(-1)
-                dg, spend, tenant_spend = dg_t.sum(), spend_t.sum(), spend_t
             else:
                 dec, dg, spend = downgrade_guard(
                     dec, costs_eff, budget, cheap, mask, axis_name=axis)
@@ -220,23 +409,75 @@ class ServingPipeline:
             if axis is not None:
                 flops = jax.lax.psum(flops, axis)
             rev = self._execute(tables, dec, rows, valid)
-            return rewards, dec, rev, spend, flops, dg, tenant_spend
+            return rewards, dec, rev, spend, flops, dg, None, None, None
 
         if self.mesh is not None:
             fn = shard_map(
                 fn, mesh=self.mesh,
                 in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS), P(), P(),
                           P()),
-                out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(), P()))
+                out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(), P(),
+                           P(), P()))
         return jax.jit(fn)
 
     def _build_dual_fn(self, b: int, padded: bool):
         """Nearline price update: Algorithm 1 on the window's rewards,
-        against the same traced (budget, scale) pair as the online pass -
-        in carbon mode the published price is reward-per-gCO2e."""
+        against a traced (budget, scale) pair - by default this window's,
+        or the NEXT window's when the driver forecasts (CI warm-start).
+        In carbon mode the published price is reward-per-gCO2e."""
         axis = AXIS if self.mesh is not None else None
         cfg = self.dual_cfg
         costs = self._costs
+        j_n = int(costs.shape[0])
+        r_n = self.n_regions
+        priced = (self.tenant_budgets is not None
+                  and self.tenant_mode == "priced")
+        t_n = None if self.tenant_budgets is None else len(
+            self.tenant_budgets)
+
+        if r_n is not None:
+            jit_eps = self.region_jitter
+
+            def fn(rewards, valid, jit_u, lam, budgets, scales):
+                mask = valid if padded else None
+                opt_costs = (scales[:, None] * costs[None, :]).reshape(-1)
+                eye = jnp.eye(r_n, dtype=jnp.float32)
+                cost_map = (opt_costs[:, None]
+                            * jnp.repeat(eye, j_n, axis=0))
+                member = (1.0 + jit_eps * (jit_u - 0.5)) \
+                    if jit_eps > 0 else None  # centered, see main fn
+                lam_new, _ = dual_descent(
+                    jnp.tile(rewards, (1, r_n)), cost_map, budgets, lam,
+                    mask=mask, member=member, max_iters=cfg.max_iters,
+                    step_size=cfg.step_size, step_decay=cfg.step_decay,
+                    axis_name=axis)
+                return lam_new
+
+            if self.mesh is not None:
+                fn = shard_map(fn, mesh=self.mesh,
+                               in_specs=(P(AXIS), P(AXIS), P(AXIS), P(),
+                                         P(), P()),
+                               out_specs=P())
+            return jax.jit(fn)
+
+        if priced:
+            def fn(rewards, valid, k_of, lam, budgets, scale):
+                mask = valid if padded else None
+                member = (k_of[:, None] == jnp.arange(t_n)[None, :]
+                          ).astype(jnp.float32)
+                lam_new, _ = dual_descent(
+                    rewards, (costs * scale)[:, None], budgets, lam,
+                    mask=mask, member=member, max_iters=cfg.max_iters,
+                    step_size=cfg.step_size, step_decay=cfg.step_decay,
+                    axis_name=axis)
+                return lam_new
+
+            if self.mesh is not None:
+                fn = shard_map(fn, mesh=self.mesh,
+                               in_specs=(P(AXIS), P(AXIS), P(AXIS), P(),
+                                         P(), P()),
+                               out_specs=P())
+            return jax.jit(fn)
 
         def fn(rewards, valid, lam, budget, scale):
             mask = valid if padded else None
@@ -260,30 +501,61 @@ class ServingPipeline:
 
     def serve_window(self, ctx: np.ndarray, rows: np.ndarray, *,
                      lam=None, update_lam: bool = True, budget=None,
-                     cost_scale=None) -> WindowResult:
+                     cost_scale=None, dual_budget=None,
+                     dual_cost_scale=None) -> WindowResult:
         """Serve one traffic window.
 
         ctx (n, d_context) raw contexts, rows (n,) user indices into the
         server's score tables.  Decisions use ``lam`` (default: the
-        pipeline's nearline price, i.e. lambda_{t-1}); the pass then
+        pipeline's nearline price(s), i.e. lambda_{t-1}); the pass then
         publishes lambda_t unless ``update_lam=False``.
 
-        ``budget`` overrides this window's budget (default: the
-        pipeline's); ``cost_scale`` re-denominates the window's costs as
-        ``costs * cost_scale`` - carbon pricing passes kappa*CI(t)
-        [gCO2e/FLOP] here together with a gCO2e ``budget``, making the
-        dual price reward-per-gram.  Both are traced, so time-varying
-        values never recompile.
+        ``budget`` overrides this window's budget (scalar; (T,) with
+        tenant blocks; (R,) in geo mode - REQUIRED there together with
+        an (R,) ``cost_scale``).  ``cost_scale`` re-denominates the
+        window's costs as ``costs * cost_scale`` - carbon pricing passes
+        kappa*CI(t) [gCO2e/FLOP] here together with a gCO2e ``budget``,
+        making the dual price reward-per-gram.  All are traced, so
+        time-varying values never recompile.
+
+        ``dual_budget``/``dual_cost_scale`` aim the NEARLINE update at a
+        different (budget, scale) than the online pass - pass the NEXT
+        window's values to warm-start the price where the grid is about
+        to be (the CI-forecast warm-start; defaults: the online values).
         """
         n = len(rows)
         ctx = np.asarray(ctx, np.float32)
         rows = np.asarray(rows, np.int32)
-        if (budget is not None or cost_scale is not None) \
-                and self.tenant_budgets is not None:
-            raise NotImplementedError(
-                "per-window budget/cost_scale overrides with tenant blocks")
-        bud = self.budget if budget is None else float(budget)
-        sc = 1.0 if cost_scale is None else float(cost_scale)
+        geo = self.n_regions is not None
+        tb = self.tenant_budgets
+
+        if geo:
+            if budget is None or cost_scale is None:
+                raise ValueError("geo mode serves against per-region "
+                                 "budgets: pass (R,) budget and (R,) "
+                                 "cost_scale every window")
+            bud_vec = np.asarray(budget, np.float32).reshape(-1)
+            sc_vec = np.asarray(cost_scale, np.float32).reshape(-1)
+            if len(bud_vec) != self.n_regions \
+                    or len(sc_vec) != self.n_regions:
+                raise ValueError(f"geo budget/cost_scale must have "
+                                 f"{self.n_regions} entries")
+            bud, sc = float(bud_vec.sum()), float(sc_vec.mean())
+        elif tb is not None:
+            if budget is None:
+                bud_vec = tb
+            else:
+                bud_vec = np.asarray(budget, np.float32).reshape(-1)
+                if len(bud_vec) != len(tb):
+                    raise ValueError(f"tenant budget override must have "
+                                     f"{len(tb)} entries")
+            sc = 1.0 if cost_scale is None else float(cost_scale)
+            bud = float(bud_vec.sum())
+        else:
+            bud = self.budget if budget is None else float(budget)
+            sc = 1.0 if cost_scale is None else float(cost_scale)
+            bud_vec = None
+
         if n == 0:  # zero-arrival window: nothing to serve or learn from
             res = WindowResult(
                 n_valid=0, budget=bud, lam_before=self.lam,
@@ -291,16 +563,22 @@ class ServingPipeline:
                 revenue=jnp.zeros(0, jnp.float32),
                 spend=jnp.float32(0.0), downgraded=jnp.int32(0),
                 valid=np.zeros(0, np.float32), flops=jnp.float32(0.0),
-                cost_scale=sc)
+                cost_scale=sc,
+                regions=None if not geo else jnp.zeros(0, jnp.int32),
+                region_spend=(None if not geo else
+                              jnp.zeros(self.n_regions, jnp.float32)),
+                k_budget=None if bud_vec is None else np.array(bud_vec))
             self.stats.append(res)
             if self.ledger is not None:
                 self.ledger.record_result(res)
             return res
-        if self.tenant_budgets is not None:
+
+        k_of = None
+        if tb is not None:
             # tenant windows carry T equal blocks; padding must land at
-            # the END OF EACH BLOCK so the fused pass's (T, b/T) reshape
-            # keeps blocks aligned with their budgets
-            t_n = len(self.tenant_budgets)
+            # the END OF EACH BLOCK so per-tenant guard walks and prices
+            # see blocks aligned with their budgets
+            t_n = len(tb)
             if n % t_n:
                 raise ValueError(f"window size {n} not divisible by "
                                  f"{t_n} tenants")
@@ -315,6 +593,7 @@ class ServingPipeline:
             valid[:, :n_t] = 1.0
             ctx, rows = ctx_b.reshape(b, -1), rows_b.reshape(b)
             valid = valid.reshape(b)
+            k_of = np.repeat(np.arange(t_n, dtype=np.int32), bt)
         else:
             b = self._bucket(n)
             if b != n:
@@ -328,27 +607,84 @@ class ServingPipeline:
             self._fns[key] = (self._build_main_fn(b, b != n),
                               self._build_dual_fn(b, b != n))
         main_fn, dual_fn = self._fns[key]
-        lam_in = self.lam if lam is None else jnp.float32(lam)
+        if lam is None:
+            lam_in = self.lam
+        else:
+            lam_in = jnp.broadcast_to(
+                jnp.asarray(lam, jnp.float32), jnp.shape(self.lam))
         valid_j = jnp.asarray(valid)
-        bud_j, sc_j = jnp.float32(bud), jnp.float32(sc)
-        rewards, dec, rev, spend, flops, dg, t_spend = main_fn(
-            self.reward_params, self._tables, jnp.asarray(ctx),
-            jnp.asarray(rows, jnp.int32), valid_j, lam_in, bud_j, sc_j)
+
+        if geo:
+            bud_j = jnp.asarray(bud_vec)
+            sc_j = jnp.asarray(sc_vec)
+            # deterministic per-request tie-smoothing draws (host rng).
+            # Drawn for the n VALID requests and padded, so the stream
+            # depends only on the day's arrivals - identical across
+            # sharded/unsharded runs even when the shard count changes
+            # the padded bucket size (padding rows are masked out of
+            # every consumer)
+            u_valid = self._jitter_rng.random(
+                (n, self.n_regions)).astype(np.float32)
+            u_pad = np.zeros((b, self.n_regions), np.float32)
+            u_pad[:n] = u_valid
+            jit_u = jnp.asarray(u_pad)
+            args = (jit_u, lam_in, bud_j, sc_j)
+        elif tb is not None:
+            bud_j = jnp.asarray(bud_vec)
+            sc_j = jnp.float32(sc)
+            args = (jnp.asarray(k_of), lam_in, bud_j, sc_j)
+        else:
+            bud_j, sc_j = jnp.float32(bud), jnp.float32(sc)
+            args = (lam_in, bud_j, sc_j)
+        (rewards, dec, rev, spend, flops, dg, t_spend, regions,
+         r_spend) = main_fn(self.reward_params, self._tables,
+                            jnp.asarray(ctx), jnp.asarray(rows, jnp.int32),
+                            valid_j, *args)
+
         # nearline: the price update never blocks the response - it is a
         # second dispatch reusing the on-device reward matrix, and the
-        # NEXT window's decisions depend on its (device-side) output
-        lam_new = dual_fn(rewards, valid_j, lam_in, bud_j, sc_j)
+        # NEXT window's decisions depend on its (device-side) output.
+        # dual_budget/dual_cost_scale retarget it at the next window's
+        # constraint (CI-forecast warm-start); defaults keep this
+        # window's, bit-identical to the non-forecast behavior.
+        if geo:
+            d_bud = bud_j if dual_budget is None \
+                else jnp.asarray(np.asarray(dual_budget, np.float32))
+            d_sc = sc_j if dual_cost_scale is None \
+                else jnp.asarray(np.asarray(dual_cost_scale, np.float32))
+            lam_new = dual_fn(rewards, valid_j, jit_u, lam_in, d_bud,
+                              d_sc)
+        elif tb is not None:
+            d_bud = bud_j if dual_budget is None \
+                else jnp.asarray(np.asarray(dual_budget,
+                                            np.float32).reshape(-1))
+            d_sc = sc_j if dual_cost_scale is None \
+                else jnp.float32(dual_cost_scale)
+            if self.tenant_mode == "priced":
+                lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
+                                  lam_in, d_bud, d_sc)
+            else:  # shared price descends on the TOTAL budget
+                lam_new = dual_fn(rewards, valid_j, lam_in,
+                                  jnp.sum(d_bud), d_sc)
+        else:
+            d_bud = bud_j if dual_budget is None else jnp.float32(
+                dual_budget)
+            d_sc = sc_j if dual_cost_scale is None else jnp.float32(
+                dual_cost_scale)
+            lam_new = dual_fn(rewards, valid_j, lam_in, d_bud, d_sc)
         if update_lam:
             self.lam = lam_new
         res = WindowResult(
             n_valid=n, budget=bud, lam_before=lam_in,
             lam_after=lam_new, decisions=dec, revenue=rev, spend=spend,
             downgraded=dg, valid=valid, tenant_spend=t_spend, flops=flops,
-            cost_scale=sc)
+            cost_scale=sc, regions=regions, region_spend=r_spend,
+            k_budget=None if bud_vec is None else np.array(bud_vec))
         self.stats.append(res)
         if self.ledger is not None:
             self.ledger.record_result(res)
         return res
 
     def spend_trace(self) -> np.ndarray:
-        return np.array([float(r.spend) for r in self.stats])
+        return np.array([float(np.sum(np.asarray(r.spend)))
+                         for r in self.stats])

@@ -24,7 +24,8 @@ import numpy as np
 from repro.serving.pipeline import ServingPipeline, WindowResult
 
 
-SCENARIOS = ("constant", "spike", "diurnal", "tenants", "carbon")
+SCENARIOS = ("constant", "spike", "diurnal", "tenants", "carbon",
+             "georegions")
 
 
 @dataclass(frozen=True)
@@ -47,7 +48,12 @@ class TrafficScenario:
       window at kappa*CI(t) and budgets it in gCO2e (see repro.carbon
       and launch/serve.py --scenario carbon).  Window counts are the
       same day shape as ``diurnal``; the carbon part lives in the
-      per-window (budget, cost_scale) traces fed to ``run_stream``.
+      per-window (budget, cost_scale) traces fed to ``run_stream``;
+    * ``georegions`` - the same day-curve served by the TWO-REGION
+      geo-shifting router: the pipeline (built with ``n_regions=2``)
+      takes per-window (R,) gram budgets and (R,) kappa*CI_r(t) cost
+      scales, and each request picks its serving region through the
+      priced argmax (see launch/serve.py --scenario georegions).
     """
 
     name: str
@@ -69,7 +75,7 @@ def scenario_windows(sc: TrafficScenario) -> list[int]:
         elif sc.name == "spike":
             burst = sc.n_windows // 3 <= t < sc.n_windows // 3 + 3
             n = int(sc.n_base * (sc.spike_mult if burst else 1.0))
-        elif sc.name in ("diurnal", "carbon"):
+        elif sc.name in ("diurnal", "carbon", "georegions"):
             phase = 2.0 * math.pi * t / max(1, sc.n_windows)
             n = int(sc.n_base * (1.0 + 0.6 * math.sin(phase)))
         else:
@@ -109,28 +115,45 @@ class StreamStats:
 
 def run_stream(pipeline: ServingPipeline, sizes: list[int],
                sample_window, *, lam_trace=None, budget_trace=None,
-               scale_trace=None) -> StreamStats:
+               scale_trace=None, forecast: bool = False) -> StreamStats:
     """Drive the pipeline through ``sizes``, double-buffering host prep.
 
     sample_window(t, n) -> (ctx (n, d), rows (n,)) produces window t's
     arrivals; it runs while the device executes window t-1.  lam_trace
     optionally pins the per-window entry price (parity testing);
     budget_trace / scale_trace set each window's budget and cost scale
-    (e.g. a ``CarbonBudget.schedule``'s grams + kappa*CI(t) columns) -
-    both are traced by the pipeline, so they never recompile.
+    (e.g. a ``CarbonBudget.schedule``'s grams + kappa*CI(t) columns; in
+    geo mode each entry is the (R,) per-region vector) - all are traced
+    by the pipeline, so they never recompile.
+
+    ``forecast=True`` is the CI-forecast warm-start for the nearline
+    dual update: window t's price update runs against window t+1's
+    (budget, scale) - both known ahead of time, the grid-intensity
+    trace is a forecastable signal - so the published price lands where
+    the NEXT window's CI needs it instead of lagging the swing by one
+    window (the lambda-lag gap benchmarked in bench_carbon.py).  With
+    constant traces this is a bit-exact no-op.
     """
     t0 = time.perf_counter()
     dispatch_ms: list[float] = []
     results: list[WindowResult] = []
     nxt = sample_window(0, sizes[0])
+    last = len(sizes) - 1
     for t, n in enumerate(sizes):
         ctx, rows = nxt
         d0 = time.perf_counter()
         lam = None if lam_trace is None else lam_trace[t]
+        t_next = min(t + 1, last)  # final window: nothing left to aim at
         results.append(pipeline.serve_window(
             ctx, rows, lam=lam,
             budget=None if budget_trace is None else budget_trace[t],
-            cost_scale=None if scale_trace is None else scale_trace[t]))
+            cost_scale=None if scale_trace is None else scale_trace[t],
+            dual_budget=(budget_trace[t_next]
+                         if forecast and budget_trace is not None
+                         else None),
+            dual_cost_scale=(scale_trace[t_next]
+                             if forecast and scale_trace is not None
+                             else None)))
         dispatch_ms.append((time.perf_counter() - d0) * 1e3)
         if t + 1 < len(sizes):  # prep t+1 while the device runs t
             nxt = sample_window(t + 1, sizes[t + 1])

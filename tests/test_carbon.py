@@ -391,5 +391,49 @@ def test_carbon_scenario_windows_and_unknown_error():
     carbon = scenario_windows(TrafficScenario("carbon", 12, 96))
     diurnal = scenario_windows(TrafficScenario("diurnal", 12, 96))
     assert carbon == diurnal  # same day curve; carbon adds the CI pairing
+    georegions = scenario_windows(TrafficScenario("georegions", 12, 96))
+    assert georegions == diurnal  # the router changes WHERE, not HOW MANY
     with pytest.raises(ValueError, match="carbon"):
         scenario_windows(TrafficScenario("nope", 4, 8))
+
+
+def test_ledger_embodied_amortization(tmp_path):
+    """Embodied carbon accrues per device-hour regardless of load and
+    rides into report + CSV totals (the under-reporting fix)."""
+    from repro.carbon.ledger import (DEFAULT_EMBODIED_G_PER_DEVICE_H,
+                                     geo_report_csv)
+
+    chains = _tiny_chains()
+    tr = constant_trace(500.0)
+    rate, devs = DEFAULT_EMBODIED_G_PER_DEVICE_H, 3
+    led = CarbonLedger(chains, tr, window_s=2 * HOUR_S,
+                       embodied_g_per_device_h=rate, n_devices=devs)
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        led.record(rng.integers(0, chains.n_chains, 16))
+    per_window = rate * devs * 2.0  # 2 h windows
+    for e in led.entries:
+        assert e.embodied_gco2e == pytest.approx(per_window)
+        assert e.total_gco2e == pytest.approx(e.gco2e + per_window)
+    rep = led.report()
+    assert rep["embodied_gco2e"] == pytest.approx(4 * per_window)
+    assert rep["total_gco2e"] == pytest.approx(
+        rep["gco2e"] + rep["embodied_gco2e"])
+    # a day has 12 two-hour windows -> daily embodied = 24 h of devices
+    assert rep["daily_embodied_gco2e"] == pytest.approx(rate * devs * 24)
+    path = str(tmp_path / "report.csv")
+    led.to_csv(path)
+    lines = open(path).read().strip().splitlines()
+    header = lines[0].split(",")
+    assert header[-2:] == ["embodied_gco2e", "total_gco2e"]
+    assert all(len(ln.split(",")) == len(header) for ln in lines[1:])
+
+    # per-region merge keeps each ledger's windows under a region column
+    led_b = CarbonLedger(chains, tr, window_s=2 * HOUR_S)
+    led_b.record(np.zeros(4, np.int64))
+    gpath = str(tmp_path / "geo.csv")
+    geo_report_csv({"region_a": led, "region_b": led_b}, gpath)
+    glines = open(gpath).read().strip().splitlines()
+    assert glines[0].split(",")[0] == "region"
+    assert sum(ln.startswith("region_a,") for ln in glines) == 5  # 4+TOTAL
+    assert sum(ln.startswith("region_b,") for ln in glines) == 2
