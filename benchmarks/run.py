@@ -127,7 +127,7 @@ def run_all_json(fast: bool = False) -> dict:
     import os
 
     from benchmarks import (bench_carbon, bench_chain_sim, bench_geo,
-                            bench_serve)
+                            bench_geotenants, bench_serve)
 
     repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     out = {}
@@ -152,6 +152,13 @@ def run_all_json(fast: bool = False) -> dict:
                   **({"windows": 12, "requests": 24,
                       "phases": (0.0, 12.0)} if fast else {}))
     out["geo"] = "BENCH_geo.json"
+    print("[run --all] combined tenant x region vs single-axis arms ...")
+    bench_geotenants.run(
+        json_path=os.path.join(repo, "BENCH_geotenants.json"),
+        **({"windows": 12, "requests": 24, "n_tenants": 2,
+            "band_fracs": (0.35, 0.65),
+            "phases": (0.0, 12.0)} if fast else {}))
+    out["geotenants"] = "BENCH_geotenants.json"
     for name, path in out.items():
         print(f"[run --all] {name:10s} -> {path}")
     return out

@@ -1,19 +1,44 @@
-"""Multi-price serving quickstart: per-tenant dual prices end to end.
+"""ConstraintSpec serving quickstart: declare axes, get one fused pass.
 
-    PYTHONPATH=src python examples/serve_allocation.py [--geo]
+    PYTHONPATH=src python examples/serve_allocation.py [--geo|--combined]
 
 Builds the small serving world (cascade + reward model, cached under
 results/cache), then streams a day of traffic through the fused
-score->decide->guard->execute pass with PER-TENANT DUAL PRICES
-(``ServingPipeline(tenant_budgets=..., tenant_mode="priced")``): four
-tenants with very different budgets share one jitted window pass, each
-tenant's price descending on its own consumption-vs-budget subgradient
-while the per-constraint tail-reserve guard hard-caps each block.
+score->decide->guard->execute pass built from a declarative
+``ConstraintSpec`` - the operator declares WHAT is budgeted and the
+spec compiles onto the multi-price allocator core:
 
-``--geo`` runs the other face of the same multi-price core instead: the
-two-region geo-shifting router (region CI days 8 h apart, per-region
-gram budgets, requests choosing their serving region through the priced
-argmax).
+  default     [TenantAxis(budgets, priced=True)]
+              four tenants with very different budgets share one jitted
+              window pass, each tenant's dual price descending on its
+              own consumption-vs-budget subgradient while the
+              per-constraint tail-reserve guard hard-caps each block;
+
+  --geo       [RegionAxis(2, split="flow"), GlobalAxis(pricing="carbon")]
+              the two-region geo-shifting router (region CI days 8 h
+              apart, per-region gram budgets, requests choosing their
+              serving region through the priced argmax; degenerate ties
+              rounded by the exact flow split);
+
+  --combined  [TenantAxis(priced=True), RegionAxis(2),
+               GlobalAxis(pricing="carbon")]
+              BOTH axes in one pipeline: per-tenant gram budgets AND
+              per-region gram caps priced together - a tenant-t request
+              pays (lam_tenant[t] + lam_region[r]) * c_{j,r}, and the
+              per-(tenant, region) spend comes back in
+              ``WindowResult.tr_spend``.
+
+Migrating from the legacy keyword constructor (every combination maps
+to a spec, bit-identically - see ``serving/spec.py`` for the table):
+
+    ServingPipeline(..., budget)                 -> [GlobalAxis(budget)]
+    ServingPipeline(..., tenant_budgets=tb)      -> [TenantAxis(tb)]
+    ServingPipeline(..., tb, tenant_mode="priced")
+                                        -> [TenantAxis(tb, priced=True)]
+    ServingPipeline(..., n_regions=2)   -> [RegionAxis(2, "argmax"), ...]
+    region_jitter=eps                   -> DEPRECATED; RegionAxis(
+                                           split="flow") is the exact
+                                           replacement
 
 The classic spike scenario of earlier revisions lives on as the
 production driver: ``python -m repro.launch.serve --small``.
@@ -32,10 +57,15 @@ def main():
     ap.add_argument("--windows", type=int, default=8)
     ap.add_argument("--geo", action="store_true",
                     help="two-region geo router instead of tenants")
+    ap.add_argument("--combined", action="store_true",
+                    help="tenants x regions in ONE pipeline (the "
+                         "ConstraintSpec headline)")
     args = ap.parse_args()
 
     from repro.experiments import build_serving_stack, serve_config
     from repro.serving.pipeline import ServingPipeline
+    from repro.serving.spec import (ConstraintSpec, GlobalAxis,
+                                    RegionAxis, TenantAxis)
     from repro.serving.stream import (TrafficScenario, run_stream,
                                       scenario_windows)
 
@@ -50,7 +80,7 @@ def main():
         rows = rng.integers(0, n_eval, n)
         return exp.ctx_eval[rows], rows
 
-    if args.geo:
+    if args.geo or args.combined:
         from repro.carbon.controller import grams_per_flop
         from repro.carbon.intensity import two_region_traces
         from repro.carbon.ledger import DAY_S
@@ -58,17 +88,65 @@ def main():
 
         n_req = 96
         flops_budget = 0.5 * chains.costs.max() * n_req
+        scenario = "geotenants" if args.combined else "georegions"
+        t_n = 3 if args.combined else 1
         sizes = scenario_windows(TrafficScenario(
-            "georegions", args.windows, n_req))
+            scenario, args.windows, n_req, n_tenants=t_n))
         traces = two_region_traces(mean=450.0, offset_h=8.0)
         kpf = grams_per_flop(1.0)
         window_s = DAY_S / len(sizes)
         ci = np.stack([traces[r].resample(len(sizes), window_s)
                        for r in traces], axis=1)
-        pipe = ServingPipeline(
-            server, params, rcfg, float(flops_budget), n_regions=2,
-            region_jitter=0.2,
-            dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
+        g_total = 0.5 * flops_budget * kpf * 450.0 * 2  # day reference
+        dual_cfg = DualDescentConfig(max_iters=300, step_decay=0.98)
+
+        if args.combined:
+            # tenant 0 tight, tenant 2 loose; regions capped at 60%
+            w = np.array([0.6, 1.0, 1.4])
+            tenant_g = g_total * w / w.sum()
+            region_g = np.full(2, 0.6 * g_total)
+            spec = ConstraintSpec([
+                TenantAxis(tuple(tenant_g / (kpf * 450.0)),
+                           priced=True),
+                RegionAxis(2, names=tuple(traces), split="flow"),
+                GlobalAxis(pricing="carbon"),
+            ])
+            pipe = ServingPipeline.from_spec(server, params, rcfg, spec,
+                                             dual_cfg=dual_cfg)
+            budget_trace = np.tile(
+                np.concatenate([tenant_g, region_g]), (len(sizes), 1))
+            st = run_stream(pipe, sizes, sample_window,
+                            budget_trace=budget_trace,
+                            scale_trace=kpf * ci, forecast=True)
+            print(f"\n{'win':>4} {'ci_a':>6} {'ci_b':>6} "
+                  f"{'split a/b':>10} "
+                  + " ".join(f"{'t' + str(k) + ' s/b':>8}"
+                             for k in range(3)) + f" {'revenue':>9}")
+            for t, r in enumerate(st.windows):
+                split = np.bincount(r.regions_np, minlength=2)
+                tr = np.asarray(r.tr_spend)
+                cols = " ".join(f"{tr[k].sum() / tenant_g[k]:>8.3f}"
+                                for k in range(3))
+                print(f"{t:>4} {ci[t, 0]:>6.0f} {ci[t, 1]:>6.0f} "
+                      f"{split[0]:>4d}/{split[1]:<4d} {cols} "
+                      f"{r.revenue_np.sum():>9.1f}")
+            lam = np.asarray(pipe.lam)
+            print(f"[example] final prices: tenants "
+                  + "/".join(f"{v:.2e}" for v in lam[:3])
+                  + "  regions " + "/".join(f"{v:.2e}"
+                                            for v in lam[3:]))
+            print(f"[example] combined day done: "
+                  f"{st.total_revenue:.1f} clicks, "
+                  f"{len(sizes) / st.wall_s:.1f} win/s - one fused "
+                  f"pass, K=5 dual prices over tenants x regions.")
+            return 0
+
+        spec = ConstraintSpec([
+            RegionAxis(2, names=tuple(traces), split="flow"),
+            GlobalAxis(budget=float(flops_budget), pricing="carbon"),
+        ])
+        pipe = ServingPipeline.from_spec(server, params, rcfg, spec,
+                                         dual_cfg=dual_cfg)
         grams = np.full((len(sizes), 2),
                         0.5 * flops_budget * kpf * 450.0)
         st = run_stream(pipe, sizes, sample_window,
@@ -94,10 +172,9 @@ def main():
     # floor and its natural (price-zero) spend, so its OWN price must
     # rise while the slack tenants' prices stay at zero
     tenant_budgets = np.array([0.22, 0.4, 0.6, 1.0]) * c_max * per_tenant
-    pipe = ServingPipeline(server, params, rcfg,
-                           float(tenant_budgets.sum()),
-                           tenant_budgets=tenant_budgets,
-                           tenant_mode="priced")
+    spec = ConstraintSpec([TenantAxis(tuple(tenant_budgets),
+                                      priced=True)])
+    pipe = ServingPipeline.from_spec(server, params, rcfg, spec)
     sizes = [n_req] * args.windows
     st = run_stream(pipe, sizes, sample_window)
 
@@ -115,7 +192,7 @@ def main():
           f"clicks, {len(sizes) / st.wall_s:.1f} win/s")
     print("[example] tighter tenants carry higher prices; every "
           "tenant's spend respects its own budget - one fused pass, "
-          "K=4 dual prices.")
+          "K=4 dual prices, declared in one ConstraintSpec.")
     return 0
 
 

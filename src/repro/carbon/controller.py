@@ -167,6 +167,29 @@ class CarbonBudgetController:
         self.lam = jnp.float32(self.dual_cfg.lam_init)
         self.stats: list[CarbonWindowStats] = []
 
+    @classmethod
+    def from_spec(cls, chains: ActionChainSet, spec,
+                  trace: IntensityTrace, *, window_s: float = 3600.0,
+                  phase_s: float = 0.0, ci_ref: float | None = None,
+                  **kw) -> "CarbonBudgetController":
+        """Build the carbon host loop from a ConstraintSpec.
+
+        The spec's ``GlobalAxis`` supplies the per-window reference
+        budget (in FLOPs at ``ci_ref``, default the trace mean) and the
+        pricing formulation; tenant/region axes need the fused
+        ``ServingPipeline.from_spec``.
+        """
+        cs = spec.compile()
+        if cs.mode != "plain":
+            raise ValueError(
+                f"the host-loop CarbonBudgetController serves the plain "
+                f"single-budget spec only (got mode {cs.mode!r}); use "
+                f"ServingPipeline.from_spec for tenant/region axes")
+        cb = CarbonBudget.from_flops(cs.total_budget, trace,
+                                     ci_ref=ci_ref, window_s=window_s,
+                                     phase_s=phase_s)
+        return cls(chains, cb, pricing=cs.pricing, **kw)
+
     def step_window(self, rewards: np.ndarray) -> np.ndarray:
         """Serve one window: Eq. 10 decide -> guard -> ledger -> dual.
 

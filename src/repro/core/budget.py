@@ -45,6 +45,29 @@ class BudgetController:
                                     self.dual_cfg)
         self.stats: list[WindowStats] = []
 
+    @classmethod
+    def from_spec(cls, chains: ActionChainSet, spec, **kw
+                  ) -> "BudgetController":
+        """Build the host-loop controller from a ConstraintSpec.
+
+        The host loop serves exactly the paper's single-budget system,
+        so only a plain FLOPs ``[GlobalAxis(budget=...)]`` spec maps
+        here; tenant/region axes need the fused
+        ``ServingPipeline.from_spec`` and carbon pricing the
+        ``carbon.controller.CarbonBudgetController.from_spec`` twin.
+        """
+        cs = spec.compile()
+        if cs.mode != "plain":
+            raise ValueError(
+                f"the host-loop BudgetController serves the plain "
+                f"single-budget spec only (got mode {cs.mode!r}); "
+                f"use ServingPipeline.from_spec for tenant/region axes")
+        if cs.pricing != "flops":
+            raise ValueError(
+                "carbon pricing on the host loop lives in "
+                "carbon.controller.CarbonBudgetController.from_spec")
+        return cls(chains, cs.total_budget, **kw)
+
     def step_window(self, rewards: np.ndarray) -> np.ndarray:
         """Serve one traffic window: decide with lambda_{t-1}, meter spend,
         apply the downgrade guard, then update the price for t+1.

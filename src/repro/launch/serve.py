@@ -40,17 +40,36 @@ Scenario flags
                       effective-FLOPs-budget reduction), --ci-forecast
                       (nearline dual warm-started on the NEXT window's
                       CI - closes the lambda-lag gap)
---scenario georegions the two-region geo-shifting router: each request
-                      picks (chain, serving region) through one priced
-                      argmax with region costs flops_j*kappa*CI_r(t)
-                      (region CI days --geo-offset-h apart), (R,) dual
-                      prices + per-region gram budgets + per-region
-                      guard; per-region CarbonLedgers merge into
-                      results/carbon_report_geo.csv.  --geo-jitter
-                      smooths the degenerate region tie into a
-                      proportional split
+--scenario georegions the two-region geo-shifting router (spec:
+                      RegionAxis(2) + GlobalAxis(pricing="carbon")):
+                      each request picks (chain, serving region)
+                      through one priced argmax with region costs
+                      flops_j*kappa*CI_r(t) (region CI days
+                      --geo-offset-h apart), (R,) dual prices +
+                      per-region gram budgets + per-region guard;
+                      per-region CarbonLedgers merge into
+                      results/carbon_report_geo.csv.  --geo-split
+                      flow|argmax picks the degenerate-tie rounding
+                      (flow = the exact proportional flow split;
+                      argmax = the historical knife edge); --geo-jitter
+                      is deprecated (value ignored; 0 selects argmax,
+                      nonzero flow)
+--scenario geotenants the COMBINED tenant x region pipeline (spec:
+                      TenantAxis(budgets, priced=True) + RegionAxis(2)
+                      + GlobalAxis(pricing="carbon")): per-tenant gram
+                      budgets AND per-region gram caps priced together
+                      in ONE fused pass - a tenant-t request pays
+                      (lam_tenant[t] + lam_region[r]) * c_{j,r} for
+                      option (j, r), the guard chains a tenant walk
+                      with a per-region walk, and WindowResult carries
+                      the full (T, R) per-(tenant, region) spend.
+                      Knobs: --tenants, --tenant-spread (budget
+                      tightness ratio across tenants),
+                      --region-cap-frac (each region's gram cap as a
+                      fraction of the window's total tenant grams),
+                      plus every georegions knob
 --shards N            shard_map the pass over an N-way request mesh
-                      (composes with tenants and georegions)
+                      (composes with tenants, georegions, geotenants)
 --legacy              run the seed's host loop (scoring + NumPy guard +
                       separate serve kernel) instead, for comparison
                       (with --scenario carbon: the CarbonBudgetController
@@ -68,7 +87,7 @@ import numpy as np
 from repro.core.pfec import pfec_report
 from repro.experiments import build_serving_stack, serve_config
 from repro.serving.pipeline import ServingPipeline
-from repro.serving.stream import TrafficScenario, run_stream
+from repro.serving.stream import SCENARIOS, TrafficScenario, run_stream
 
 
 def make_legacy_scorer(exp, rcfg):
@@ -176,6 +195,18 @@ def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
     return st.total_revenue, total_flops
 
 
+def _geo_split(args) -> str:
+    """Resolve the region-tie rounding from the CLI: --geo-split, with
+    the deprecated --geo-jitter kept as an alias (0 = argmax, nonzero =
+    flow; the jitter VALUE is ignored)."""
+    if args.geo_jitter is not None:
+        print("[serve] --geo-jitter is deprecated (value ignored): "
+              f"selecting --geo-split "
+              f"{'flow' if args.geo_jitter > 0 else 'argmax'}")
+        return "flow" if args.geo_jitter > 0 else "argmax"
+    return args.geo_split
+
+
 def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
                 sample_window, mesh=None):
     """Two-region geo-shifted serving day: (R,) per-region gram budgets
@@ -187,6 +218,8 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
     from repro.carbon.intensity import two_region_traces
     from repro.carbon.ledger import DAY_S, CarbonLedger, geo_report_csv
     from repro.core.primal_dual import DualDescentConfig
+    from repro.serving.spec import (ConstraintSpec, GlobalAxis,
+                                    RegionAxis)
 
     traces = two_region_traces(mean=args.ci_mean,
                                offset_h=args.geo_offset_h)
@@ -200,13 +233,17 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
     scale_trace = np.stack([kpf * ci_w[r] for r in names], axis=1)
     g_total = flops_budget * kpf * args.ci_mean
     budget_trace = np.full((n_w, len(names)), g_total / len(names))
+    split = _geo_split(args)
     print(f"[serve] geo day: {n_w} windows x {window_s / 3600.0:.2f} h, "
           f"regions {names} offset {args.geo_offset_h:.0f} h, "
-          f"{g_total / len(names):.3e} g/window/region, jitter "
-          f"{args.geo_jitter}")
-    pipe = ServingPipeline(
-        server, params, rcfg, flops_budget, mesh=mesh,
-        n_regions=len(names), region_jitter=args.geo_jitter,
+          f"{g_total / len(names):.3e} g/window/region, split "
+          f"{split}")
+    spec = ConstraintSpec([
+        RegionAxis(len(names), names=tuple(names), split=split),
+        GlobalAxis(budget=float(flops_budget), pricing="carbon"),
+    ])
+    pipe = ServingPipeline.from_spec(
+        server, params, rcfg, spec, mesh=mesh,
         dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
     st = run_stream(pipe, sizes, sample_window,
                     budget_trace=budget_trace, scale_trace=scale_trace,
@@ -255,6 +292,110 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
     return total_rev, total_flops
 
 
+def _geotenants_stream(chains, server, params, rcfg, sizes,
+                       flops_budget, args, sample_window, mesh=None):
+    """The combined tenant x region day: per-tenant gram budgets AND
+    per-region gram caps priced in one fused pass (the ConstraintSpec
+    headline).  Budget trace entries are the (T + R,) concatenation -
+    tenant grams first - and the per-(tenant, region) spends come back
+    in WindowResult.tr_spend."""
+    import os
+
+    from repro.carbon.controller import grams_per_flop
+    from repro.carbon.intensity import two_region_traces
+    from repro.carbon.ledger import DAY_S, CarbonLedger, geo_report_csv
+    from repro.core.primal_dual import DualDescentConfig
+    from repro.serving.spec import (ConstraintSpec, GlobalAxis,
+                                    RegionAxis, TenantAxis)
+
+    if args.tenant_mode == "independent":
+        raise SystemExit("--scenario geotenants composes tenants and "
+                         "regions in ONE pipeline; --tenant-mode "
+                         "independent contradicts that (use shared or "
+                         "priced)")
+    t_n = args.tenants
+    traces = two_region_traces(mean=args.ci_mean,
+                               offset_h=args.geo_offset_h)
+    names = list(traces)
+    r_n = len(names)
+    n_w = len(sizes)
+    window_s = DAY_S / n_w
+    phase_s = args.ci_phase_h * 3600.0
+    kpf = grams_per_flop(1.0)
+    ci_w = {r: traces[r].resample(n_w, window_s, phase_s=phase_s)
+            for r in names}
+    scale_trace = np.stack([kpf * ci_w[r] for r in names], axis=1)
+    g_total = flops_budget * kpf * args.ci_mean  # grams per window
+    # distinct per-tenant tightness: budgets spread by --tenant-spread
+    # (ratio of the loosest to the tightest tenant), summing to g_total
+    w = np.linspace(1.0, args.tenant_spread, t_n)
+    tenant_g = (g_total * w / w.sum()).astype(np.float64)
+    region_g = np.full(r_n, args.region_cap_frac * g_total)
+    budget_trace = np.tile(np.concatenate([tenant_g, region_g]),
+                           (n_w, 1))
+    split = _geo_split(args)
+    print(f"[serve] geotenants day: {n_w} windows x "
+          f"{window_s / 3600.0:.2f} h, {t_n} tenants x {r_n} regions "
+          f"(offset {args.geo_offset_h:.0f} h), tenant grams "
+          + "/".join(f"{g:.2e}" for g in tenant_g)
+          + f", region cap {region_g[0]:.2e} g "
+          f"({args.region_cap_frac:.0%} of total), split {split}, "
+          f"tenant-mode {args.tenant_mode}")
+    spec = ConstraintSpec([
+        TenantAxis(tuple(tenant_g),
+                   priced=args.tenant_mode == "priced"),
+        RegionAxis(r_n, names=tuple(names), split=split),
+        GlobalAxis(pricing="carbon"),
+    ])
+    pipe = ServingPipeline.from_spec(
+        server, params, rcfg, spec, mesh=mesh,
+        dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
+    st = run_stream(pipe, sizes, sample_window,
+                    budget_trace=budget_trace, scale_trace=scale_trace,
+                    forecast=args.ci_forecast)
+    t_hdr = " ".join(f"{'t' + str(k) + ' s/b':>8}" for k in range(t_n))
+    r_hdr = " ".join(f"{'r_' + r[-1] + ' s/b':>8}" for r in names)
+    print(f"{'win':>4} {'n':>5} {'split':>12} {t_hdr} {r_hdr} "
+          f"{'revenue':>9} {'dispatch_ms':>11}")
+    ledgers = {
+        r: CarbonLedger(chains, traces[r], window_s=window_s,
+                        phase_s=phase_s, name=r,
+                        embodied_g_per_device_h=args.embodied_g_per_device_h,
+                        n_devices=args.devices)
+        for r in names}
+    total_rev = total_flops = 0.0
+    tenant_spend = np.zeros(t_n)
+    for t, r in enumerate(st.windows):
+        regions = r.regions_np
+        dec = r.decisions_np
+        split_c = [int(x) for x in np.bincount(regions, minlength=r_n)]
+        tr = np.asarray(r.tr_spend)
+        tenant_spend += tr.sum(axis=1)
+        t_cols = " ".join(f"{tr[k].sum() / tenant_g[k]:>8.3f}"
+                          for k in range(t_n))
+        r_cols = " ".join(f"{tr[:, k].sum() / region_g[k]:>8.3f}"
+                          for k in range(r_n))
+        print(f"{t:>4} {r.n_valid:>5} {str(split_c):>12} {t_cols} "
+              f"{r_cols} {r.revenue_np.sum():>9.1f} "
+              f"{st.dispatch_ms[t]:>11.2f}")
+        for k, n_ in enumerate(names):
+            ledgers[n_].record(dec[regions == k], t=t, ci=ci_w[n_][t])
+        total_rev += float(r.revenue_np.sum())
+        total_flops += float(r.flops)
+    print(f"[serve] {n_w} windows in {st.wall_s:.2f}s "
+          f"({n_w / st.wall_s:.1f} win/s)")
+    print("[serve] day totals, per tenant (spend_g / budget_g): "
+          + " ".join(f"t{k}={tenant_spend[k] / (n_w * tenant_g[k]):.3f}"
+                     for k in range(t_n)))
+    report_path = args.carbon_report or os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results",
+        "carbon_report_geotenants.csv")
+    geo_report_csv(ledgers, report_path)
+    print(f"[serve] per-region carbon ledger -> "
+          f"{os.path.abspath(report_path)}")
+    return total_rev, total_flops
+
+
 def _legacy_carbon_loop(exp, server, params, rcfg, sizes, cb, ledger,
                         sample_window, pricing):
     """Host-loop carbon day on CarbonBudgetController (the --legacy twin
@@ -290,8 +431,7 @@ def main():
     ap.add_argument("--requests", type=int, default=96,
                     help="requests per normal window")
     ap.add_argument("--scenario", default="spike",
-                    choices=("constant", "spike", "diurnal", "tenants",
-                             "carbon", "georegions"))
+                    choices=tuple(SCENARIOS))
     ap.add_argument("--spike", type=float, default=3.0,
                     help="traffic multiplier on the spike windows")
     ap.add_argument("--tenants", type=int, default=4)
@@ -324,9 +464,20 @@ def main():
                          "window's known CI (carbon/georegions)")
     ap.add_argument("--geo-offset-h", type=float, default=8.0,
                     help="hours region b's CI peak trails region a's")
-    ap.add_argument("--geo-jitter", type=float, default=0.2,
-                    help="relative region-price jitter smoothing the "
-                         "degenerate region tie (0 = pure argmax)")
+    ap.add_argument("--geo-split", default="flow",
+                    choices=("flow", "argmax"),
+                    help="region-tie rounding: 'flow' = exact "
+                         "proportional flow split of the degenerate "
+                         "window, 'argmax' = the historical knife edge")
+    ap.add_argument("--geo-jitter", type=float, default=None,
+                    help="DEPRECATED (value ignored): 0 selects "
+                         "--geo-split argmax, nonzero --geo-split flow")
+    ap.add_argument("--tenant-spread", type=float, default=4.0,
+                    help="geotenants: gram-budget ratio of the loosest "
+                         "to the tightest tenant")
+    ap.add_argument("--region-cap-frac", type=float, default=0.6,
+                    help="geotenants: each region's per-window gram cap "
+                         "as a fraction of the total tenant grams")
     ap.add_argument("--embodied-g-per-device-h", type=float, default=None,
                     help="embodied-carbon amortization per device-hour "
                          "(default: the ichnos-style server constant; "
@@ -345,7 +496,8 @@ def main():
         serve_config(small=args.small), verbose=True)
     chains = exp.chains
     budget = args.budget_frac * chains.costs.max() * args.requests
-    n_tenants = args.tenants if args.scenario == "tenants" else 1
+    n_tenants = (args.tenants
+                 if args.scenario in ("tenants", "geotenants") else 1)
     sc = TrafficScenario(args.scenario, args.windows, args.requests,
                          spike_mult=args.spike, n_tenants=n_tenants)
     sizes = sc.window_sizes()
@@ -417,6 +569,14 @@ def main():
             raise SystemExit("--scenario georegions has no legacy loop "
                              "(the router exists only in the fused pass)")
         total_rev, total_flops = _geo_stream(
+            chains, server, params, rcfg, sizes, float(budget), args,
+            sample_window, mesh=mesh)
+    elif args.scenario == "geotenants":
+        if args.legacy:
+            raise SystemExit("--scenario geotenants has no legacy loop "
+                             "(the combined tenant x region pass exists "
+                             "only in the fused pipeline)")
+        total_rev, total_flops = _geotenants_stream(
             chains, server, params, rcfg, sizes, float(budget), args,
             sample_window, mesh=mesh)
     elif args.legacy:

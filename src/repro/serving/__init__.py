@@ -2,6 +2,15 @@
 
 A map of the unified allocator core and the layers over it:
 
+  serving.spec            the DECLARATIVE front door: a
+      ``ConstraintSpec`` is a list of constraint axes -
+      ``TenantAxis(budgets, priced=...)``, ``RegionAxis(n, split=...)``,
+      ``GlobalAxis(budget, pricing="flops"|"carbon")`` - that compiles
+      onto the multi-price core's (M, K) cost map, (I, K) membership,
+      (K,) budget/price vectors and per-K guard ``k_of``, with K the
+      concatenation of the declared axes (priced tenant prices first,
+      region prices after).  ``spec_from_legacy`` maps every historical
+      flag combination to its spec, bit-identically.
   core.primal_dual        THE multi-price core: Eq. 10 ``allocate``,
       per-constraint ``consumption``, Algorithm 1 ``dual_descent``.
       One implementation spans every pricing shape - a scalar price
@@ -14,38 +23,51 @@ A map of the unified allocator core and the layers over it:
       padded windows, shardable over the request axis, and -
       via ``k_of`` - K per-constraint budgets at once (tenant blocks,
       serving regions), each constraint walking only its own requests.
-  serving.pipeline        ``ServingPipeline``: reward scoring
+      ``downgrade_guard_chain`` sequences several constraint FAMILIES
+      (tenant budgets THEN region budgets) over one window.
+  serving.pipeline        ``ServingPipeline.from_spec``: reward scoring
       (model-prefix grouped), priced allocation, the fused guard,
       CompactPlan cascade execution and the nearline dual update in ONE
-      jitted window pass.  Pricing modes: plain scalar; tenants
-      "shared" (one price, per-tenant guard budgets); tenants "priced"
-      ((T,) prices in the same pass); geo (``n_regions``: requests pick
-      (chain, region) through the priced argmax with region costs
-      flops_j * kappa * CI_r(t), per-region budgets + prices).  All
-      modes compose with the ("req",) shard_map mesh and the padded
-      window buckets, and support the CI-forecast dual warm-start
-      (``dual_budget``/``dual_cost_scale``).
+      jitted window pass, for ANY compiled spec: plain scalar; tenants
+      shared/priced; geo regions; and the combined tenant x region
+      system (a (T + R,) price vector where a tenant-t request pays
+      (lam_tenant[t] + lam_region[r]) * c_{j,r}, per-(tenant, region)
+      spends in ``WindowResult.tr_spend``).  Degenerate region ties are
+      rounded by the exact flow split (``RegionAxis(split="flow")``;
+      the deprecated ``region_jitter`` maps to it).  All modes compose
+      with the ("req",) shard_map mesh, the padded window buckets and
+      the CI-forecast dual warm-start (``dual_budget``/
+      ``dual_cost_scale``).  The legacy keyword constructor survives as
+      a thin shim over ``spec_from_legacy``.
   serving.stream          double-buffered streaming driver (host
-      prepares window t+1 while the device executes t) + traffic
-      scenarios: constant, spike, diurnal, tenants, carbon and
-      georegions; per-window budget/scale traces and
-      ``forecast=True`` thread time-varying carbon constraints through
-      the pipeline without recompiles.
+      prepares window t+1 while the device executes t) + the
+      ``SCENARIOS`` registry - ONE dict of per-window-size builders
+      (constant, spike, diurnal, tenants, carbon, georegions,
+      geotenants) from which the valid-names error and the
+      ``launch/serve.py --scenario`` choices both derive; per-window
+      budget/scale traces and ``forecast=True`` thread time-varying
+      carbon constraints through the pipeline without recompiles.
   carbon.*                the gCO2e side: intensity traces, the
-      CarbonBudget / CarbonBudgetController wrappers, and the
-      CarbonLedger (operational + embodied metering, per-region
-      attribution for geo serving).
+      CarbonBudget / CarbonBudgetController wrappers (both
+      spec-buildable via ``from_spec``), and the CarbonLedger
+      (operational + embodied metering, per-region attribution for
+      geo serving).
 
 ``launch/serve.py`` is the CLI front end (--scenario ... --tenant-mode
-shared|priced --shards N); ``benchmarks/bench_serve.py`` measures the
-fused pass against the legacy loop (BENCH_serve.json),
-``benchmarks/bench_carbon.py`` the carbon-aware allocator
-(BENCH_carbon.json) and ``benchmarks/bench_geo.py`` the two-region
-geo-shifting router (BENCH_geo.json).
+shared|priced --geo-split flow|argmax --shards N); benchmarks:
+``bench_serve.py`` (fused pass vs legacy loop, BENCH_serve.json),
+``bench_carbon.py`` (carbon-aware allocator, BENCH_carbon.json),
+``bench_geo.py`` (two-region router, BENCH_geo.json) and
+``bench_geotenants.py`` (the combined tenant x region spec vs the
+single-axis arms + the exact-dual pipeline gate,
+BENCH_geotenants.json).
 """
 import importlib
 
-from repro.serving.guard import downgrade_guard, downgrade_guard_np
+from repro.serving.guard import (downgrade_guard, downgrade_guard_chain,
+                                 downgrade_guard_np)
+from repro.serving.spec import (ConstraintSpec, GlobalAxis, RegionAxis,
+                                TenantAxis, spec_from_legacy)
 
 _LAZY = {
     "ServingPipeline": "repro.serving.pipeline",
@@ -57,7 +79,9 @@ _LAZY = {
     "scenario_windows": "repro.serving.stream",
 }
 
-__all__ = ["downgrade_guard", "downgrade_guard_np", *_LAZY]
+__all__ = ["downgrade_guard", "downgrade_guard_chain",
+           "downgrade_guard_np", "ConstraintSpec", "TenantAxis",
+           "RegionAxis", "GlobalAxis", "spec_from_legacy", *_LAZY]
 
 
 def __getattr__(name):  # PEP 562: keep core.budget's import chain light

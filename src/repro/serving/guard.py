@@ -40,6 +40,17 @@ call - including across request shards.
 allocator's (the seed overwrote the counter each pass, under-reporting
 multi-pass windows; requests already on the cheapest option are never
 counted - nothing was downgraded about them).
+
+``downgrade_guard_chain`` composes SEVERAL constraint families over one
+window (a compiled ConstraintSpec with both a tenant and a region axis
+guards T tenant budgets AND R region budgets): the walks run in
+sequence, each family guarding the previous family's output.  The
+composition is safe whenever each walk's downgrade option is no more
+expensive than the decision it replaces - every later walk then only
+LOWERS the spends the earlier walks already capped - which holds for
+the tail-reserve rule by construction (requests are only ever moved to
+a cheapest option).  ``downgraded`` counts requests whose decision
+after the LAST walk differs from the allocator's, once.
 """
 from __future__ import annotations
 
@@ -170,6 +181,58 @@ def downgrade_guard(decisions: jnp.ndarray, costs: jnp.ndarray,
     else:
         spend, downgraded = spend_local, changed
     return decisions, downgraded, spend
+
+
+def downgrade_guard_chain(decisions, costs, plans,
+                          valid: jnp.ndarray | None = None,
+                          *, passes: int = GUARD_PASSES,
+                          axis_name: str | None = None):
+    """Chain per-constraint-family tail-reserve walks over one window.
+
+    ``plans`` is a sequence of ``(budget, cheap, k_of)`` triples, one
+    per constraint family, walked in order (e.g. tenant gram budgets
+    first, per-region gram budgets second); each family sees the
+    decisions the previous family produced.  A ``k_of`` callable is
+    invoked with the CURRENT decisions (region membership is decided by
+    the option, so a later family's mapping must follow earlier
+    downgrades); an array ``k_of`` is used as-is.
+
+    Returns ``(decisions, downgraded, spends)`` where ``spends`` lists
+    each family's (K,) per-constraint spend of the FINAL decisions and
+    ``downgraded`` counts unique changed valid requests across the
+    whole chain.
+    """
+    decisions = decisions.astype(jnp.int32)
+    costs = costs.astype(jnp.float32)
+    if valid is None:
+        valid = jnp.ones(decisions.shape, jnp.float32)
+    else:
+        valid = valid.astype(jnp.float32)
+    orig = decisions
+    k_ofs = []
+    for budget, cheap, k_of in plans:
+        k_ofs.append((budget, k_of))
+        k_now = k_of(decisions) if callable(k_of) else k_of
+        decisions, _, _ = downgrade_guard(
+            decisions, costs, budget, cheap, valid, k_of=k_now,
+            passes=passes, axis_name=axis_name)
+    # spends of the FINAL decisions, per family (earlier walks' own
+    # spend reads are stale once a later walk downgrades further)
+    cd = jnp.take(costs, decisions) * valid
+    spends = []
+    for budget, k_of in k_ofs:
+        k_of = k_of(decisions) if callable(k_of) else k_of
+        k_n = int(jnp.shape(budget)[0])
+        onehot = (k_of[:, None] == jnp.arange(k_n)[None, :]
+                  ).astype(jnp.float32)
+        spends.append(jnp.stack([jnp.sum(cd * onehot[:, k])
+                                 for k in range(k_n)]))
+    changed = jnp.sum(((decisions != orig) & (valid > 0))
+                      .astype(jnp.int32))
+    if axis_name is not None:
+        spends = [jax.lax.psum(s, axis_name) for s in spends]
+        changed = jax.lax.psum(changed, axis_name)
+    return decisions, changed, spends
 
 
 def _downgrade_guard_k(decisions, costs, budget, cheap, valid, k_of,

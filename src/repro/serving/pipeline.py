@@ -27,27 +27,53 @@ two graphs separate also sidesteps an XLA:CPU scheduling cliff where
 fusing the 200-step dual scan into the serving graph doubles its wall
 time.
 
-Pricing modes (all running the SAME multi-price core,
-``core.primal_dual``; the plain mode is its K=1 case, bit-identical):
+WHAT is budgeted is declared by a ``serving.spec.ConstraintSpec`` -
+the pipeline's front door is ``ServingPipeline.from_spec``:
 
-  * plain            - one budget, one dual price (the paper's system);
-  * tenants "shared" - T equal-size tenant blocks per window, ONE dual
-    price, the guard enforcing each tenant's own budget (k_of path);
-  * tenants "priced" - a (T,) PRICE VECTOR inside the same fused pass:
-    each tenant's price descends on its own consumption-vs-budget
-    subgradient (per-tenant membership one-hots into the core);
-  * geo (n_regions)  - each request chooses (chain, serving region) by
-    the same priced argmax over J*R options with region-dependent
-    effective costs c_{j,r}(t) = flops_j * scale_r(t) (carbon:
-    scale_r = kappa * CI_r(t)), (R,) per-region budgets/prices, the
-    guard downgrading within a request's decided region.
+  * [GlobalAxis]                 - one budget, one dual price (the
+    paper's system; the K=1 case of the core, bit-identical);
+  * [TenantAxis(shared)]         - T equal-size tenant blocks per
+    window, ONE dual price, the guard enforcing each tenant's own
+    budget (k_of path);
+  * [TenantAxis(priced)]         - a (T,) PRICE VECTOR inside the same
+    fused pass: each tenant's price descends on its own
+    consumption-vs-budget subgradient;
+  * [RegionAxis]                 - the geo router: each request chooses
+    (chain, serving region) by the same priced argmax over J*R options
+    with region-dependent effective costs c_{j,r}(t) = flops_j *
+    scale_r(t) (carbon: scale_r = kappa * CI_r(t)), (R,) per-region
+    budgets/prices, the guard downgrading within a request's region;
+  * [TenantAxis + RegionAxis]    - the COMBINED system: per-tenant
+    gram budgets and per-region gram budgets priced together, a
+    (T + R,) price vector (priced tenants) where a tenant-t request
+    pays (lam_tenant[t] + lam_region[r]) * c_{j,r} for option (j, r),
+    and the guard chains a tenant walk with a per-region walk.
+
+The legacy keyword constructor (``tenant_budgets``/``tenant_mode``/
+``n_regions``/``region_jitter``) survives as a thin shim that builds
+the equivalent spec (``serving.spec.spec_from_legacy``) - bit-identical
+to the historical flag paths.
+
+Region ties: the proportional cost structure (c_{j,r} = s_r * flops_j)
+makes every request indifferent between regions at once at the dual
+equilibrium, so a pure argmax bang-bangs whole windows.
+``RegionAxis(split="flow")`` (the default for new specs) resolves the
+degenerate window exactly: tied requests are divided deterministically
+in arrival order, each tied region receiving a share of the window's
+FLOPs mass proportional to its remaining budget capacity - the
+flow-splitting primal rounding of the fractional LP optimum.
+``split="argmax"`` keeps the historical knife-edge behavior (and the
+bit-exact reduction to a pinned pipeline when regions are identical).
+The old ``region_jitter`` eps-distortion is deprecated: its value is
+ignored; nonzero selects "flow".
 
 Request-axis sharding: pass a 1-D mesh (``launch.mesh.make_request_mesh``)
 and the pass runs under ``shard_map`` over axis "req" - per-request work
 stays local while the guard stitches per-constraint prefix spends with
 all_gather/psum and the dual update psums per-constraint consumption.
 Tenant blocks compose with sharding (blocks may span shard boundaries;
-the per-k prefix stitching keeps the walk exact).
+the per-k prefix stitching keeps the walk exact), and so does the flow
+split (the arrival-order FLOPs prefix is stitched the same way).
 
 Uneven windows: arrivals are padded up to a small set of bucket sizes
 (multiples of ``pad_quantum``) with a validity mask, so a 3x traffic
@@ -79,7 +105,9 @@ from repro.core.reward_model import (RewardModelConfig, chain_prefix_plan,
                                      reward_matrix_grouped)
 from repro.distributed.compat import shard_map
 from repro.distributed.sharding import REQUEST_AXIS as AXIS
-from repro.serving.guard import downgrade_guard
+from repro.serving.guard import (_exclusive_shard_offset, downgrade_guard,
+                                 downgrade_guard_chain)
+from repro.serving.spec import ConstraintSpec, spec_from_legacy
 
 
 @dataclass
@@ -91,7 +119,11 @@ class WindowResult:
     ``serve_window``); ``flops`` is always the realized FLOPs, so carbon
     ledgers and PFEC reports meter the same quantity either way.
     ``lam_before``/``lam_after`` are scalars in the single-price modes
-    and (K,) vectors for priced tenants / geo regions.
+    and (K,) vectors otherwise (``spec.k_names`` order: priced tenant
+    entries first, region entries after).  In the combined
+    tenant x region mode ``tr_spend`` carries the full (T, R)
+    per-(tenant, region) spend whose marginals are ``tenant_spend`` and
+    ``region_spend``.
     """
 
     n_valid: int
@@ -108,7 +140,8 @@ class WindowResult:
     cost_scale: float = 1.0  # active-units per FLOP (1.0 = FLOPs mode)
     regions: jnp.ndarray | None = None  # (B,) serving region (geo mode)
     region_spend: jnp.ndarray | None = None  # (R,) per-region spend
-    k_budget: np.ndarray | None = None  # (K,) per-constraint budgets
+    k_budget: np.ndarray | None = None  # per-constraint budgets
+    tr_spend: jnp.ndarray | None = None  # (T, R) per-(tenant, region)
 
     @property
     def decisions_np(self) -> np.ndarray:
@@ -135,6 +168,12 @@ class WindowResult:
 class ServingPipeline:
     """Fused per-window serving pass over a CascadeServer's universe.
 
+    The front door is ``ServingPipeline.from_spec(server, params, cfg,
+    spec)`` with a declarative ``serving.spec.ConstraintSpec``; the
+    keyword constructor below is the LEGACY shim - every historical
+    flag combination builds its equivalent spec via
+    ``spec_from_legacy`` and is bit-identical to the pre-spec paths.
+
     Parameters
     ----------
     server: executes chains for the serving users (its CompactPlan - or
@@ -145,24 +184,11 @@ class ServingPipeline:
         TOTAL budget; per-tenant/per-region caps refine it below).
     mesh: optional 1-D request mesh -> shard_map over axis "req"
         (composes with every pricing mode).
-    tenant_budgets: optional (T,) per-tenant budgets; windows then carry
-        T equal-size tenant blocks.  ``tenant_mode`` selects the price
-        structure: "shared" = ONE dual price, per-tenant guard budgets;
-        "priced" = a (T,) per-tenant price vector inside the fused pass.
-    n_regions: optional R >= 2 -> the geo-shifting router: serve_window
-        then takes (R,) ``budget`` and (R,) ``cost_scale`` and each
-        request picks its serving region through the priced argmax.
-    region_jitter: geo only - relative amplitude of a deterministic
-        per-request perturbation of the priced region costs (host-drawn
-        uniforms riding through the core's ``member`` weights).  The
-        two-region cost structure is PROPORTIONAL (c_{j,r} = s_r *
-        flops_j), so at the dual equilibrium every request is
-        indifferent between regions at once and a pure argmax bang-bangs
-        the whole window between them; a small jitter (e.g. 0.05) turns
-        the knife edge into a proportional split that moves continuously
-        with the price gap.  0.0 (default) keeps the un-jittered argmax
-        - and the bit-exact reduction to a pinned pipeline when the
-        regions are identical.
+    tenant_budgets / tenant_mode / n_regions / region_jitter: legacy
+        flags, see ``spec_from_legacy`` for the mapping
+        (``region_jitter`` is deprecated: the value is ignored, nonzero
+        selects the exact flow-splitting region-tie rounding).
+    spec: a ConstraintSpec - overrides the legacy flags entirely.
     """
 
     def __init__(self, server: CascadeServer, reward_params: dict,
@@ -171,31 +197,32 @@ class ServingPipeline:
                  guard: bool = True, mesh=None, pad_quantum: int = 32,
                  tenant_budgets=None, tenant_mode: str = "shared",
                  n_regions: int | None = None, region_jitter: float = 0.0,
-                 lam_init: float = 0.0, ledger=None):
+                 lam_init: float = 0.0, ledger=None,
+                 spec: ConstraintSpec | None = None):
+        if spec is None:
+            spec = spec_from_legacy(
+                float(budget_per_window), tenant_budgets=tenant_budgets,
+                tenant_mode=tenant_mode, n_regions=n_regions,
+                region_jitter=region_jitter)
+        cs = spec.compile()
+        self.spec = spec
+        self._cs = cs
         self.server = server
         self.ledger = ledger  # optional CarbonLedger (lazy metering hook)
         self.chains = server.chains
         self.reward_params = reward_params
         self.reward_cfg = reward_cfg
-        self.budget = float(budget_per_window)
+        self.budget = cs.total_budget
         self.dual_cfg = dual_cfg or DualDescentConfig()
         self.guard = guard
         self.mesh = mesh
-        if tenant_mode not in ("shared", "priced"):
-            raise ValueError(f"tenant_mode must be 'shared' or 'priced', "
-                             f"got {tenant_mode!r}")
-        self.tenant_mode = tenant_mode
-        self.tenant_budgets = (None if tenant_budgets is None
-                               else np.asarray(tenant_budgets, np.float32))
-        self.n_regions = None if n_regions is None else int(n_regions)
-        if self.n_regions is not None and self.n_regions < 2:
-            raise ValueError("n_regions needs >= 2 serving regions")
-        self.region_jitter = float(region_jitter)
-        self._jitter_rng = np.random.default_rng(0)
-        if self.n_regions is not None and self.tenant_budgets is not None:
-            raise NotImplementedError("tenant blocks x geo regions in one "
-                                      "pipeline (price the product K "
-                                      "through the core directly)")
+        # legacy-compatible views of the compiled spec
+        self.tenant_mode = "priced" if cs.tenant_priced else "shared"
+        self.tenant_budgets = (
+            None if cs.tenants is None
+            else np.asarray(cs.tenants.budgets, np.float32))
+        self.n_regions = cs.r_n
+        self.region_split = cs.split
         from repro.launch.mesh import mesh_num_shards
         self._n_shards = mesh_num_shards(mesh)
         q = math.lcm(int(pad_quantum), self._n_shards)
@@ -225,17 +252,27 @@ class ServingPipeline:
                 "keeps": jnp.asarray(server._keeps),
             }
             self._expose = server.expose
-        # K price components: (T,) for priced tenants, (R,) for geo,
-        # scalar otherwise (shared tenants keep the single price)
-        if self.tenant_budgets is not None and tenant_mode == "priced":
-            self.lam = jnp.full(len(self.tenant_budgets), lam_init,
-                                jnp.float32)
-        elif self.n_regions is not None:
-            self.lam = jnp.full(self.n_regions, lam_init, jnp.float32)
+        # K price components in spec.k_names order (priced tenants
+        # first, regions after); scalar for the single-price modes
+        if cs.n_prices:
+            self.lam = jnp.full(cs.n_prices, lam_init, jnp.float32)
         else:
             self.lam = jnp.float32(lam_init)
         self.stats: list[WindowResult] = []
         self._fns: dict = {}
+
+    @classmethod
+    def from_spec(cls, server: CascadeServer, reward_params: dict,
+                  reward_cfg: RewardModelConfig, spec: ConstraintSpec,
+                  *, dual_cfg: DualDescentConfig | None = None,
+                  guard: bool = True, mesh=None, pad_quantum: int = 32,
+                  lam_init: float = 0.0, ledger=None) -> "ServingPipeline":
+        """Build the pipeline from a declarative ConstraintSpec (the
+        compiled total budget seeds ``budget_per_window``)."""
+        return cls(server, reward_params, reward_cfg,
+                   spec.compile().total_budget, dual_cfg=dual_cfg,
+                   guard=guard, mesh=mesh, pad_quantum=pad_quantum,
+                   lam_init=lam_init, ledger=ledger, spec=spec)
 
     # -- fused pass -----------------------------------------------------------
 
@@ -251,6 +288,25 @@ class ServingPipeline:
                 n_stages=self.chains.n_stages)
         return rev * valid
 
+    def _flow_split(self, flops_mass, share, axis):
+        """Deterministic proportional rounding of a degenerate window:
+        walk the (masked) FLOPs mass in arrival order and hand region r
+        the ``share[r]`` fraction of it (a Bresenham-style interval
+        assignment on the cumulative mass - exact up to one request per
+        region, shard-stitched like every guard prefix)."""
+        edges = jnp.cumsum(share)  # (R,) interval right edges in (0, 1]
+        prefix = jnp.cumsum(flops_mass)
+        local_total = prefix[-1] if flops_mass.shape[0] \
+            else jnp.float32(0.0)
+        if axis is not None:
+            total = jax.lax.psum(local_total, axis)
+            prefix = prefix + _exclusive_shard_offset(local_total, axis)
+        else:
+            total = local_total
+        pos = (prefix - 0.5 * flops_mass) / jnp.maximum(total, 1e-30)
+        return jnp.sum((pos[:, None] > edges[None, :-1])
+                       .astype(jnp.int32), axis=1)
+
     def _build_main_fn(self, b: int, padded: bool):
         """Online response path: score -> decide -> guard -> execute.
 
@@ -265,13 +321,18 @@ class ServingPipeline:
         axis = AXIS if self.mesh is not None else None
         costs, cheap = self._costs, self._cheap
         j_n = int(costs.shape[0])
+        cs = self._cs
         tb = self.tenant_budgets
         r_n = self.n_regions
+        mode = cs.mode
 
-        if r_n is not None:
-            jit_eps = self.region_jitter
+        if mode == "geotenants":
+            t_n = len(tb)
+            priced = cs.tenant_priced
+            flow = cs.split == "flow"
+            tie_tol = cs.tie_tol
 
-            def fn(params, tables, ctx, rows, valid, jit_u, lam, budgets,
+            def fn(params, tables, ctx, rows, valid, k_of, lam, budgets,
                    scales):
                 rewards = denormalize_rewards(
                     params, reward_matrix_grouped(
@@ -279,41 +340,177 @@ class ServingPipeline:
                         self._prefix_plan))
                 # option axis m = r*J + j: region-major tiling
                 opt_costs = (scales[:, None] * costs[None, :]).reshape(-1)
-                # The joint argmax over (chain, region) factors: the
-                # reward is region-free, so each (request, chain) first
-                # picks its cheapest-PRICED region, then chains compete
-                # by the usual Eq. 10 argmax (first-index ties, exactly
-                # the scalar semantics).  The region argmin runs at
-                # lam + eps_green - an infinitesimal price floor, ~1e-6
-                # of the natural reward-per-cost scale - so a slack
-                # window (lam = 0, every price 0) still routes to the
-                # GREENER region instead of tie-breaking arbitrarily,
-                # while any meaningful price dwarfs it.  Equal regions
-                # keep equal floors, so ties still resolve to region 0
-                # and the pinned-pipeline reduction stays bit-exact.
-                price_r = lam[:, None] * (scales[:, None]
-                                          * costs[None, :])  # (R, J)
-                price_irj = jnp.broadcast_to(
-                    price_r[None], (rewards.shape[0], r_n, j_n))
-                if jit_eps > 0:  # per-request tie-smoothing jitter,
-                    # CENTERED so the mean priced cost is unbiased (a
-                    # [1, 1+eps] scale would throttle spend ~eps/2
-                    # below budget every window)
-                    price_irj = price_irj * (
-                        1.0 + jit_eps * (jit_u - 0.5))[:, :, None]
+                if priced:
+                    lam_t, lam_r = lam[:t_n], lam[t_n:]
+                    lam_ti = lam_t[k_of]  # (b,)
+                else:  # shared tenants: region prices only, tenant
+                    lam_r = lam  # budgets enforced by the guard walk
+                    lam_ti = jnp.zeros(rewards.shape[0], jnp.float32)
+                # per-flop priced cost of serving request i in region r
+                q_ir = (lam_ti[:, None] + lam_r[None, :]) \
+                    * scales[None, :]  # (b, R)
                 r_max = jnp.max(jnp.abs(rewards))
                 if axis is not None:  # shard-invariant scale
                     r_max = jax.lax.pmax(r_max, axis)
                 eps_green = 1e-6 * r_max / (jnp.mean(opt_costs) + 1e-30)
-                tie = price_irj + eps_green * (
-                    scales[:, None] * costs[None, :])[None]
-                r_star = jnp.argmin(tie, axis=1)  # (I, J)
-                price_best = jnp.take_along_axis(
-                    price_irj, r_star[:, None, :], axis=1)[:, 0, :]
-                dec = jnp.argmax(rewards - price_best,
+                u_ir = q_ir + eps_green * scales[None, :]  # green floor
+                r0 = jnp.argmin(u_ir, axis=1)  # (b,)
+                # the per-flop price factors out of the chain argmax, so
+                # chains compete at the chosen region's price (Eq. 10)
+                p_i = jnp.take_along_axis(q_ir, r0[:, None],
+                                          axis=1)[:, 0]
+                dec = jnp.argmax(rewards - p_i[:, None] * costs[None, :],
                                  axis=1).astype(jnp.int32)
-                dec_m = (jnp.take_along_axis(
-                    r_star, dec[:, None], axis=1)[:, 0] * j_n + dec)
+                f = jnp.take(costs, dec) * valid
+                if flow:
+                    u_min = jnp.take_along_axis(u_ir, r0[:, None],
+                                                axis=1)[:, 0]
+                    tied_ir = u_ir <= u_min[:, None] * (1.0 + tie_tol)
+                    is_tied = jnp.sum(tied_ir.astype(jnp.int32),
+                                      axis=1) > 1
+                    # region capacity left after the untied requests
+                    oh_r0 = (r0[:, None] == jnp.arange(r_n)[None, :]
+                             ).astype(jnp.float32)
+                    fixed = jnp.sum(
+                        f[:, None] * oh_r0
+                        * (1.0 - is_tied.astype(jnp.float32))[:, None],
+                        axis=0)
+                    # flow shares only cover regions inside some tied
+                    # request's tie band (tie sets are per-tenant, so
+                    # with R > 2 a far-overpriced region must not soak
+                    # up tied mass just because capacity remains there)
+                    any_tied = jnp.any(tied_ir & is_tied[:, None],
+                                       axis=0).astype(jnp.float32)
+                    if axis is not None:
+                        fixed = jax.lax.psum(fixed, axis)
+                        any_tied = jax.lax.pmax(any_tied, axis)
+                    cap = jnp.maximum(
+                        budgets[t_n:] / jnp.maximum(scales, 1e-30)
+                        - fixed, 0.0) * any_tied
+                    total_cap = jnp.sum(cap)
+                    share = cap / (total_cap + 1e-30)
+                    r_flow = self._flow_split(
+                        f * is_tied.astype(jnp.float32), share, axis)
+                    # a request never leaves its OWN tie band (the
+                    # union share may point outside it when R > 2),
+                    # and exhausted capacity (share all-zero) falls
+                    # back to the priced argmin instead of dumping
+                    # the window into the last region
+                    ok = jnp.take_along_axis(tied_ir, r_flow[:, None],
+                                             axis=1)[:, 0]
+                    region = jnp.where(is_tied & ok & (total_cap > 0),
+                                       r_flow, r0)
+                else:
+                    region = r0
+                dec_m = (region * j_n + dec).astype(jnp.int32)
+                mask = valid if padded else None
+                if self.guard:
+                    # tenant walk downgrades to the globally cheapest
+                    # priced option (greenest region's cheap chain),
+                    # then the region walk re-caps within each region -
+                    # later walks only lower earlier spends
+                    cheap_m = jnp.argmin(opt_costs).astype(jnp.int32)
+                    cheap_k = jnp.arange(r_n) * j_n + cheap
+                    dec_m, dg, _ = downgrade_guard_chain(
+                        dec_m, opt_costs,
+                        [(budgets[:t_n], cheap_m, k_of),
+                         (budgets[t_n:], cheap_k, lambda d: d // j_n)],
+                        mask, axis_name=axis)
+                else:
+                    dg = jnp.int32(0)
+                dec = dec_m % j_n
+                region = dec_m // j_n
+                # per-(tenant, region) spends of the FINAL decisions
+                cd = jnp.take(opt_costs, dec_m) * valid
+                oh_t = (k_of[:, None] == jnp.arange(t_n)[None, :]
+                        ).astype(jnp.float32)
+                oh_r = (region[:, None] == jnp.arange(r_n)[None, :]
+                        ).astype(jnp.float32)
+                tr_spend = (oh_t * cd[:, None]).T @ oh_r  # (T, R)
+                if axis is not None:
+                    tr_spend = jax.lax.psum(tr_spend, axis)
+                spend = jnp.sum(tr_spend)
+                flops = jnp.sum(jnp.take(costs, dec) * valid)
+                if axis is not None:
+                    flops = jax.lax.psum(flops, axis)
+                rev = self._execute(tables, dec, rows, valid)
+                return (rewards, dec, rev, spend, flops, dg,
+                        jnp.sum(tr_spend, axis=1), region,
+                        jnp.sum(tr_spend, axis=0), tr_spend)
+
+            if self.mesh is not None:
+                fn = shard_map(
+                    fn, mesh=self.mesh,
+                    in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS),
+                              P(AXIS), P(), P(), P()),
+                    out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(),
+                               P(), P(AXIS), P(), P()))
+            return jax.jit(fn)
+
+        if r_n is not None:
+            flow = cs.split == "flow"
+            tie_tol = cs.tie_tol
+
+            def fn(params, tables, ctx, rows, valid, lam, budgets,
+                   scales):
+                rewards = denormalize_rewards(
+                    params, reward_matrix_grouped(
+                        params, self.reward_cfg, ctx, self._sh,
+                        self._prefix_plan))
+                # option axis m = r*J + j: region-major tiling
+                opt_costs = (scales[:, None] * costs[None, :]).reshape(-1)
+                r_max = jnp.max(jnp.abs(rewards))
+                if axis is not None:  # shard-invariant scale
+                    r_max = jax.lax.pmax(r_max, axis)
+                eps_green = 1e-6 * r_max / (jnp.mean(opt_costs) + 1e-30)
+                if flow:
+                    # per-flop priced cost per region; the eps_green
+                    # floor routes slack (lam = 0) windows green
+                    u = (lam + eps_green) * scales  # (R,)
+                    r0 = jnp.argmin(u)
+                    price_best = (lam[r0] * scales[r0]) * costs  # (J,)
+                    dec = jnp.argmax(rewards - price_best[None, :],
+                                     axis=1).astype(jnp.int32)
+                    f = jnp.take(costs, dec) * valid
+                    tied = u <= jnp.min(u) * (1.0 + tie_tol)
+                    cap = jnp.where(
+                        tied, budgets / jnp.maximum(scales, 1e-30), 0.0)
+                    total_cap = jnp.sum(cap)
+                    share = cap / (total_cap + 1e-30)
+                    region = self._flow_split(f, share, axis)
+                    # zero remaining capacity (share all-zero): fall
+                    # back to the priced argmin instead of dumping the
+                    # window into the last region
+                    region = jnp.where(total_cap > 0, region, r0)
+                    dec_m = (region * j_n + dec).astype(jnp.int32)
+                else:
+                    # The joint argmax over (chain, region) factors: the
+                    # reward is region-free, so each (request, chain)
+                    # first picks its cheapest-PRICED region, then
+                    # chains compete by the usual Eq. 10 argmax
+                    # (first-index ties, exactly the scalar semantics).
+                    # The region argmin runs at lam + eps_green - an
+                    # infinitesimal price floor, ~1e-6 of the natural
+                    # reward-per-cost scale - so a slack window
+                    # (lam = 0, every price 0) still routes to the
+                    # GREENER region instead of tie-breaking
+                    # arbitrarily, while any meaningful price dwarfs
+                    # it.  Equal regions keep equal floors, so ties
+                    # still resolve to region 0 and the pinned-pipeline
+                    # reduction stays bit-exact.
+                    price_r = lam[:, None] * (scales[:, None]
+                                              * costs[None, :])  # (R, J)
+                    price_irj = jnp.broadcast_to(
+                        price_r[None], (rewards.shape[0], r_n, j_n))
+                    tie = price_irj + eps_green * (
+                        scales[:, None] * costs[None, :])[None]
+                    r_star = jnp.argmin(tie, axis=1)  # (I, J)
+                    price_best = jnp.take_along_axis(
+                        price_irj, r_star[:, None, :], axis=1)[:, 0, :]
+                    dec = jnp.argmax(rewards - price_best,
+                                     axis=1).astype(jnp.int32)
+                    dec_m = (jnp.take_along_axis(
+                        r_star, dec[:, None], axis=1)[:, 0] * j_n + dec)
                 mask = valid if padded else None
                 if not self.guard:
                     dg = jnp.int32(0)
@@ -340,14 +537,14 @@ class ServingPipeline:
                 fn = shard_map(
                     fn, mesh=self.mesh,
                     in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS),
-                              P(AXIS), P(), P(), P()),
+                              P(), P(), P()),
                     out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(),
                                P(), P(AXIS), P()))
             return jax.jit(fn)
 
         if tb is not None:
             t_n = len(tb)
-            priced = self.tenant_mode == "priced"
+            priced = cs.tenant_priced
 
             def fn(params, tables, ctx, rows, valid, k_of, lam, budgets,
                    scale):
@@ -357,8 +554,7 @@ class ServingPipeline:
                         self._prefix_plan))
                 costs_eff = costs * scale  # active units (FLOPs or gCO2e)
                 if priced:
-                    member = (k_of[:, None] == jnp.arange(t_n)[None, :]
-                              ).astype(jnp.float32)
+                    member = self._cs.tenant_member(k_of)
                     dec = allocate(rewards, costs_eff[:, None], lam,
                                    member)
                 else:
@@ -424,30 +620,31 @@ class ServingPipeline:
         """Nearline price update: Algorithm 1 on the window's rewards,
         against a traced (budget, scale) pair - by default this window's,
         or the NEXT window's when the driver forecasts (CI warm-start).
-        In carbon mode the published price is reward-per-gCO2e."""
+        In carbon mode the published price is reward-per-gCO2e.
+
+        The (M, K) dual cost map and (I, K) membership come from the
+        compiled ConstraintSpec (``dual_cost_map``/``dual_member``) -
+        tenant columns draw a request's spend wherever it is served,
+        region columns only from their own region's options."""
         axis = AXIS if self.mesh is not None else None
         cfg = self.dual_cfg
         costs = self._costs
         j_n = int(costs.shape[0])
+        cs = self._cs
         r_n = self.n_regions
-        priced = (self.tenant_budgets is not None
-                  and self.tenant_mode == "priced")
+        priced = cs.tenant_priced
         t_n = None if self.tenant_budgets is None else len(
             self.tenant_budgets)
 
-        if r_n is not None:
-            jit_eps = self.region_jitter
-
-            def fn(rewards, valid, jit_u, lam, budgets, scales):
+        if cs.mode == "geotenants":
+            def fn(rewards, valid, k_of, lam, budgets, scales):
                 mask = valid if padded else None
                 opt_costs = (scales[:, None] * costs[None, :]).reshape(-1)
-                eye = jnp.eye(r_n, dtype=jnp.float32)
-                cost_map = (opt_costs[:, None]
-                            * jnp.repeat(eye, j_n, axis=0))
-                member = (1.0 + jit_eps * (jit_u - 0.5)) \
-                    if jit_eps > 0 else None  # centered, see main fn
+                cost_map = cs.dual_cost_map(opt_costs, j_n)
+                member = cs.dual_member(k_of, rewards.shape[0])
+                bud = budgets if priced else budgets[t_n:]
                 lam_new, _ = dual_descent(
-                    jnp.tile(rewards, (1, r_n)), cost_map, budgets, lam,
+                    jnp.tile(rewards, (1, r_n)), cost_map, bud, lam,
                     mask=mask, member=member, max_iters=cfg.max_iters,
                     step_size=cfg.step_size, step_decay=cfg.step_decay,
                     axis_name=axis)
@@ -460,11 +657,29 @@ class ServingPipeline:
                                out_specs=P())
             return jax.jit(fn)
 
+        if r_n is not None:
+            def fn(rewards, valid, lam, budgets, scales):
+                mask = valid if padded else None
+                opt_costs = (scales[:, None] * costs[None, :]).reshape(-1)
+                cost_map = cs.region_cost_map(opt_costs, j_n)
+                lam_new, _ = dual_descent(
+                    jnp.tile(rewards, (1, r_n)), cost_map, budgets, lam,
+                    mask=mask, max_iters=cfg.max_iters,
+                    step_size=cfg.step_size, step_decay=cfg.step_decay,
+                    axis_name=axis)
+                return lam_new
+
+            if self.mesh is not None:
+                fn = shard_map(fn, mesh=self.mesh,
+                               in_specs=(P(AXIS), P(AXIS), P(), P(),
+                                         P()),
+                               out_specs=P())
+            return jax.jit(fn)
+
         if priced:
             def fn(rewards, valid, k_of, lam, budgets, scale):
                 mask = valid if padded else None
-                member = (k_of[:, None] == jnp.arange(t_n)[None, :]
-                          ).astype(jnp.float32)
+                member = cs.tenant_member(k_of)
                 lam_new, _ = dual_descent(
                     rewards, (costs * scale)[:, None], budgets, lam,
                     mask=mask, member=member, max_iters=cfg.max_iters,
@@ -511,12 +726,13 @@ class ServingPipeline:
         publishes lambda_t unless ``update_lam=False``.
 
         ``budget`` overrides this window's budget (scalar; (T,) with
-        tenant blocks; (R,) in geo mode - REQUIRED there together with
-        an (R,) ``cost_scale``).  ``cost_scale`` re-denominates the
-        window's costs as ``costs * cost_scale`` - carbon pricing passes
-        kappa*CI(t) [gCO2e/FLOP] here together with a gCO2e ``budget``,
-        making the dual price reward-per-gram.  All are traced, so
-        time-varying values never recompile.
+        tenant blocks; (R,) in geo mode and (T + R,) - tenant grams
+        first, region grams after - in the combined mode, REQUIRED
+        there together with an (R,) ``cost_scale``).  ``cost_scale``
+        re-denominates the window's costs as ``costs * cost_scale`` -
+        carbon pricing passes kappa*CI(t) [gCO2e/FLOP] here together
+        with a gCO2e ``budget``, making the dual price reward-per-gram.
+        All are traced, so time-varying values never recompile.
 
         ``dual_budget``/``dual_cost_scale`` aim the NEARLINE update at a
         different (budget, scale) than the online pass - pass the NEXT
@@ -526,10 +742,31 @@ class ServingPipeline:
         n = len(rows)
         ctx = np.asarray(ctx, np.float32)
         rows = np.asarray(rows, np.int32)
-        geo = self.n_regions is not None
+        cs = self._cs
+        mode = cs.mode
+        geo = mode == "geo"
+        combined = mode == "geotenants"
         tb = self.tenant_budgets
 
-        if geo:
+        if combined:
+            t_n, r_n = len(tb), self.n_regions
+            if budget is None or cost_scale is None:
+                raise ValueError(
+                    "the combined tenant x region mode serves against "
+                    "per-tenant AND per-region budgets: pass a "
+                    f"({t_n} + {r_n},) budget (tenant grams first) and "
+                    f"an ({r_n},) cost_scale every window")
+            bud_vec = np.asarray(budget, np.float32).reshape(-1)
+            sc_vec = np.asarray(cost_scale, np.float32).reshape(-1)
+            if len(bud_vec) != t_n + r_n or len(sc_vec) != r_n:
+                raise ValueError(
+                    f"combined budget/cost_scale must have {t_n + r_n} "
+                    f"and {r_n} entries, got {len(bud_vec)} and "
+                    f"{len(sc_vec)}")
+            # the tightest aggregate cap the chained walks enforce
+            bud = float(min(bud_vec[:t_n].sum(), bud_vec[t_n:].sum()))
+            sc = float(sc_vec.mean())
+        elif geo:
             if budget is None or cost_scale is None:
                 raise ValueError("geo mode serves against per-region "
                                  "budgets: pass (R,) budget and (R,) "
@@ -557,6 +794,7 @@ class ServingPipeline:
             bud_vec = None
 
         if n == 0:  # zero-arrival window: nothing to serve or learn from
+            r_n = self.n_regions
             res = WindowResult(
                 n_valid=0, budget=bud, lam_before=self.lam,
                 lam_after=self.lam, decisions=jnp.zeros(0, jnp.int32),
@@ -564,9 +802,14 @@ class ServingPipeline:
                 spend=jnp.float32(0.0), downgraded=jnp.int32(0),
                 valid=np.zeros(0, np.float32), flops=jnp.float32(0.0),
                 cost_scale=sc,
-                regions=None if not geo else jnp.zeros(0, jnp.int32),
-                region_spend=(None if not geo else
-                              jnp.zeros(self.n_regions, jnp.float32)),
+                regions=(jnp.zeros(0, jnp.int32) if r_n is not None
+                         else None),
+                region_spend=(jnp.zeros(r_n, jnp.float32)
+                              if r_n is not None else None),
+                tr_spend=(jnp.zeros((len(tb), r_n), jnp.float32)
+                          if combined else None),
+                tenant_spend=(jnp.zeros(len(tb), jnp.float32)
+                              if combined else None),
                 k_budget=None if bud_vec is None else np.array(bud_vec))
             self.stats.append(res)
             if self.ledger is not None:
@@ -614,21 +857,14 @@ class ServingPipeline:
                 jnp.asarray(lam, jnp.float32), jnp.shape(self.lam))
         valid_j = jnp.asarray(valid)
 
-        if geo:
+        if combined:
             bud_j = jnp.asarray(bud_vec)
             sc_j = jnp.asarray(sc_vec)
-            # deterministic per-request tie-smoothing draws (host rng).
-            # Drawn for the n VALID requests and padded, so the stream
-            # depends only on the day's arrivals - identical across
-            # sharded/unsharded runs even when the shard count changes
-            # the padded bucket size (padding rows are masked out of
-            # every consumer)
-            u_valid = self._jitter_rng.random(
-                (n, self.n_regions)).astype(np.float32)
-            u_pad = np.zeros((b, self.n_regions), np.float32)
-            u_pad[:n] = u_valid
-            jit_u = jnp.asarray(u_pad)
-            args = (jit_u, lam_in, bud_j, sc_j)
+            args = (jnp.asarray(k_of), lam_in, bud_j, sc_j)
+        elif geo:
+            bud_j = jnp.asarray(bud_vec)
+            sc_j = jnp.asarray(sc_vec)
+            args = (lam_in, bud_j, sc_j)
         elif tb is not None:
             bud_j = jnp.asarray(bud_vec)
             sc_j = jnp.float32(sc)
@@ -636,10 +872,12 @@ class ServingPipeline:
         else:
             bud_j, sc_j = jnp.float32(bud), jnp.float32(sc)
             args = (lam_in, bud_j, sc_j)
+        out = main_fn(self.reward_params, self._tables,
+                      jnp.asarray(ctx), jnp.asarray(rows, jnp.int32),
+                      valid_j, *args)
         (rewards, dec, rev, spend, flops, dg, t_spend, regions,
-         r_spend) = main_fn(self.reward_params, self._tables,
-                            jnp.asarray(ctx), jnp.asarray(rows, jnp.int32),
-                            valid_j, *args)
+         r_spend) = out[:9]
+        tr_spend = out[9] if len(out) > 9 else None
 
         # nearline: the price update never blocks the response - it is a
         # second dispatch reusing the on-device reward matrix, and the
@@ -647,20 +885,27 @@ class ServingPipeline:
         # dual_budget/dual_cost_scale retarget it at the next window's
         # constraint (CI-forecast warm-start); defaults keep this
         # window's, bit-identical to the non-forecast behavior.
-        if geo:
+        if combined:
+            d_bud = bud_j if dual_budget is None \
+                else jnp.asarray(np.asarray(dual_budget,
+                                            np.float32).reshape(-1))
+            d_sc = sc_j if dual_cost_scale is None \
+                else jnp.asarray(np.asarray(dual_cost_scale, np.float32))
+            lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
+                              lam_in, d_bud, d_sc)
+        elif geo:
             d_bud = bud_j if dual_budget is None \
                 else jnp.asarray(np.asarray(dual_budget, np.float32))
             d_sc = sc_j if dual_cost_scale is None \
                 else jnp.asarray(np.asarray(dual_cost_scale, np.float32))
-            lam_new = dual_fn(rewards, valid_j, jit_u, lam_in, d_bud,
-                              d_sc)
+            lam_new = dual_fn(rewards, valid_j, lam_in, d_bud, d_sc)
         elif tb is not None:
             d_bud = bud_j if dual_budget is None \
                 else jnp.asarray(np.asarray(dual_budget,
                                             np.float32).reshape(-1))
             d_sc = sc_j if dual_cost_scale is None \
                 else jnp.float32(dual_cost_scale)
-            if self.tenant_mode == "priced":
+            if cs.tenant_priced:
                 lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
                                   lam_in, d_bud, d_sc)
             else:  # shared price descends on the TOTAL budget
@@ -679,7 +924,8 @@ class ServingPipeline:
             lam_after=lam_new, decisions=dec, revenue=rev, spend=spend,
             downgraded=dg, valid=valid, tenant_spend=t_spend, flops=flops,
             cost_scale=sc, regions=regions, region_spend=r_spend,
-            k_budget=None if bud_vec is None else np.array(bud_vec))
+            k_budget=None if bud_vec is None else np.array(bud_vec),
+            tr_spend=tr_spend)
         self.stats.append(res)
         if self.ledger is not None:
             self.ledger.record_result(res)

@@ -1,0 +1,389 @@
+"""Declarative ConstraintSpec API: tenants x regions x carbon, one pipeline.
+
+GreenFlow's allocation core (``core.primal_dual``) prices K >= 1
+constraints at once, but the serving surface historically exposed it as
+mutually exclusive flags (``tenant_budgets``/``tenant_mode`` XOR
+``n_regions``, carbon-vs-flops pricing picked by which trace the driver
+threads).  This module replaces that sprawl with a first-class spec: an
+operator DECLARES the constraint axes and the spec COMPILES them onto
+the core's structures -
+
+    ConstraintSpec([
+        TenantAxis(budgets=(g0, g1, g2), priced=True),
+        RegionAxis(n_regions=2),
+        GlobalAxis(pricing="carbon"),
+    ])
+
+compiles to the ``(M, K)`` option->constraint cost map, the ``(I, K)``
+per-request membership, the ``(K,)`` budget/price vectors and the per-K
+guard ``k_of`` that ``ServingPipeline.from_spec`` runs in ONE fused,
+shardable window pass.  K is the CONCATENATION of the declared axes'
+price components:
+
+    axes declared            priced K          guard constraints
+    -----------------------  ----------------  ------------------------
+    GlobalAxis               scalar (paper)    1 global budget
+    TenantAxis(shared)       scalar            T tenant budgets
+    TenantAxis(priced)       T                 T tenant budgets
+    RegionAxis               R                 R region budgets
+    TenantAxis(priced)+      T + R             T tenant + R region
+      RegionAxis                                 budgets (two chained
+                                                 tail-reserve walks)
+
+With both axes the option space is M = J * R (chain x serving region,
+region-major: option m = r*J + j) and a request of tenant t pays
+``(lam_tenant[t] + lam_region[r]) * c_{j,r}(t)`` for option (j, r) -
+per-tenant fairness prices and per-region carbon prices COMPOSED in one
+Eq. 10 argmax.  ``c_{j,r}(t) = flops_j * scale_r(t)`` rides through the
+per-window ``cost_scale`` trace exactly as in the single-axis modes
+(carbon: scale_r = kappa * CI_r(t)), so carbon is a choice of units,
+never a separate wiring.
+
+Migration from the legacy ``ServingPipeline`` kwargs (every combination
+maps to a spec, bit-identically - ``spec_from_legacy`` is the shim the
+legacy constructor runs):
+
+    legacy kwargs                          ConstraintSpec axes
+    -------------------------------------  ---------------------------
+    budget_per_window=B                    [GlobalAxis(budget=B)]
+    tenant_budgets=tb                      [TenantAxis(tb)]
+      (tenant_mode="shared")
+    tenant_budgets=tb,                     [TenantAxis(tb, priced=True)]
+      tenant_mode="priced"
+    n_regions=R, region_jitter=0.0         [RegionAxis(R,
+                                              split="argmax"),
+                                            GlobalAxis(budget=B)]
+    n_regions=R, region_jitter>0           [RegionAxis(R, split="flow"),
+      (DEPRECATED: jitter is a no-op         GlobalAxis(budget=B)]
+      alias that now selects the exact
+      flow-splitting rounding)
+    (carbon pricing)                       any of the above +
+                                           GlobalAxis(pricing="carbon");
+                                           grams/scales still ride the
+                                           per-window traces
+
+Region tie handling (``RegionAxis.split``): the two-region cost
+structure is proportional (c_{j,r} = s_r * flops_j), so at the dual
+equilibrium every request is indifferent between regions at once and a
+pure argmax bang-bangs whole windows.  ``split="flow"`` (the default)
+resolves the degenerate window EXACTLY: requests whose per-flop priced
+costs tie across regions are divided deterministically in arrival
+order, each tied region receiving a share of the window's FLOPs mass
+proportional to its remaining budget capacity - the flow-splitting
+primal rounding of the fractional LP optimum.  ``split="argmax"`` keeps
+the historical pure argmax (bit-identical to the pre-spec pipeline with
+``region_jitter=0``).  The old ``region_jitter`` eps-distortion is
+deprecated: the value is ignored, and passing a nonzero jitter selects
+``split="flow"``.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field
+
+
+VALID_SPLITS = ("flow", "argmax")
+VALID_PRICINGS = ("flops", "carbon")
+
+
+@dataclass(frozen=True)
+class TenantAxis:
+    """T per-tenant budgets; windows carry T equal-size tenant blocks.
+
+    ``priced=False`` ("shared"): one dual price descends on the TOTAL
+    budget while the guard hard-caps each tenant's block.
+    ``priced=True``: a (T,) per-tenant price vector inside the fused
+    pass, each price descending on its own consumption-vs-budget
+    subgradient.
+    """
+
+    budgets: tuple[float, ...]
+    priced: bool = False
+
+    def __post_init__(self):
+        budgets = tuple(float(b) for b in self.budgets)
+        object.__setattr__(self, "budgets", budgets)
+        if len(budgets) < 1:
+            raise ValueError("TenantAxis needs at least one budget")
+        if any(b <= 0 for b in budgets):
+            raise ValueError(f"tenant budgets must be positive, "
+                             f"got {budgets}")
+
+    @property
+    def n(self) -> int:
+        return len(self.budgets)
+
+
+@dataclass(frozen=True)
+class RegionAxis:
+    """R serving regions: each request picks (chain, region) through the
+    priced argmax at region costs c_{j,r}(t) = flops_j * scale_r(t).
+
+    Per-region budgets and cost scales ride the per-window
+    ``serve_window(budget=..., cost_scale=...)`` traces (they are
+    time-varying by nature - grid intensity).  ``split`` selects the
+    degenerate-tie rounding (see module docstring); ``tie_tol`` is the
+    relative per-flop price band treated as tied.  ``jitter`` is the
+    DEPRECATED pre-spec eps-distortion: its value is ignored, nonzero
+    selects ``split="flow"``.
+    """
+
+    n_regions: int = 2
+    names: tuple[str, ...] | None = None
+    split: str = "flow"
+    tie_tol: float = 0.05
+    jitter: float = 0.0  # deprecated no-op alias -> split="flow"
+
+    def __post_init__(self):
+        if self.n_regions < 2:
+            raise ValueError("RegionAxis needs >= 2 serving regions")
+        if self.split not in VALID_SPLITS:
+            raise ValueError(f"split must be one of {VALID_SPLITS}, "
+                             f"got {self.split!r}")
+        if not 0.0 <= self.tie_tol < 1.0:
+            raise ValueError(f"tie_tol must be in [0, 1), "
+                             f"got {self.tie_tol}")
+        if self.names is not None and len(self.names) != self.n_regions:
+            raise ValueError(f"{len(self.names)} names for "
+                             f"{self.n_regions} regions")
+        if self.jitter:
+            warnings.warn(
+                "RegionAxis.jitter is deprecated and ignored; the exact "
+                "flow-splitting rounding (split='flow') replaces the "
+                "jitter workaround", DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "split", "flow")
+
+    @property
+    def n(self) -> int:
+        return int(self.n_regions)
+
+
+@dataclass(frozen=True)
+class GlobalAxis:
+    """The paper's single budget (Eq. 3) and the pricing denomination.
+
+    ``budget`` is the per-window reference budget (REQUIRED when no
+    TenantAxis carries budgets; with tenants it defaults to their sum).
+    ``pricing`` declares the cost units the serve driver threads through
+    the traces - "flops" (scale 1.0) or "carbon" (scale kappa*CI(t),
+    budgets in gCO2e).  The pipeline itself is unit-agnostic; drivers
+    (``launch/serve.py``, benchmarks) read this field to build the
+    matching budget/scale traces.
+    """
+
+    budget: float | None = None
+    pricing: str = "flops"
+
+    def __post_init__(self):
+        if self.pricing not in VALID_PRICINGS:
+            raise ValueError(f"pricing must be one of {VALID_PRICINGS}, "
+                             f"got {self.pricing!r}")
+        if self.budget is not None and self.budget <= 0:
+            raise ValueError(f"budget must be positive, "
+                             f"got {self.budget}")
+
+
+@dataclass(frozen=True)
+class ConstraintSpec:
+    """An ordered set of constraint axes; ``compile()`` resolves them
+    into the normalized description the pipeline executes."""
+
+    axes: tuple
+
+    def __init__(self, axes):
+        object.__setattr__(self, "axes", tuple(axes))
+
+    def compile(self) -> "CompiledSpec":
+        tenants = regions = global_ = None
+        for ax in self.axes:
+            if isinstance(ax, TenantAxis):
+                if tenants is not None:
+                    raise ValueError("duplicate TenantAxis")
+                tenants = ax
+            elif isinstance(ax, RegionAxis):
+                if regions is not None:
+                    raise ValueError("duplicate RegionAxis")
+                regions = ax
+            elif isinstance(ax, GlobalAxis):
+                if global_ is not None:
+                    raise ValueError("duplicate GlobalAxis")
+                global_ = ax
+            else:
+                raise TypeError(f"unknown constraint axis {ax!r} (want "
+                                f"TenantAxis | RegionAxis | GlobalAxis)")
+        if tenants is None and (global_ is None or global_.budget is None):
+            raise ValueError("a ConstraintSpec needs a budget source: "
+                             "GlobalAxis(budget=...) or TenantAxis")
+        return CompiledSpec(spec=self, tenants=tenants, regions=regions,
+                            global_=global_ or GlobalAxis())
+
+
+@dataclass(frozen=True)
+class CompiledSpec:
+    """The resolved constraint structure ``ServingPipeline`` executes.
+
+    ``k_names`` orders the priced constraints exactly as the (K,) price
+    vector, the (K,) budget vector and the dual cost-map columns:
+    tenant columns first (priced tenants), region columns after.
+    ``n_prices == 0`` means the scalar (paper) price.
+    """
+
+    spec: ConstraintSpec
+    tenants: TenantAxis | None
+    regions: RegionAxis | None
+    global_: GlobalAxis = field(default_factory=GlobalAxis)
+
+    # -- shape of the compiled constraint system ---------------------------
+
+    @property
+    def t_n(self) -> int | None:
+        return None if self.tenants is None else self.tenants.n
+
+    @property
+    def r_n(self) -> int | None:
+        return None if self.regions is None else self.regions.n
+
+    @property
+    def tenant_priced(self) -> bool:
+        return self.tenants is not None and self.tenants.priced
+
+    @property
+    def mode(self) -> str:
+        """Which fused-pass branch runs: plain|tenants|geo|geotenants."""
+        if self.tenants is not None and self.regions is not None:
+            return "geotenants"
+        if self.regions is not None:
+            return "geo"
+        if self.tenants is not None:
+            return "tenants"
+        return "plain"
+
+    @property
+    def n_prices(self) -> int:
+        """Length of the (K,) price vector; 0 = scalar price."""
+        k = 0
+        if self.tenant_priced:
+            k += self.tenants.n
+        if self.regions is not None:
+            k += self.regions.n
+        return k
+
+    @property
+    def k_names(self) -> tuple[str, ...]:
+        names = []
+        if self.tenant_priced:
+            names += [f"tenant[{t}]" for t in range(self.tenants.n)]
+        if self.regions is not None:
+            r_names = self.regions.names or tuple(
+                f"region[{r}]" for r in range(self.regions.n))
+            names += list(r_names)
+        return tuple(names)
+
+    @property
+    def total_budget(self) -> float:
+        if self.global_.budget is not None:
+            return float(self.global_.budget)
+        return float(sum(self.tenants.budgets))
+
+    @property
+    def pricing(self) -> str:
+        return self.global_.pricing
+
+    @property
+    def split(self) -> str:
+        return "argmax" if self.regions is None else self.regions.split
+
+    @property
+    def tie_tol(self) -> float:
+        return 0.0 if self.regions is None else float(self.regions.tie_tol)
+
+    def budget_len(self) -> int:
+        """Entries of a per-window ``budget`` vector: tenant grams first,
+        region grams after (1 for the plain/scalar modes)."""
+        if self.mode == "geotenants":
+            return self.tenants.n + self.regions.n
+        if self.mode == "geo":
+            return self.regions.n
+        if self.mode == "tenants":
+            return self.tenants.n
+        return 1
+
+    # -- core-structure builders (jnp, trace-time) -------------------------
+    # These run INSIDE the jitted window pass; they emit exactly the ops
+    # the pre-spec pipeline emitted for the single-axis modes, so the
+    # compiled spec stays bit-identical to the legacy flag paths.
+
+    def tenant_member(self, k_of):
+        """(I,) tenant index -> (I, T) one-hot membership."""
+        import jax.numpy as jnp
+        return (k_of[:, None] == jnp.arange(self.tenants.n)[None, :]
+                ).astype(jnp.float32)
+
+    def region_cost_map(self, opt_costs, j_n: int):
+        """(M,) region-major option costs -> (M, R) cost map: option
+        m = r*J + j draws c_{j,r} from region column r only."""
+        import jax.numpy as jnp
+        eye = jnp.eye(self.regions.n, dtype=jnp.float32)
+        return opt_costs[:, None] * jnp.repeat(eye, j_n, axis=0)
+
+    def dual_cost_map(self, opt_costs, j_n: int):
+        """The full (M, K) dual cost map in ``k_names`` order: priced
+        tenant columns draw a request's grams wherever it is served
+        (the full option cost), region columns only from their own
+        region's options."""
+        import jax.numpy as jnp
+        cols = []
+        if self.tenant_priced:
+            cols.append(jnp.broadcast_to(
+                opt_costs[:, None],
+                (opt_costs.shape[0], self.tenants.n)))
+        if self.regions is not None:
+            cols.append(self.region_cost_map(opt_costs, j_n))
+        if not cols:
+            return opt_costs[:, None]
+        return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+
+    def dual_member(self, k_of, n_rows: int):
+        """The (I, K) dual membership in ``k_names`` order: tenant
+        one-hots, all-ones region columns (every request may be served
+        in any region; the cost map zeroes the off-region draw).
+        ``None`` when the membership is trivial."""
+        import jax.numpy as jnp
+        if self.mode != "geotenants" or not self.tenant_priced:
+            return None
+        return jnp.concatenate(
+            [self.tenant_member(k_of),
+             jnp.ones((n_rows, self.regions.n), jnp.float32)], axis=1)
+
+
+def spec_from_legacy(budget_per_window: float, *, tenant_budgets=None,
+                     tenant_mode: str = "shared",
+                     n_regions: int | None = None,
+                     region_jitter: float = 0.0) -> ConstraintSpec:
+    """The legacy ``ServingPipeline`` kwargs -> their ConstraintSpec.
+
+    Every historical flag combination maps to a spec whose compiled
+    pipeline is bit-identical to the pre-spec code path (the parity
+    gates in tests/test_spec.py).  ``region_jitter`` is deprecated: 0
+    keeps the historical pure argmax, nonzero selects the exact
+    flow-splitting rounding that replaced the jitter workaround.
+    """
+    if tenant_mode not in ("shared", "priced"):
+        raise ValueError(f"tenant_mode must be 'shared' or 'priced', "
+                         f"got {tenant_mode!r}")
+    axes = []
+    if tenant_budgets is not None:
+        axes.append(TenantAxis(tuple(float(b) for b in tenant_budgets),
+                               priced=tenant_mode == "priced"))
+    if n_regions is not None:
+        if region_jitter:
+            warnings.warn(
+                "region_jitter is deprecated and ignored; nonzero "
+                "values select the exact flow-splitting rounding "
+                "(RegionAxis(split='flow'))", DeprecationWarning,
+                stacklevel=3)
+        axes.append(RegionAxis(
+            int(n_regions),
+            split="flow" if region_jitter else "argmax"))
+    axes.append(GlobalAxis(budget=float(budget_per_window)))
+    return ConstraintSpec(axes)

@@ -8,10 +8,15 @@ while the device is still executing, and only then does the host read
 window t's results.  The nearline price update chains device-side, so
 the host never blocks on it.
 
-Scenarios yield per-window request counts (see ``TrafficScenario`` for
-the shape of each); ``run_stream`` optionally threads per-window budget
-and cost-scale traces into the pipeline, which is how the carbon
-scenario prices each window at its grid intensity.
+Scenarios live in the ``SCENARIOS`` registry: one dict of builder
+functions mapping a scenario name to its per-window request counts.
+The registry is the SINGLE source of truth for valid scenario names -
+``scenario_windows``'s error message and ``launch/serve.py``'s
+``--scenario`` choices both derive from it, and each scenario's
+canonical ConstraintSpec shape (what the serve driver builds for it)
+is documented on its builder.  ``run_stream`` optionally threads
+per-window budget and cost-scale traces into the pipeline, which is
+how the carbon/geo scenarios price each window at its grid intensity.
 """
 from __future__ import annotations
 
@@ -24,36 +29,13 @@ import numpy as np
 from repro.serving.pipeline import ServingPipeline, WindowResult
 
 
-SCENARIOS = ("constant", "spike", "diurnal", "tenants", "carbon",
-             "georegions")
-
-
 @dataclass(frozen=True)
 class TrafficScenario:
     """A named per-window traffic shape.
 
-    ``name`` selects the shape:
-
-    * ``constant`` - ``n_base`` requests every window (steady state);
-    * ``spike``    - ``n_base`` with a ``spike_mult`` x burst over the 3
-      windows starting at the first third (paper Fig. 5 protocol: the
-      dual price lags the burst, the guard absorbs it);
-    * ``diurnal``  - one full day-curve sinusoid over ``n_windows``,
-      swinging between ~0.4x and ~1.6x of ``n_base``;
-    * ``tenants``  - constant traffic in ``n_tenants`` equal blocks per
-      window (per-tenant budgets under one shared dual price, or
-      independent pipelines - see launch/serve.py --tenant-mode);
-    * ``carbon``   - the diurnal day-curve, intended to be paired with a
-      grid-intensity trace (intensity x traffic): the driver prices each
-      window at kappa*CI(t) and budgets it in gCO2e (see repro.carbon
-      and launch/serve.py --scenario carbon).  Window counts are the
-      same day shape as ``diurnal``; the carbon part lives in the
-      per-window (budget, cost_scale) traces fed to ``run_stream``;
-    * ``georegions`` - the same day-curve served by the TWO-REGION
-      geo-shifting router: the pipeline (built with ``n_regions=2``)
-      takes per-window (R,) gram budgets and (R,) kappa*CI_r(t) cost
-      scales, and each request picks its serving region through the
-      priced argmax (see launch/serve.py --scenario georegions).
+    ``name`` selects a builder from the ``SCENARIOS`` registry (see the
+    builders' docstrings for each shape and its canonical
+    ConstraintSpec wiring in ``launch/serve.py``).
     """
 
     name: str
@@ -66,25 +48,100 @@ class TrafficScenario:
         return scenario_windows(self)
 
 
-def scenario_windows(sc: TrafficScenario) -> list[int]:
-    """Per-window request counts for a scenario."""
+def _constant_windows(sc: TrafficScenario) -> list[int]:
+    """``n_base`` requests every window (steady state)."""
+    return [sc.n_base] * sc.n_windows
+
+
+def _spike_windows(sc: TrafficScenario) -> list[int]:
+    """``n_base`` with a ``spike_mult`` x burst over the 3 windows
+    starting at the first third (paper Fig. 5 protocol: the dual price
+    lags the burst, the guard absorbs it)."""
     sizes = []
     for t in range(sc.n_windows):
-        if sc.name == "constant" or sc.name == "tenants":
-            n = sc.n_base
-        elif sc.name == "spike":
-            burst = sc.n_windows // 3 <= t < sc.n_windows // 3 + 3
-            n = int(sc.n_base * (sc.spike_mult if burst else 1.0))
-        elif sc.name in ("diurnal", "carbon", "georegions"):
-            phase = 2.0 * math.pi * t / max(1, sc.n_windows)
-            n = int(sc.n_base * (1.0 + 0.6 * math.sin(phase)))
-        else:
-            raise ValueError(f"unknown scenario {sc.name!r}: valid "
-                             f"scenarios are {', '.join(SCENARIOS)}")
+        burst = sc.n_windows // 3 <= t < sc.n_windows // 3 + 3
+        sizes.append(int(sc.n_base * (sc.spike_mult if burst else 1.0)))
+    return sizes
+
+
+def _diurnal_windows(sc: TrafficScenario) -> list[int]:
+    """One full day-curve sinusoid over ``n_windows``, swinging between
+    ~0.4x and ~1.6x of ``n_base``."""
+    sizes = []
+    for t in range(sc.n_windows):
+        phase = 2.0 * math.pi * t / max(1, sc.n_windows)
+        sizes.append(int(sc.n_base * (1.0 + 0.6 * math.sin(phase))))
+    return sizes
+
+
+def _tenants_windows(sc: TrafficScenario) -> list[int]:
+    """Constant traffic in ``n_tenants`` equal blocks per window
+    (spec: ``[TenantAxis(budgets, priced=...)]`` - per-tenant budgets
+    under one shared dual price, per-tenant prices, or independent
+    pipelines - see launch/serve.py --tenant-mode)."""
+    return _constant_windows(sc)
+
+
+def _carbon_windows(sc: TrafficScenario) -> list[int]:
+    """The diurnal day-curve, intended to be paired with a
+    grid-intensity trace (intensity x traffic): the driver prices each
+    window at kappa*CI(t) and budgets it in gCO2e (spec:
+    ``[GlobalAxis(pricing="carbon")]``; see repro.carbon and
+    launch/serve.py --scenario carbon).  Window counts are the same day
+    shape as ``diurnal``; the carbon part lives in the per-window
+    (budget, cost_scale) traces fed to ``run_stream``."""
+    return _diurnal_windows(sc)
+
+
+def _georegions_windows(sc: TrafficScenario) -> list[int]:
+    """The day-curve served by the two-region geo-shifting router
+    (spec: ``[RegionAxis(2), GlobalAxis(pricing="carbon")]``): the
+    pipeline takes per-window (R,) gram budgets and (R,) kappa*CI_r(t)
+    cost scales, and each request picks its serving region through the
+    priced argmax (see launch/serve.py --scenario georegions)."""
+    return _diurnal_windows(sc)
+
+
+def _geotenants_windows(sc: TrafficScenario) -> list[int]:
+    """The day-curve with BOTH axes live (spec:
+    ``[TenantAxis(budgets, priced=True), RegionAxis(2),
+    GlobalAxis(pricing="carbon")]``): per-tenant gram budgets AND
+    per-region gram caps priced together in one fused pass - a
+    tenant-t request pays (lam_tenant[t] + lam_region[r]) * c_{j,r}
+    (see launch/serve.py --scenario geotenants)."""
+    return _diurnal_windows(sc)
+
+
+# The ONE registry of traffic scenarios: name -> per-window size
+# builder.  launch/serve.py's --scenario choices and the unknown-name
+# error below both derive from these keys; each builder's docstring
+# names the canonical ConstraintSpec the serve driver compiles for it.
+SCENARIOS: dict = {
+    "constant": _constant_windows,
+    "spike": _spike_windows,
+    "diurnal": _diurnal_windows,
+    "tenants": _tenants_windows,
+    "carbon": _carbon_windows,
+    "georegions": _georegions_windows,
+    "geotenants": _geotenants_windows,
+}
+
+
+def scenario_windows(sc: TrafficScenario) -> list[int]:
+    """Per-window request counts for a scenario."""
+    try:
+        builder = SCENARIOS[sc.name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {sc.name!r}: valid "
+                         f"scenarios are {', '.join(SCENARIOS)}") \
+            from None
+    sizes = builder(sc)
+    out = []
+    for n in sizes:
         if sc.n_tenants > 1:  # keep tenant blocks equal-sized
             n = max(sc.n_tenants, n - n % sc.n_tenants)
-        sizes.append(max(1, n))
-    return sizes
+        out.append(max(1, n))
+    return out
 
 
 @dataclass
@@ -123,8 +180,9 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
     optionally pins the per-window entry price (parity testing);
     budget_trace / scale_trace set each window's budget and cost scale
     (e.g. a ``CarbonBudget.schedule``'s grams + kappa*CI(t) columns; in
-    geo mode each entry is the (R,) per-region vector) - all are traced
-    by the pipeline, so they never recompile.
+    geo mode each entry is the (R,) per-region vector, in the combined
+    tenant x region mode the (T + R,) concatenation - tenant grams
+    first) - all are traced by the pipeline, so they never recompile.
 
     ``forecast=True`` is the CI-forecast warm-start for the nearline
     dual update: window t's price update runs against window t+1's

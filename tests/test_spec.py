@@ -1,0 +1,615 @@
+"""Declarative ConstraintSpec API: the ISSUE acceptance gates.
+
+  * axis/spec validation and the legacy-kwargs -> spec mapping
+    (``spec_from_legacy``), including the ``region_jitter``
+    deprecation;
+  * property-style parity: any SINGLE-AXIS ConstraintSpec reproduces
+    the corresponding legacy flag path bit-identically (decisions,
+    lambda traces, spends) across shared / priced / geo / carbon;
+  * the exact flow-splitting primal rounding of the degenerate region
+    tie (proportional split by remaining capacity; untied windows
+    reduce to the argmax);
+  * the combined tenant x region pipeline: per-tenant AND per-region
+    caps enforced by the chained guard, (T, R) spends consistent,
+    (T + R,) prices, and a pinned-price brute-force decision check;
+  * spec-built host-loop controllers == directly built ones;
+  * 8-device subprocess shard parity for the geotenants pipeline.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.spec import (ConstraintSpec, GlobalAxis, RegionAxis,
+                                TenantAxis, spec_from_legacy)
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# Validation + legacy mapping
+# ---------------------------------------------------------------------------
+
+
+def test_axis_validation():
+    with pytest.raises(ValueError, match="at least one budget"):
+        TenantAxis(())
+    with pytest.raises(ValueError, match="positive"):
+        TenantAxis((1.0, -2.0))
+    with pytest.raises(ValueError, match=">= 2"):
+        RegionAxis(1)
+    with pytest.raises(ValueError, match="split"):
+        RegionAxis(2, split="dither")
+    with pytest.raises(ValueError, match="names"):
+        RegionAxis(2, names=("only_one",))
+    with pytest.raises(ValueError, match="pricing"):
+        GlobalAxis(budget=1.0, pricing="joules")
+    with pytest.raises(ValueError, match="positive"):
+        GlobalAxis(budget=0.0)
+    with pytest.raises(ValueError, match="duplicate TenantAxis"):
+        ConstraintSpec([TenantAxis((1.0,)), TenantAxis((2.0,))]).compile()
+    with pytest.raises(ValueError, match="budget source"):
+        ConstraintSpec([RegionAxis(2)]).compile()
+    with pytest.raises(TypeError, match="unknown constraint axis"):
+        ConstraintSpec(["tenants"]).compile()
+
+
+def test_region_jitter_deprecation_selects_flow():
+    with pytest.warns(DeprecationWarning, match="flow"):
+        ax = RegionAxis(2, split="argmax", jitter=0.2)
+    assert ax.split == "flow"
+    with pytest.warns(DeprecationWarning, match="region_jitter"):
+        spec = spec_from_legacy(10.0, n_regions=2, region_jitter=0.3)
+    assert spec.compile().split == "flow"
+
+
+def test_spec_from_legacy_mapping():
+    cs = spec_from_legacy(100.0).compile()
+    assert cs.mode == "plain" and cs.n_prices == 0
+    assert cs.total_budget == 100.0 and cs.budget_len() == 1
+
+    cs = spec_from_legacy(100.0, tenant_budgets=[30.0, 70.0]).compile()
+    assert cs.mode == "tenants" and cs.n_prices == 0  # shared: 1 price
+    assert not cs.tenant_priced and cs.t_n == 2
+    assert cs.budget_len() == 2
+
+    cs = spec_from_legacy(100.0, tenant_budgets=[30.0, 70.0],
+                          tenant_mode="priced").compile()
+    assert cs.tenant_priced and cs.n_prices == 2
+    assert cs.k_names == ("tenant[0]", "tenant[1]")
+
+    cs = spec_from_legacy(100.0, n_regions=2).compile()
+    assert cs.mode == "geo" and cs.split == "argmax"
+    assert cs.n_prices == 2 and cs.budget_len() == 2
+
+    with pytest.raises(ValueError, match="tenant_mode"):
+        spec_from_legacy(1.0, tenant_budgets=[1.0], tenant_mode="vip")
+
+    # the combined mode the legacy flags never reached
+    cs = ConstraintSpec([
+        TenantAxis((30.0, 70.0), priced=True), RegionAxis(2),
+        GlobalAxis(pricing="carbon")]).compile()
+    assert cs.mode == "geotenants" and cs.n_prices == 4
+    assert cs.k_names == ("tenant[0]", "tenant[1]", "region[0]",
+                          "region[1]")
+    assert cs.budget_len() == 4 and cs.pricing == "carbon"
+    assert cs.total_budget == 100.0  # sum of tenant budgets
+
+
+# ---------------------------------------------------------------------------
+# A tiny serving universe (no training - random scores/params)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_stack():
+    from repro.cascade.engine import CascadeServer
+    from repro.core.action_chain import (ModelInstance, StageSpec,
+                                         generate_action_chains)
+    from repro.core.reward_model import RewardModelConfig, reward_model_init
+
+    rng = np.random.default_rng(0)
+    u, i = 40, 150
+    scores = {k: rng.normal(size=(u, i)).astype(np.float32)
+              for k in ("DSSM", "YDNN", "DIN", "DIEN")}
+    clicks = (rng.random((u, i)) < 0.15).astype(np.float32)
+    n2 = tuple(int(x) for x in np.linspace(0.2 * i, 0.5 * i, 4))
+    n3 = tuple(int(x) for x in np.linspace(8, 0.2 * i, 4))
+    chains = generate_action_chains((
+        StageSpec("recall", (ModelInstance("DSSM", 13e3),), (i,), 4),
+        StageSpec("prerank", (ModelInstance("YDNN", 123e3),), n2, 4),
+        StageSpec("rank", (ModelInstance("DIN", 7020e3),
+                           ModelInstance("DIEN", 7098e3)), n3, 4),
+    ))
+    server = CascadeServer(stage_scores=scores, chains=chains,
+                           clicks=clicks, expose=8)
+    rcfg = RewardModelConfig(n_stages=3, max_models=2, n_scale_groups=4,
+                             d_context=12, d_feature=16, d_hidden=16,
+                             d_state=8)
+    params = dict(reward_model_init(jax.random.PRNGKey(0), rcfg))
+    params["label_norm"] = jnp.asarray(
+        np.linspace(1.0, 3.0, chains.n_chains).astype(np.float32))
+    return chains, server, params, rcfg
+
+
+def _windows(u, n_windows=5, n=64, seed=1):
+    rng = np.random.default_rng(seed)
+    return [(rng.normal(size=(n, 12)).astype(np.float32),
+             rng.integers(0, u, n)) for _ in range(n_windows)]
+
+
+def _assert_same_window(r_a, r_b, *, vector_lam=False):
+    np.testing.assert_array_equal(r_a.decisions_np, r_b.decisions_np)
+    np.testing.assert_array_equal(r_a.revenue_np, r_b.revenue_np)
+    assert int(r_a.downgraded) == int(r_b.downgraded)
+    np.testing.assert_array_equal(np.asarray(r_a.spend),
+                                  np.asarray(r_b.spend))
+    np.testing.assert_array_equal(np.asarray(r_a.lam_after),
+                                  np.asarray(r_b.lam_after))
+
+
+# ---------------------------------------------------------------------------
+# THE property gate: single-axis specs == legacy flag paths, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_single_axis_specs_bit_identical_to_legacy(tiny_stack):
+    """For every legacy flag combination (plain / tenants shared /
+    tenants priced / geo / carbon-priced plain), ``from_spec`` with the
+    hand-built single-axis spec free-runs BIT-identically to the legacy
+    keyword constructor: decisions, revenue, downgrades, spends and the
+    full lambda trace."""
+    from repro.serving.pipeline import ServingPipeline
+
+    chains, server, params, rcfg = tiny_stack
+    b = 64
+    budget = 0.5 * float(chains.costs.max()) * b
+    tb = np.array([0.3, 0.7]) * budget
+    kappa_ci = 3.2e-7 * 480.0  # carbon scale (gCO2e per FLOP)
+
+    cases = {
+        "plain": (
+            dict(budget_per_window=budget),
+            ConstraintSpec([GlobalAxis(budget=budget)]), {}),
+        "tenants_shared": (
+            dict(budget_per_window=budget, tenant_budgets=tb),
+            ConstraintSpec([TenantAxis(tuple(tb)),
+                            GlobalAxis(budget=budget)]), {}),
+        "tenants_priced": (
+            dict(budget_per_window=budget, tenant_budgets=tb,
+                 tenant_mode="priced"),
+            ConstraintSpec([TenantAxis(tuple(tb), priced=True),
+                            GlobalAxis(budget=budget)]), {}),
+        "geo_argmax": (
+            dict(budget_per_window=budget, n_regions=2),
+            ConstraintSpec([RegionAxis(2, split="argmax"),
+                            GlobalAxis(budget=budget)]),
+            dict(budget=np.array([budget, budget]) * kappa_ci,
+                 cost_scale=np.array([kappa_ci, kappa_ci]))),
+        "carbon_plain": (
+            dict(budget_per_window=budget),
+            ConstraintSpec([GlobalAxis(budget=budget,
+                                       pricing="carbon")]),
+            dict(budget=budget * kappa_ci, cost_scale=kappa_ci)),
+    }
+    for name, (legacy_kw, spec, serve_kw) in cases.items():
+        legacy = ServingPipeline(server, params, rcfg, **legacy_kw)
+        built = ServingPipeline.from_spec(server, params, rcfg, spec)
+        assert built.budget == legacy.budget, name
+        assert np.shape(built.lam) == np.shape(legacy.lam), name
+        for ctx, rows in _windows(40, seed=11):
+            r_l = legacy.serve_window(ctx, rows, **serve_kw)
+            r_s = built.serve_window(ctx, rows, **serve_kw)
+            _assert_same_window(r_l, r_s)
+        # the free-running published prices stayed bitwise in lockstep
+        np.testing.assert_array_equal(np.asarray(legacy.lam),
+                                      np.asarray(built.lam)), name
+
+
+# ---------------------------------------------------------------------------
+# Exact flow-splitting primal rounding (the region_jitter replacement)
+# ---------------------------------------------------------------------------
+
+
+def test_flow_split_divides_degenerate_window_proportionally(tiny_stack):
+    """Identical region scales (exact tie): the flow split hands each
+    region a FLOPs share proportional to its remaining budget capacity,
+    deterministically, while chain decisions match the plain pipeline."""
+    from repro.serving.pipeline import ServingPipeline
+
+    chains, server, params, rcfg = tiny_stack
+    b = 64
+    budget = 0.45 * float(chains.costs.max()) * b
+    spec = ConstraintSpec([RegionAxis(2, split="flow"),
+                           GlobalAxis(budget=budget)])
+    geo = ServingPipeline.from_spec(server, params, rcfg, spec,
+                                    guard=False)
+    plain = ServingPipeline(server, params, rcfg, budget, guard=False)
+    budgets = np.array([3.0, 1.0]) * budget  # 75 / 25 capacity split
+    ctx, rows = _windows(40, n_windows=1, seed=12)[0]
+    r_g = geo.serve_window(ctx, rows, lam=0.0, budget=budgets,
+                           cost_scale=np.array([1.0, 1.0]))
+    r_p = plain.serve_window(ctx, rows, lam=0.0)
+    np.testing.assert_array_equal(r_g.decisions_np, r_p.decisions_np)
+    flops = chains.costs[r_g.decisions_np]
+    frac0 = flops[r_g.regions_np == 0].sum() / flops.sum()
+    # proportional up to one request's granularity at the interval edge
+    assert abs(frac0 - 0.75) <= float(flops.max() / flops.sum())
+    # deterministic: the same window splits the same way again
+    r_g2 = geo.serve_window(ctx, rows, lam=0.0, budget=budgets,
+                            cost_scale=np.array([1.0, 1.0]))
+    np.testing.assert_array_equal(r_g.regions_np, r_g2.regions_np)
+
+
+def test_flow_split_untied_window_reduces_to_argmax(tiny_stack):
+    """Distinct per-flop priced costs (no tie): flow and argmax route
+    identically - everything to the cheapest-priced (greener) region."""
+    from repro.serving.pipeline import ServingPipeline
+
+    chains, server, params, rcfg = tiny_stack
+    b = 64
+    budget = 0.45 * float(chains.costs.max()) * b
+    kappa = 3.2e-7
+    scales = kappa * np.array([600.0, 200.0])  # 3x apart: clear winner
+    budgets = np.full(2, budget * kappa * 400.0)
+    pipes = {}
+    for split in ("flow", "argmax"):
+        spec = ConstraintSpec([RegionAxis(2, split=split),
+                               GlobalAxis(budget=budget)])
+        pipes[split] = ServingPipeline.from_spec(server, params, rcfg,
+                                                 spec)
+    for ctx, rows in _windows(40, n_windows=3, seed=13):
+        r_f = pipes["flow"].serve_window(ctx, rows, lam=0.0,
+                                         budget=budgets,
+                                         cost_scale=scales)
+        r_a = pipes["argmax"].serve_window(ctx, rows, lam=0.0,
+                                           budget=budgets,
+                                           cost_scale=scales)
+        np.testing.assert_array_equal(r_f.decisions_np, r_a.decisions_np)
+        np.testing.assert_array_equal(r_f.regions_np, r_a.regions_np)
+        assert np.all(r_f.regions_np == 1)  # the greener region
+
+
+def test_flow_split_respects_caps_and_beats_bang_bang(tiny_stack):
+    """Free-running flow-split day on a dirty/green pair: majority lands
+    green, per-region caps hold, and the split is non-degenerate once
+    the prices bind (not a whole-window bang-bang)."""
+    from repro.core.primal_dual import DualDescentConfig
+    from repro.serving.pipeline import ServingPipeline
+
+    chains, server, params, rcfg = tiny_stack
+    b = 64
+    kappa = 3.2e-7
+    flops_budget = 0.45 * float(chains.costs.max()) * b
+    spec = ConstraintSpec([RegionAxis(2, split="flow"),
+                           GlobalAxis(budget=flops_budget,
+                                      pricing="carbon")])
+    geo = ServingPipeline.from_spec(
+        server, params, rcfg, spec,
+        dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
+    ci = np.array([600.0, 200.0])
+    scales = kappa * ci
+    budgets = np.full(2, 0.5 * flops_budget * kappa * float(ci.mean()))
+    splits = []
+    for ctx, rows in _windows(40, n_windows=6, seed=7):
+        res = geo.serve_window(ctx, rows, budget=budgets,
+                               cost_scale=scales)
+        splits.append(float((res.regions_np == 1).mean()))
+    assert (np.asarray(res.regions_np) == 1).mean() > 0.5
+    for r in range(2):
+        floor_g = len(res.regions_np) * float(chains.costs.min()) \
+            * scales[r]
+        assert float(res.region_spend[r]) <= max(budgets[r], floor_g) \
+            * (1 + 1e-5)
+    # once the green cap binds, the window is SPLIT, not bang-banged
+    assert any(0.05 < s < 0.95 for s in splits[2:])
+
+
+# ---------------------------------------------------------------------------
+# The combined tenant x region pipeline
+# ---------------------------------------------------------------------------
+
+
+def _combined_pipe(tiny_stack_t, *, priced=True, split="flow",
+                   guard=True, t_n=2, budget=None):
+    from repro.serving.pipeline import ServingPipeline
+
+    chains, server, params, rcfg = tiny_stack_t
+    per = 32
+    budget = budget or 0.5 * float(chains.costs.max()) * per
+    tb = tuple(float(budget) * (0.5 + 0.5 * t) for t in range(t_n))
+    spec = ConstraintSpec([
+        TenantAxis(tb, priced=priced),
+        RegionAxis(2, split=split),
+        GlobalAxis(pricing="carbon"),
+    ])
+    return ServingPipeline.from_spec(server, params, rcfg, spec,
+                                     guard=guard), tb, per
+
+
+def test_geotenants_window_caps_and_spend_consistency(tiny_stack):
+    """Both constraint families hold at once: every tenant's gram spend
+    respects its budget, every region's its cap, and the (T, R) spend
+    matrix is consistent with its marginals and the total."""
+    chains, server, params, rcfg = tiny_stack
+    pipe, tb_f, per = _combined_pipe(tiny_stack)
+    t_n, r_n = 2, 2
+    kappa = 3.2e-7
+    ci = np.array([500.0, 300.0])
+    scales = kappa * ci
+    # gram budgets: tenant budgets from FLOPs at mean CI; region caps
+    # at 70% of the total (both families can bind)
+    tg = np.asarray(tb_f) * kappa * float(ci.mean())
+    rg = np.full(r_n, 0.7 * tg.sum())
+    bud = np.concatenate([tg, rg])
+    res = None
+    for ctx, rows in _windows(40, n_windows=6, n=t_n * per, seed=14):
+        res = pipe.serve_window(ctx, rows, budget=bud,
+                                cost_scale=scales)
+    tr = np.asarray(res.tr_spend)
+    assert tr.shape == (t_n, r_n)
+    np.testing.assert_allclose(tr.sum(axis=1),
+                               np.asarray(res.tenant_spend), rtol=1e-6)
+    np.testing.assert_allclose(tr.sum(axis=0),
+                               np.asarray(res.region_spend), rtol=1e-6)
+    np.testing.assert_allclose(tr.sum(), float(res.spend), rtol=1e-6)
+    assert np.asarray(res.lam_after).shape == (t_n + r_n,)
+    assert res.k_budget.shape == (t_n + r_n,)
+    c_min_g = float(chains.costs.min()) * scales.min()
+    for t in range(t_n):
+        floor = per * c_min_g
+        assert tr[t].sum() <= max(tg[t], floor) * (1 + 1e-5), t
+    regions = res.regions_np
+    for r in range(r_n):
+        n_r = int((regions == r).sum())
+        floor = n_r * float(chains.costs.min()) * scales[r]
+        assert tr[:, r].sum() <= max(rg[r], floor) * (1 + 1e-5), r
+
+
+def test_geotenants_tight_tenant_carries_higher_price(tiny_stack):
+    """The (T + R,) price vector separates the axes: the starved tenant
+    's price rises above the slack tenant's, while region prices react
+    to the region caps."""
+    chains, server, params, rcfg = tiny_stack
+    from repro.core.primal_dual import DualDescentConfig
+    from repro.serving.pipeline import ServingPipeline
+
+    per, t_n = 32, 2
+    c_max = float(chains.costs.max())
+    kappa_ci = 3.2e-7 * 450.0
+    # tenant 0 starved, tenant 1 slack (in grams)
+    tg = np.array([0.25, 3.0]) * c_max * per * kappa_ci
+    rg = np.full(2, 0.8 * tg.sum())
+    spec = ConstraintSpec([
+        TenantAxis(tuple(tg / kappa_ci), priced=True),
+        RegionAxis(2, split="flow"),
+        GlobalAxis(pricing="carbon"),
+    ])
+    pipe = ServingPipeline.from_spec(
+        server, params, rcfg, spec,
+        dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
+    bud = np.concatenate([tg, rg])
+    scales = np.full(2, kappa_ci)
+    for ctx, rows in _windows(40, n_windows=8, n=t_n * per, seed=15):
+        res = pipe.serve_window(ctx, rows, budget=bud,
+                                cost_scale=scales)
+    lam = np.asarray(pipe.lam)
+    assert lam.shape == (4,)
+    assert lam[0] > lam[1]  # starved tenant prices itself
+    floor = per * float(chains.costs.min()) * kappa_ci
+    tr = np.asarray(res.tr_spend)
+    assert tr[0].sum() <= max(tg[0], floor) * (1 + 1e-5)
+
+
+def test_geotenants_shared_mode_prices_regions_only(tiny_stack):
+    """TenantAxis(priced=False) + RegionAxis: the price vector is (R,)
+    (region prices only) while tenant budgets are still guard-enforced."""
+    chains, server, params, rcfg = tiny_stack
+    pipe, tb_f, per = _combined_pipe(tiny_stack, priced=False)
+    kappa_ci = 3.2e-7 * 450.0
+    tg = np.asarray(tb_f) * kappa_ci
+    bud = np.concatenate([tg, np.full(2, 0.7 * tg.sum())])
+    scales = np.full(2, kappa_ci)
+    ctx, rows = _windows(40, n_windows=1, n=2 * per, seed=16)[0]
+    res = pipe.serve_window(ctx, rows, budget=bud, cost_scale=scales)
+    assert np.asarray(res.lam_after).shape == (2,)
+    tr = np.asarray(res.tr_spend)
+    floor = per * float(chains.costs.min()) * kappa_ci
+    for t in range(2):
+        assert tr[t].sum() <= max(tg[t], floor) * (1 + 1e-5)
+
+
+def test_geotenants_pinned_prices_match_brute_force(tiny_stack):
+    """At pinned (T + R,) prices with the guard off, the fused combined
+    pass reproduces the float64 brute-force argmax over the (chain,
+    region) option space wherever the decision is f32-resolvable."""
+    chains, server, params, rcfg = tiny_stack
+    from repro.core.reward_model import (denormalize_rewards,
+                                         reward_matrix)
+
+    pipe, tb_f, per = _combined_pipe(tiny_stack, split="argmax",
+                                     guard=False)
+    t_n = r_n = 2
+    j_n = chains.n_chains
+    rng = np.random.default_rng(17)
+    lam = rng.uniform(0.0, 1.0, t_n + r_n).astype(np.float32) \
+        / float(chains.costs.max())
+    scales = np.array([1.1, 0.8], np.float32)
+    bud = np.full(t_n + r_n, 1e30, np.float32)
+    mo = jnp.asarray(chains.model_onehot)
+    sh = jnp.asarray(chains.scale_multihot)
+    ctx, rows = _windows(40, n_windows=1, n=t_n * per, seed=18)[0]
+    res = pipe.serve_window(ctx, rows, lam=lam, budget=bud,
+                            cost_scale=scales)
+    dec_m = res.regions_np * j_n + res.decisions_np
+
+    rewards = np.asarray(denormalize_rewards(
+        pipe.reward_params, reward_matrix(
+            pipe.reward_params, rcfg, jnp.asarray(ctx, jnp.float32),
+            mo, sh))).astype(np.float64)
+    t_of = np.repeat(np.arange(t_n), per)
+    costs = chains.costs.astype(np.float64)
+    score = np.concatenate([
+        rewards - ((lam[t_of] + lam[t_n + r])[:, None]
+                   * float(scales[r]) * costs[None, :])
+        for r in range(r_n)], axis=1)
+    ref = np.argmax(score, axis=1)
+    srt = np.sort(score, axis=1)
+    decided = (srt[:, -1] - srt[:, -2]) > 1e-4
+    assert decided.mean() > 0.85
+    np.testing.assert_array_equal(dec_m[decided], ref[decided])
+
+
+def test_spec_built_host_controllers_match_direct(tiny_stack):
+    """BudgetController/CarbonBudgetController.from_spec == the directly
+    built controllers, decision-for-decision."""
+    from repro.carbon.controller import (CarbonBudget,
+                                         CarbonBudgetController)
+    from repro.carbon.intensity import constant_trace
+    from repro.core.budget import BudgetController
+
+    chains, _, _, _ = tiny_stack
+    b_f = 0.5 * float(chains.costs.max()) * 48
+    spec = ConstraintSpec([GlobalAxis(budget=b_f)])
+    spec_c = ConstraintSpec([GlobalAxis(budget=b_f, pricing="carbon")])
+    tr = constant_trace(600.0, n=24)
+    rng = np.random.default_rng(19)
+    rewards = [rng.random((48, chains.n_chains)).astype(np.float32)
+               for _ in range(3)]
+
+    direct = BudgetController(chains, b_f)
+    built = BudgetController.from_spec(chains, spec)
+    cb = CarbonBudget.from_flops(b_f, tr)
+    direct_c = CarbonBudgetController(chains, cb, pricing="carbon")
+    built_c = CarbonBudgetController.from_spec(chains, spec_c, tr)
+    assert built_c.pricing == "carbon"
+    for r in rewards:
+        np.testing.assert_array_equal(direct.step_window(r),
+                                      built.step_window(r))
+        np.testing.assert_array_equal(direct_c.step_window(r),
+                                      built_c.step_window(r))
+    with pytest.raises(ValueError, match="plain"):
+        BudgetController.from_spec(chains, ConstraintSpec(
+            [TenantAxis((1.0, 2.0))]))
+    with pytest.raises(ValueError, match="carbon"):
+        BudgetController.from_spec(chains, spec_c)
+
+
+def test_scenario_registry_is_single_source():
+    """The stream registry drives both the valid-names error and the
+    serve CLI's --scenario choices (no second hand-maintained list)."""
+    from repro.serving.stream import (SCENARIOS, TrafficScenario,
+                                      scenario_windows)
+
+    assert "geotenants" in SCENARIOS
+    sizes = scenario_windows(TrafficScenario("geotenants", 12, 96,
+                                             n_tenants=3))
+    assert len(sizes) == 12 and all(n % 3 == 0 for n in sizes)
+    with pytest.raises(ValueError, match="geotenants"):
+        scenario_windows(TrafficScenario("nope", 4, 8))
+
+    import repro.launch.serve as serve_mod
+    src = open(serve_mod.__file__).read()
+    assert "choices=tuple(SCENARIOS)" in src
+
+
+# ---------------------------------------------------------------------------
+# Request-axis sharding: subprocess with 8 fake host devices
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_geotenants_sharded_matches_unsharded():
+    """The combined tenant x region pass under an 8-way request mesh:
+    decisions equal and the (T + R,) lambda traces match the
+    single-process run at pinned entry prices (the ISSUE acceptance
+    gate for the new pipeline)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.cascade.engine import CascadeServer
+    from repro.core.action_chain import (ModelInstance, StageSpec,
+                                         generate_action_chains)
+    from repro.core.reward_model import RewardModelConfig, reward_model_init
+    from repro.launch.mesh import make_request_mesh
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.spec import (ConstraintSpec, GlobalAxis,
+                                    RegionAxis, TenantAxis)
+
+    rng = np.random.default_rng(0)
+    u, i = 40, 150
+    scores = {k: rng.normal(size=(u, i)).astype(np.float32)
+              for k in ("DSSM", "YDNN", "DIN", "DIEN")}
+    clicks = (rng.random((u, i)) < 0.15).astype(np.float32)
+    n2 = tuple(int(x) for x in np.linspace(0.2 * i, 0.5 * i, 4))
+    n3 = tuple(int(x) for x in np.linspace(8, 0.2 * i, 4))
+    chains = generate_action_chains((
+        StageSpec("recall", (ModelInstance("DSSM", 13e3),), (i,), 4),
+        StageSpec("prerank", (ModelInstance("YDNN", 123e3),), n2, 4),
+        StageSpec("rank", (ModelInstance("DIN", 7020e3),
+                           ModelInstance("DIEN", 7098e3)), n3, 4),
+    ))
+    server = CascadeServer(stage_scores=scores, chains=chains,
+                           clicks=clicks, expose=8)
+    rcfg = RewardModelConfig(n_stages=3, max_models=2, n_scale_groups=4,
+                             d_context=12, d_feature=16, d_hidden=16,
+                             d_state=8)
+    params = dict(reward_model_init(jax.random.PRNGKey(0), rcfg))
+    params["label_norm"] = jnp.asarray(
+        np.linspace(1.0, 3.0, chains.n_chains).astype(np.float32))
+    t_n, r_n, per = 2, 2, 64
+    c_max = float(chains.costs.max())
+    kappa_ci = 3.2e-7 * 450.0
+    tb = (np.array([0.35, 0.6]) * c_max * per).astype(np.float64)
+    spec = ConstraintSpec([
+        TenantAxis(tuple(tb), priced=True),
+        RegionAxis(r_n, split="flow"),
+        GlobalAxis(pricing="carbon"),
+    ])
+    mesh = make_request_mesh(8)
+    pipe_s = ServingPipeline.from_spec(server, params, rcfg, spec,
+                                       mesh=mesh)
+    pipe_u = ServingPipeline.from_spec(server, params, rcfg, spec)
+    tg = tb * kappa_ci
+    bud = np.concatenate([tg, np.full(r_n, 0.7 * tg.sum())])
+    scales = kappa_ci * np.array([1.2, 0.8])
+    rng2 = np.random.default_rng(1)
+    # free-run the single-process reference, keeping each window's
+    # ENTRY price; the sharded run serves at the same pinned entry
+    # price, so decisions must match exactly while published
+    # (psum-stitched) prices match to float tolerance.
+    wins = []
+    for t in range(4):
+        n = t_n * per
+        rows = rng2.integers(0, u, n)
+        ctx = rng2.normal(size=(n, 12)).astype(np.float32)
+        lam_in = np.asarray(pipe_u.lam)
+        wins.append((ctx, rows, lam_in,
+                     pipe_u.serve_window(ctx, rows, budget=bud,
+                                         cost_scale=scales)))
+    for t, (ctx, rows, lam_in, ru) in enumerate(wins):
+        rs = pipe_s.serve_window(ctx, rows, lam=jnp.asarray(lam_in),
+                                 budget=bud, cost_scale=scales)
+        assert np.array_equal(rs.decisions_np, ru.decisions_np), t
+        assert np.array_equal(rs.regions_np, ru.regions_np), t
+        assert np.array_equal(rs.revenue_np, ru.revenue_np), t
+        assert int(rs.downgraded) == int(ru.downgraded), t
+        np.testing.assert_allclose(np.asarray(rs.tr_spend),
+                                   np.asarray(ru.tr_spend), rtol=1e-5)
+        lam_u = np.asarray(ru.lam_after)
+        np.testing.assert_allclose(np.asarray(rs.lam_after), lam_u,
+                                   rtol=1e-4,
+                                   atol=5e-3 * float(np.max(lam_u)))
+    assert np.asarray(pipe_u.lam).shape == (t_n + r_n,)
+    print("GEOTENANTS SHARDED PARITY OK")
+    """)], capture_output=True, text=True, timeout=420, env=env)
+    assert out.returncode == 0, f"stdout:{out.stdout}\nstderr:{out.stderr}"
+    assert "GEOTENANTS SHARDED PARITY OK" in out.stdout
