@@ -1,0 +1,314 @@
+"""Scale benchmark: the streaming request path at U >= 100k.
+
+    PYTHONPATH=src python benchmarks/bench_scale.py [--json PATH]
+    PYTHONPATH=src python benchmarks/bench_scale.py --small   # CI smoke
+
+The materialized serving path precomputes (U, I) stage scores, (U, I)
+clicks and (G, U, cap) compact tables before the first request; host
+memory scales with the universe.  This benchmark drives the SAME fused
+geotenants pipeline (per-tenant dual prices x per-region caps, one
+jitted pass) from a ``GeneratedSource`` - every window generated,
+scored and compacted on the fly - and measures what the streaming
+refactor claims:
+
+  * requests/sec end-to-end (double-buffered ``run_stream``: window
+    t+1's chunk is generated while the device executes window t) and
+    the serve-only window latency (p50/p99, host-blocked);
+  * peak host RSS at a small universe vs U >= 100k under an IDENTICAL
+    window schedule - the gate asserts the delta stays under
+    --rss-gate-mb, i.e. nothing anywhere allocates O(U) (for scale,
+    the JSON also reports what materializing U would cost);
+  * jit recompiles per window under decade-ladder traffic swings
+    (1x..--spike x): with pow2 bucketed padding every shape compiles
+    once, and the gate asserts ZERO steady-state recompiles;
+  * the small-U parity gate: replaying the materialized server's own
+    universe through the chunked path (``TableReplaySource``) is
+    BITWISE identical - decisions, revenues, prices, spends - in both
+    the plain and the geotenants pipeline.
+
+Everything model-sized stays at the cached --small serving stack; only
+the user universe scales, which is exactly the point.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _vm_mb(key: str = "VmRSS:") -> float:
+    """Current (VmRSS:) or peak (VmHWM:) resident set, MB."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith(key):
+                    return int(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    return float("nan")
+
+
+class _MeteredSource:
+    """Wraps a RequestSource; samples VmRSS after each window build."""
+
+    def __init__(self, src):
+        self._src = src
+        self.rss_mb: list[float] = []
+
+    def window(self, t, n):
+        chunk = self._src.window(t, n)
+        self.rss_mb.append(_vm_mb())
+        return chunk
+
+
+def _geotenants_spec(chains, n_base, budget_frac, t_n=2, r_n=2):
+    from repro.serving.spec import (ConstraintSpec, GlobalAxis,
+                                    RegionAxis, TenantAxis)
+
+    per_req = budget_frac * float(chains.costs.max())
+    total = per_req * n_base
+    spec = ConstraintSpec([
+        TenantAxis(tuple(np.full(t_n, total / t_n)), priced=True),
+        RegionAxis(r_n, names=("region_a", "region_b")),
+        GlobalAxis(pricing="carbon"),
+    ])
+    scale = np.array([1.0, 1.3], np.float32)  # region cost ratios
+
+    def traces(sizes):
+        """Budgets scale with the window (tenant grams first, then the
+        per-region caps at 60% of the total); cost scales are fixed."""
+        bt, st_ = [], []
+        for n in sizes:
+            tot = per_req * n
+            bt.append(np.concatenate([np.full(t_n, tot / t_n),
+                                      np.full(r_n, 0.6 * tot)])
+                      .astype(np.float32))
+            st_.append(scale)
+        return bt, st_
+
+    return spec, traces
+
+
+def _parity_gate(exp, server, params, rcfg, *, windows=6, base=48,
+                 budget_frac=0.5) -> dict:
+    """Small-U bitwise gate: the chunked TableReplaySource path against
+    indexing the materialized server - same arrivals, free-running
+    prices - in the plain AND the geotenants pipeline."""
+    from repro.data.request_source import TableReplaySource
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.stream import (TrafficScenario, run_stream,
+                                      scenario_windows)
+
+    chains = exp.chains
+    budget = budget_frac * float(chains.costs.max()) * base
+    src = TableReplaySource.from_server(server, exp.ctx_eval, seed=7)
+
+    def sample(t, n):
+        rows = src.arrivals(t, n)
+        return exp.ctx_eval[rows], rows
+
+    checked = 0
+    for mode in ("plain", "geotenants"):
+        sc = TrafficScenario("spike", windows, base, spike_mult=3.0,
+                             n_tenants=2 if mode == "geotenants" else 1)
+        sizes = scenario_windows(sc)
+        if mode == "plain":
+            pipe_m = ServingPipeline(server, params, rcfg, budget)
+            pipe_s = ServingPipeline(src.universe, params, rcfg, budget)
+            kw = {}
+        else:
+            spec, traces = _geotenants_spec(chains, base, budget_frac)
+            bt, st_ = traces(sizes)
+            pipe_m = ServingPipeline.from_spec(server, params, rcfg,
+                                               spec)
+            pipe_s = ServingPipeline.from_spec(src.universe, params,
+                                               rcfg, spec)
+            kw = {"budget_trace": bt, "scale_trace": st_}
+        res_m = run_stream(pipe_m, sizes, sample, **kw)
+        res_s = run_stream(pipe_s, sizes, src, **kw)
+        for t, (a, b) in enumerate(zip(res_m.windows, res_s.windows)):
+            tag = f"{mode} w{t}"
+            assert np.array_equal(a.decisions_np, b.decisions_np), tag
+            assert np.array_equal(a.revenue_np, b.revenue_np), tag
+            assert np.array_equal(np.asarray(a.spend),
+                                  np.asarray(b.spend)), tag
+            assert np.array_equal(np.asarray(a.lam_after),
+                                  np.asarray(b.lam_after)), tag
+            checked += 1
+    return {"bitwise": True, "windows_checked": checked,
+            "modes": ["plain", "geotenants"]}
+
+
+def _swing_run(exp, params, rcfg, *, n_users, sizes, lat_sizes,
+               budget_frac=0.5, chunk=512) -> dict:
+    """One streamed geotenants run at ``n_users``: a double-buffered
+    throughput pass over ``sizes``, then a host-blocked latency pass
+    over ``lat_sizes`` on the same warm pipeline."""
+    import jax
+
+    from dataclasses import replace
+
+    from repro.data.request_source import GeneratedSource
+    from repro.data.synthetic import StreamingWorld
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.stream import run_stream
+
+    chains = exp.chains
+    wcfg = replace(exp.cfg.world, n_users=n_users)
+    gen = GeneratedSource(StreamingWorld.build(wcfg), exp.models,
+                          chains, expose=exp.cfg.expose, seed=5,
+                          chunk=chunk)
+    spec, traces = _geotenants_spec(chains, sizes[0], budget_frac)
+    pipe = ServingPipeline.from_spec(gen.universe, params, rcfg, spec,
+                                     bucketing="pow2")
+    src = _MeteredSource(gen)
+    bt, st_ = traces(sizes)
+    rss0 = _vm_mb()
+    st = run_stream(pipe, sizes, src, budget_trace=bt, scale_trace=st_)
+    total_req = int(sum(sizes))
+
+    # serve-only latency: chunk built first, then submit -> results
+    # host-ready (the nearline price chains on-device, off this path)
+    lat_s = []
+    bt2, st2 = traces(lat_sizes)
+    for i, n in enumerate(lat_sizes):
+        c = gen.window(1000 + i, n)
+        t0 = time.perf_counter()
+        r = pipe.serve_window(c.ctx, c.rows, tables=c.tables,
+                              budget=bt2[i], cost_scale=st2[i])
+        jax.block_until_ready((r.decisions, r.revenue, r.spend))
+        lat_s.append(time.perf_counter() - t0)
+
+    return {
+        "n_users": int(n_users),
+        "sizes": [int(n) for n in sizes],
+        "requests": total_req,
+        "wall_s": round(st.wall_s, 3),
+        "requests_per_sec": round(total_req / st.wall_s, 1),
+        "compiles_per_window": st.compiles,
+        "steady_state_recompiles": int(st.steady_compiles),
+        "compiled_buckets": len({r.bucket for r in st.windows}),
+        "p50_window_ms": round(float(np.percentile(lat_s, 50)) * 1e3, 2),
+        "p99_window_ms": round(float(np.percentile(lat_s, 99)) * 1e3, 2),
+        "latency_sizes": [int(n) for n in lat_sizes],
+        "rss_before_mb": round(rss0, 1),
+        "peak_rss_mb": round(max(src.rss_mb), 1),
+        "vm_hwm_mb": round(_vm_mb("VmHWM:"), 1),
+        "total_revenue": round(st.total_revenue, 2),
+    }
+
+
+def run(*, users_small: int = 20_000, users_big: int = 150_000,
+        base: int = 16, spike: float = 1000.0, cycles: int = 2,
+        budget_frac: float = 0.5, rss_gate_mb: float = 200.0,
+        small: bool = False, json_path: str | None = None) -> dict:
+    from repro.experiments import build_serving_stack, serve_config
+    from repro.serving.stream import TrafficScenario, scenario_windows
+
+    if small:  # CI smoke: 3 decades, one ladder cycle, shorter latency
+        spike, cycles = min(spike, 100.0), 1
+    exp, server, params, rcfg = build_serving_stack(
+        serve_config(small=True), verbose=True)
+
+    print("[bench_scale] parity gate (small U, bitwise) ...")
+    parity = _parity_gate(exp, server, params, rcfg)
+    print(f"[bench_scale] parity OK over {parity['windows_checked']} "
+          f"windows ({'+'.join(parity['modes'])})")
+
+    decades = max(1, int(np.log10(max(10.0, spike))) + 1)
+    sc = TrafficScenario("swing", decades * cycles, base,
+                         spike_mult=spike, n_tenants=2)
+    sizes = scenario_windows(sc)
+    lat_sizes = scenario_windows(
+        TrafficScenario("swing", decades, base, spike_mult=spike,
+                        n_tenants=2))
+    runs = {}
+    for label, n_users in (("small_universe", users_small),
+                           ("big_universe", users_big)):
+        print(f"[bench_scale] {label}: U={n_users:,}, "
+              f"windows {sizes} ...")
+        runs[label] = _swing_run(exp, params, rcfg, n_users=n_users,
+                                 sizes=sizes, lat_sizes=lat_sizes,
+                                 budget_frac=budget_frac)
+        r = runs[label]
+        print(f"[bench_scale]   {r['requests_per_sec']} req/s, "
+              f"p99 {r['p99_window_ms']} ms, peak RSS "
+              f"{r['peak_rss_mb']} MB, steady recompiles "
+              f"{r['steady_state_recompiles']}")
+
+    # what the retired path would have allocated at U_big: four (U, I)
+    # float32 stage-score matrices, a (U, I) click matrix and the
+    # (G, U, cap) int+float compact tables
+    i_n = exp.cfg.world.n_items
+    g_n = int(server.compact.p_sorted.shape[0])
+    cap = int(server.compact.cap)
+    mat_mb = (users_big * i_n * 4 * 5 +
+              users_big * g_n * cap * 8) / 1e6
+    delta = (runs["big_universe"]["peak_rss_mb"]
+             - runs["small_universe"]["peak_rss_mb"])
+    result = {
+        "config": {"base": base, "spike": spike, "cycles": cycles,
+                   "budget_frac": budget_frac, "small": small,
+                   "users_small": users_small, "users_big": users_big,
+                   "n_items": int(i_n), "chains": exp.chains.n_chains,
+                   "pipeline": "geotenants (2 tenants x 2 regions, "
+                               "pow2 buckets)"},
+        "parity_gate": parity,
+        "runs": runs,
+        "peak_rss_delta_mb": round(delta, 1),
+        "rss_gate_mb": rss_gate_mb,
+        "materialized_tables_mb_at_big": round(mat_mb, 1),
+        "steady_state_recompiles": int(
+            sum(r["steady_state_recompiles"] for r in runs.values())),
+    }
+    assert result["steady_state_recompiles"] == 0, \
+        "bucketed padding must keep the jit cache warm in steady state"
+    assert delta < rss_gate_mb, (
+        f"peak RSS grew {delta:.1f} MB from U={users_small:,} to "
+        f"U={users_big:,} (gate {rss_gate_mb} MB): something allocates "
+        f"O(U)")
+    result["gates"] = {"zero_steady_recompiles": True,
+                       "rss_flat_wrt_users": True,
+                       "bitwise_parity": True}
+    if json_path is not None:
+        path = os.path.abspath(json_path)
+        with open(path, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+        print(json.dumps(result, indent=2))
+        print(f"[bench_scale] wrote {path}")
+    return result
+
+
+def main() -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json",
+                    default=os.path.join(REPO, "BENCH_scale.json"))
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke: 100x swings, one ladder cycle")
+    ap.add_argument("--users-small", type=int, default=20_000)
+    ap.add_argument("--users", type=int, default=150_000,
+                    help="the big universe (the U >= 100k claim)")
+    ap.add_argument("--base", type=int, default=16,
+                    help="requests in a 1x window (decades multiply it)")
+    ap.add_argument("--spike", type=float, default=1000.0,
+                    help="top of the decade ladder (1000 = 4 decades)")
+    ap.add_argument("--cycles", type=int, default=2,
+                    help="ladder repetitions in the throughput pass")
+    ap.add_argument("--budget-frac", type=float, default=0.5)
+    ap.add_argument("--rss-gate-mb", type=float, default=200.0)
+    args = ap.parse_args()
+    return run(users_small=args.users_small, users_big=args.users,
+               base=args.base, spike=args.spike, cycles=args.cycles,
+               budget_frac=args.budget_frac,
+               rss_gate_mb=args.rss_gate_mb, small=args.small,
+               json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

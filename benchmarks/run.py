@@ -127,7 +127,7 @@ def run_all_json(fast: bool = False) -> dict:
     import os
 
     from benchmarks import (bench_carbon, bench_chain_sim, bench_geo,
-                            bench_geotenants, bench_serve)
+                            bench_geotenants, bench_scale, bench_serve)
 
     repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     out = {}
@@ -159,6 +159,10 @@ def run_all_json(fast: bool = False) -> dict:
             "band_fracs": (0.35, 0.65),
             "phases": (0.0, 12.0)} if fast else {}))
     out["geotenants"] = "BENCH_geotenants.json"
+    print("[run --all] streamed request world at scale ...")
+    bench_scale.run(json_path=os.path.join(repo, "BENCH_scale.json"),
+                    small=fast)
+    out["scale"] = "BENCH_scale.json"
     for name, path in out.items():
         print(f"[run --all] {name:10s} -> {path}")
     return out

@@ -2,11 +2,22 @@
 
     PYTHONPATH=src python examples/serve_allocation.py [--geo|--combined]
 
-Builds the small serving world (cascade + reward model, cached under
+Builds the small serving stack (cascade + reward model, cached under
 results/cache), then streams a day of traffic through the fused
-score->decide->guard->execute pass built from a declarative
-``ConstraintSpec`` - the operator declares WHAT is budgeted and the
-spec compiles onto the multi-price allocator core:
+score->decide->guard->execute pass.  Requests come from a
+``RequestSource`` (``repro.data.request_source``): arrivals are
+sampled from an UNBOUNDED hash-generated user universe
+(``StreamingWorld``, --users large at no extra memory), each window's
+user rows, stage scores and compact execution tables are produced on
+the fly as a ``WindowChunk``, and the pipeline gathers within the
+chunk - no (U, J) matrix, no per-user precomputation, host memory
+O(window).  ``--materialized`` switches back to indexing the small
+precomputed eval universe (the legacy front door; bitwise-equivalent
+serving is covered by tests/test_request_source.py).
+
+The pipeline itself is built from a declarative ``ConstraintSpec`` -
+the operator declares WHAT is budgeted and the spec compiles onto the
+multi-price allocator core:
 
   default     [TenantAxis(budgets, priced=True)]
               four tenants with very different budgets share one jitted
@@ -60,6 +71,12 @@ def main():
     ap.add_argument("--combined", action="store_true",
                     help="tenants x regions in ONE pipeline (the "
                          "ConstraintSpec headline)")
+    ap.add_argument("--users", type=int, default=100_000,
+                    help="streamed user-universe size (costs nothing: "
+                         "users materialize per window, on demand)")
+    ap.add_argument("--materialized", action="store_true",
+                    help="index the precomputed eval universe instead "
+                         "of streaming a generated one")
     args = ap.parse_args()
 
     from repro.experiments import build_serving_stack, serve_config
@@ -69,16 +86,34 @@ def main():
     from repro.serving.stream import (TrafficScenario, run_stream,
                                       scenario_windows)
 
-    print("[example] building the small serving world ...")
+    print("[example] building the small serving stack ...")
     exp, server, params, rcfg = build_serving_stack(
         serve_config(small=True), verbose=True)
     chains = exp.chains
-    rng = np.random.default_rng(0)
-    n_eval = exp.ctx_eval.shape[0]
 
-    def sample_window(t, n):
-        rows = rng.integers(0, n_eval, n)
-        return exp.ctx_eval[rows], rows
+    if args.materialized:  # legacy front door: sample the eval tables
+        rng = np.random.default_rng(0)
+        n_eval = exp.ctx_eval.shape[0]
+
+        def sample_window(t, n):
+            rows = rng.integers(0, n_eval, n)
+            return exp.ctx_eval[rows], rows
+    else:
+        from dataclasses import replace
+
+        from repro.data.request_source import GeneratedSource
+        from repro.data.synthetic import StreamingWorld
+
+        world = StreamingWorld.build(
+            replace(exp.cfg.world, n_users=args.users))
+        source = GeneratedSource(world, exp.models, chains,
+                                 expose=exp.cfg.expose)
+        print(f"[example] streaming source over U={args.users:,} "
+              f"hash-generated users (windows scored on the fly)")
+        # the pipeline builds over the layout-only universe; run_stream
+        # pulls WindowChunks straight from the source
+        server = source.universe
+        sample_window = source
 
     if args.geo or args.combined:
         from repro.carbon.controller import grams_per_flop

@@ -540,6 +540,47 @@ class CompactPlan:
     expose: int
 
 
+def _layout_cap(gk: tuple) -> int:
+    """Compact-row width for a k3 group key: min(max n2, max n3) - the
+    same bound ``_compact_group_tables`` derives, exposed so per-window
+    chunk tables and the full-universe tables agree on shape."""
+    n2_max = max(g[1] for g in gk)
+    return min(n2_max, max(max(g[2]) for g in gk))
+
+
+def _layout_chain_maps(lay: dict, n_chains: int,
+                       cap: int) -> tuple[np.ndarray, np.ndarray]:
+    """(group_of_chain, n3_of_chain) int32 vectors from a k3 layout."""
+    g_of = np.empty(n_chains, np.int32)
+    n3_of = np.empty(n_chains, np.int32)
+    pos = 0
+    for g, (_, _, n3list) in enumerate(lay["group_key"]):
+        for n3 in n3list:
+            j = int(lay["chain_order"][pos])
+            g_of[j] = g
+            n3_of[j] = min(int(n3), cap)
+            pos += 1
+    return g_of, n3_of
+
+
+def build_compact_layout(chains: ActionChainSet, *, n_items: int,
+                         expose: int) -> CompactPlan | None:
+    """The USER-INDEPENDENT part of a CompactPlan (or None off the k3
+    layout): group/threshold maps and the row width ``cap``, with EMPTY
+    per-user tables.  This is what a streaming ``RequestSource`` serves
+    against - each window brings its own (G, n, cap) chunk tables while
+    the chain->group arithmetic stays fixed."""
+    lay = _k3_layout(chains, n_items=n_items)
+    if lay is None:
+        return None
+    cap = _layout_cap(lay["group_key"])
+    g_of, n3_of = _layout_chain_maps(lay, chains.n_chains, cap)
+    g_n = len(lay["group_key"])
+    return CompactPlan(np.full((g_n, 1, cap), cap, np.int32),
+                       np.zeros((g_n, 1, cap), np.float32), g_of, n3_of,
+                       int(cap), int(expose))
+
+
 def build_compact_plan(stage_scores: dict, chains: ActionChainSet,
                        clicks: np.ndarray, *,
                        expose: int) -> CompactPlan | None:
@@ -549,15 +590,7 @@ def build_compact_plan(stage_scores: dict, chains: ActionChainSet,
         return None
     p_sorted, clicks_sorted, cap = _compact_group_tables(
         stage_scores, lay, np.asarray(clicks, np.float32), expose=expose)
-    g_of = np.empty(chains.n_chains, np.int32)
-    n3_of = np.empty(chains.n_chains, np.int32)
-    pos = 0
-    for g, (_, _, n3list) in enumerate(lay["group_key"]):
-        for n3 in n3list:
-            j = int(lay["chain_order"][pos])
-            g_of[j] = g
-            n3_of[j] = min(int(n3), cap)
-            pos += 1
+    g_of, n3_of = _layout_chain_maps(lay, chains.n_chains, cap)
     return CompactPlan(p_sorted.astype(np.int32),
                        clicks_sorted.astype(np.float32), g_of, n3_of,
                        int(cap), int(expose))

@@ -180,6 +180,41 @@ def reward_matrix(params: dict, cfg: RewardModelConfig,
         chain_model_onehot, chain_scale_multihot)
 
 
+def reward_matrix_chunked(params: dict, cfg: RewardModelConfig,
+                          raw_context, chain_model_onehot,
+                          chain_scale_multihot, *,
+                          chunk: int = 2048) -> np.ndarray:
+    """``reward_matrix`` evaluated in fixed-size request chunks.
+
+    Peak memory is O(chunk * J) instead of O(I * J) - the offline
+    analogue of the streaming serve path.  Inputs that fit one chunk
+    take the direct call (bitwise identical to ``reward_matrix``);
+    larger inputs run a jitted per-chunk kernel, identical per row up
+    to float ulps (XLA blocks matmuls differently per batch shape).
+    The last chunk is padded to ``chunk`` rows and sliced back, so any
+    request count reuses ONE compiled shape.  Returns numpy (the
+    chunks are host-concatenated).
+    """
+    ctx = np.asarray(raw_context, np.float32)
+    i_n = ctx.shape[0]
+    if i_n <= chunk:
+        return np.asarray(reward_matrix(params, cfg, jnp.asarray(ctx),
+                                        chain_model_onehot,
+                                        chain_scale_multihot))
+    fn = jax.jit(lambda c: reward_matrix(params, cfg, c,
+                                         chain_model_onehot,
+                                         chain_scale_multihot))
+    parts = []
+    for lo in range(0, i_n, chunk):
+        sl = ctx[lo:lo + chunk]
+        pad = chunk - sl.shape[0]
+        if pad:
+            sl = np.concatenate(
+                [sl, np.zeros((pad, sl.shape[1]), np.float32)])
+        parts.append(np.asarray(fn(jnp.asarray(sl)))[:chunk - pad or None])
+    return np.concatenate(parts, axis=0)
+
+
 # ---------------------------------------------------------------------------
 # Model-prefix grouped scoring (the fused serving pipeline's hot path)
 # ---------------------------------------------------------------------------

@@ -1,1 +1,33 @@
-"""Data substrate: synthetic Ali-CCP-style log, sharded pipelines, graphs."""
+"""Data substrate: synthetic Ali-CCP-style log, sharded pipelines,
+graphs - and the streaming request layer.
+
+``synthetic`` builds materialized worlds (``build_world``: every user
+row up front, a few thousand users) and streaming ones
+(``StreamingWorld``: counter-hash user generation, any slice of an
+unbounded universe on demand).  ``request_source`` turns either into
+per-window ``WindowChunk``s for the fused serving pipeline -
+``GeneratedSource`` scores arrivals on the fly, ``TableReplaySource``
+replays fixed (optionally memmapped) tables bitwise-identically to the
+materialized server they came from.
+"""
+import importlib
+
+_LAZY = {
+    "World": "repro.data.synthetic",
+    "WorldConfig": "repro.data.synthetic",
+    "StreamingWorld": "repro.data.synthetic",
+    "build_world": "repro.data.synthetic",
+    "GeneratedSource": "repro.data.request_source",
+    "RequestSource": "repro.data.request_source",
+    "StreamUniverse": "repro.data.request_source",
+    "TableReplaySource": "repro.data.request_source",
+    "WindowChunk": "repro.data.request_source",
+}
+
+__all__ = list(_LAZY)
+
+
+def __getattr__(name):  # PEP 562: keep bare `import repro.data` light
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(name)

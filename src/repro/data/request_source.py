@@ -1,0 +1,371 @@
+"""RequestSource: generate, score and serve request windows on the fly.
+
+The materialized serving path precomputes the whole per-user universe
+up front - four (U, I) stage-score matrices, (M, U, I) orderings, a
+(U, I) click realization and the (G, U, cap) CompactPlan tables - and
+every window merely indexes into it.  That tops out at a few thousand
+users: at U >= 100k those tables are hundreds of MB to GB of host RSS
+before the first request arrives.
+
+A ``RequestSource`` inverts the dataflow.  Each window is produced on
+demand as a ``WindowChunk``: sampled arrivals, their reward contexts,
+and a PER-WINDOW (G, n, cap) slice of compact execution tables - the
+decision-independent cascade arithmetic for exactly the users who
+showed up.  The fused ``ServingPipeline`` pass consumes the chunk
+unchanged (its tables are a traced argument, so bucketed padding keeps
+the jit cache warm), and host memory scales with the WINDOW size, never
+with the universe size.
+
+Two sources cover the two serving regimes:
+
+  * ``GeneratedSource`` - the open-world path: arrivals sampled from an
+    unbounded user universe (``data.synthetic.StreamingWorld``), user
+    rows hash-generated on demand, stage models scored per window in
+    fixed-shape chunks (one jit cache entry regardless of traffic), and
+    clicks realized per (user, item) so repeat visitors are consistent.
+    This is what drives ``benchmarks/bench_scale.py`` at U >= 100k.
+  * ``TableReplaySource`` - the fixed-replay path: per-user tables
+    precomputed once (in memory, or memmapped ``.npy`` files via
+    ``save``/``load`` so only the touched rows page in), windows gather
+    row slices.  Built ``from_server`` it is BITWISE identical to
+    serving the materialized ``CascadeServer`` - the parity gate in
+    tests/test_request_source.py.
+
+``source.universe`` is the server-shaped handle a streaming
+``ServingPipeline`` is constructed over: the chain set and compact
+LAYOUT (group maps + row width) without any per-user tables; every
+``serve_window`` call must then carry a chunk's tables.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.cascade.engine import (CascadeModels, CompactPlan, _k3_layout,
+                                  _compact_group_tables, _user_batch,
+                                  build_compact_layout)
+from repro.data.synthetic import StreamingWorld, World
+
+
+@dataclass
+class WindowChunk:
+    """One window's worth of requests, self-contained.
+
+    ``rows`` are LOCAL indices into ``tables`` (0..n-1): a chunk carries
+    its own (G, n, cap) compact tables, so the fused pass gathers within
+    the chunk instead of a global user axis.  ``users`` keeps the global
+    ids for logging/attribution only - nothing downstream indexes them.
+    """
+
+    ctx: np.ndarray  # (n, d_context) float32 reward contexts
+    rows: np.ndarray  # (n,) int32 local row indices (arange)
+    tables: dict  # {"p": (G, n, cap) int32, "ck": (G, n, cap) float32}
+    users: np.ndarray | None = None  # (n,) global user ids
+
+    @property
+    def n(self) -> int:
+        return int(len(self.rows))
+
+
+@dataclass
+class StreamUniverse:
+    """The server-shaped handle a streaming pipeline builds against:
+    chain set + compact layout (``build_compact_layout``: group maps and
+    row width, EMPTY per-user tables).  ``stream_only`` marks that every
+    ``serve_window`` call must bring a chunk's tables."""
+
+    chains: object
+    compact: CompactPlan
+    expose: int
+    stream_only: bool = True
+
+
+class RequestSource:
+    """Base: arrival sampling + per-window chunk production.
+
+    Subclasses set ``chains``, ``expose``, ``n_users``, ``seed`` and
+    implement ``window(t, n)``.  Window t is a pure function of
+    (seed, t) - re-running a stream replays identical traffic.
+    """
+
+    chains = None
+    expose: int = 0
+    n_users: int = 0
+    seed: int = 0
+
+    def arrivals(self, t: int, n: int) -> np.ndarray:
+        """(n,) sampled user ids for window t (uniform arrivals)."""
+        rng = np.random.default_rng((self.seed, t))
+        return rng.integers(0, self.n_users, size=n)
+
+    def window(self, t: int, n: int) -> WindowChunk:
+        raise NotImplementedError
+
+    @property
+    def universe(self) -> StreamUniverse:
+        lay = build_compact_layout(self.chains, n_items=self._n_items(),
+                                   expose=self.expose)
+        if lay is None:
+            raise ValueError(
+                "streaming sources need the k3 cascade layout (single "
+                "recall/prerank model pools); this chain set compiles "
+                "to the generic scan kernel, which has no chunked form")
+        return StreamUniverse(self.chains, lay, self.expose)
+
+    def _n_items(self) -> int:
+        raise NotImplementedError
+
+
+class GeneratedSource(RequestSource):
+    """On-the-fly request generation from a ``StreamingWorld``.
+
+    Per window: sample arrivals, hash-materialize exactly those user
+    rows, score the four stage models over the corpus in FIXED-SHAPE
+    chunks (padded to ``chunk`` users - one compiled shape for any
+    traffic level), realize per-(user, item) clicks, and compact the
+    (n, I) scores into the (G, n, cap) execution tables.  Peak host
+    memory is O(chunk * I) transient + O(n * G * cap) for the chunk
+    tables - independent of ``cfg.n_users``.
+    """
+
+    def __init__(self, world: StreamingWorld, models: CascadeModels,
+                 chains, *, expose: int, seed: int = 0, chunk: int = 512,
+                 item_block: int = 256):
+        self.world = world
+        self.models = models
+        self.chains = chains
+        self.expose = int(expose)
+        self.seed = int(seed)
+        self.chunk = int(chunk)
+        self.item_block = int(item_block)
+        self.n_users = int(world.cfg.n_users)
+        self._lay = _k3_layout(chains, n_items=world.cfg.n_items)
+        if self._lay is None:
+            raise ValueError("GeneratedSource needs the k3 cascade layout")
+        self._score_fns = None  # built lazily (jax import cost)
+
+    def _n_items(self) -> int:
+        return int(self.world.cfg.n_items)
+
+    @property
+    def d_context(self) -> int:
+        return self.world.d_context
+
+    # -- fixed-shape stage scoring ---------------------------------------
+
+    def _build_score_fns(self):
+        """One jitted closure per stage model at the FIXED chunk shape -
+        the per-window scoring analogue of the pipeline's bucketed
+        padding: any window size reuses the same compiled kernels."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.recsys import dien, din, dssm, ydnn
+
+        models = self.models
+        n_items = self._n_items()
+        item_ids = jnp.arange(n_items, dtype=jnp.int32)
+        item_cats = jnp.asarray(self.world.item_cat, jnp.int32)
+        if models.dssm_cfg.n_item_fields == 1:
+            dssm_item_fields = jnp.stack([item_cats], axis=-1)
+        else:
+            dssm_item_fields = jnp.stack([item_ids, item_cats], axis=-1)
+
+        @jax.jit
+        def dssm_all(uf):
+            v = dssm.item_tower(models.dssm_params, models.dssm_cfg,
+                                dssm_item_fields)
+            u = dssm.user_tower(models.dssm_params, models.dssm_cfg, uf)
+            return u @ v.T
+
+        @jax.jit
+        def ydnn_all(hist, mask, uf):
+            u = ydnn.user_vector(models.ydnn_params, models.ydnn_cfg,
+                                 hist, mask, uf)
+            v = models.ydnn_params["out_emb"]["table"][:n_items]
+            return u @ v.T
+
+        @jax.jit
+        def din_block(batch, cand_ids, cand_cats):
+            return din.score(models.din_params, models.din_cfg, batch,
+                             cand_ids, cand_cats)
+
+        @jax.jit
+        def dien_block(batch, cand_ids, cand_cats):
+            return dien.score(models.dien_params, models.dien_cfg, batch,
+                              cand_ids, cand_cats)
+
+        self._score_fns = {"DSSM": dssm_all, "YDNN": ydnn_all,
+                           "DIN": din_block, "DIEN": dien_block}
+        self._item_ids = item_ids
+        self._item_cats = item_cats
+
+    def _score_slab(self, slab: World, n_real: int) -> dict:
+        """{name: (n_real, I) float np} stage scores for a slab, padded
+        to the fixed chunk shape for the jitted kernels."""
+        import jax.numpy as jnp
+
+        if self._score_fns is None:
+            self._build_score_fns()
+        c = self.chunk
+        ub = _user_batch(slab, np.arange(n_real))
+        pad = c - n_real
+        if pad:
+            ub = {k: jnp.concatenate(
+                [v, jnp.zeros((pad, *v.shape[1:]), v.dtype)])
+                for k, v in ub.items()}
+        scores = {
+            "DSSM": np.asarray(self._score_fns["DSSM"](
+                ub["user_fields"]))[:n_real],
+            "YDNN": np.asarray(self._score_fns["YDNN"](
+                ub["hist_ids"], ub["hist_mask"],
+                ub["user_fields"]))[:n_real],
+        }
+        n_items = self._n_items()
+        for name in ("DIN", "DIEN"):
+            fn = self._score_fns[name]
+            cols = []
+            for lo in range(0, n_items, self.item_block):
+                hi = min(n_items, lo + self.item_block)
+                ids = jnp.broadcast_to(self._item_ids[lo:hi], (c, hi - lo))
+                cats = jnp.broadcast_to(self._item_cats[lo:hi],
+                                        (c, hi - lo))
+                cols.append(np.asarray(fn(ub, ids, cats))[:n_real])
+            scores[name] = np.concatenate(cols, axis=1)
+        return scores
+
+    # -- window production -----------------------------------------------
+
+    def window(self, t: int, n: int) -> WindowChunk:
+        if n == 0:
+            lay = build_compact_layout(self.chains,
+                                       n_items=self._n_items(),
+                                       expose=self.expose)
+            g_n, cap = lay.p_sorted.shape[0], lay.cap
+            return WindowChunk(
+                ctx=np.zeros((0, self.d_context), np.float32),
+                rows=np.zeros(0, np.int32),
+                tables={"p": np.zeros((g_n, 0, cap), np.int32),
+                        "ck": np.zeros((g_n, 0, cap), np.float32)},
+                users=np.zeros(0, np.int64))
+        users = self.arrivals(t, n)
+        ctx_parts, p_parts, ck_parts = [], [], []
+        for lo in range(0, n, self.chunk):
+            ids = users[lo:lo + self.chunk]
+            slab = self.world.user_slab(ids)
+            ctx_parts.append(slab.reward_context(np.arange(len(ids))))
+            scores = self._score_slab(slab, len(ids))
+            clicks = self.world.clicks_slab(ids, slab)
+            p, ck, _cap = _compact_group_tables(
+                scores, self._lay, clicks, expose=self.expose)
+            p_parts.append(p.astype(np.int32))
+            ck_parts.append(ck.astype(np.float32))
+        return WindowChunk(
+            ctx=np.concatenate(ctx_parts, axis=0),
+            rows=np.arange(n, dtype=np.int32),
+            tables={"p": np.concatenate(p_parts, axis=1),
+                    "ck": np.concatenate(ck_parts, axis=1)},
+            users=users)
+
+
+class TableReplaySource(RequestSource):
+    """Fixed replay over precomputed per-user tables.
+
+    The scoring-input tables (contexts + compact execution rows) are
+    computed ONCE - by a materialized ``CascadeServer`` or a prior
+    ``save`` - and windows gather per-arrival slices.  With
+    ``load(..., mmap=True)`` the tables stay on disk as memmapped
+    ``.npy`` files and only the rows a window touches page in, so
+    replaying a large fixed universe costs O(window), not O(U).
+
+    Built ``from_server`` over the same arrivals, the streamed path is
+    bit-identical to indexing the materialized universe: the chunk
+    tables are row-gathers of the server's own tables and the contexts
+    are the same array rows.
+    """
+
+    def __init__(self, ctx: np.ndarray, p_sorted: np.ndarray,
+                 clicks_sorted: np.ndarray, chains, *, n_items: int,
+                 expose: int, seed: int = 0):
+        if ctx.shape[0] != p_sorted.shape[1]:
+            raise ValueError(
+                f"ctx rows ({ctx.shape[0]}) must match table users "
+                f"({p_sorted.shape[1]})")
+        self.ctx = ctx
+        self.p_sorted = p_sorted
+        self.clicks_sorted = clicks_sorted
+        self.chains = chains
+        self.n_items = int(n_items)
+        self.expose = int(expose)
+        self.seed = int(seed)
+        self.n_users = int(ctx.shape[0])
+        lay = build_compact_layout(chains, n_items=self.n_items,
+                                   expose=self.expose)
+        if lay is None or lay.cap != p_sorted.shape[2]:
+            raise ValueError(
+                f"tables (cap={p_sorted.shape[2]}) do not match the "
+                f"chain set's compact layout at n_items={self.n_items}")
+
+    @classmethod
+    def from_server(cls, server, ctx: np.ndarray, *,
+                    seed: int = 0) -> "TableReplaySource":
+        """Replay source over a materialized CascadeServer's universe
+        (``ctx`` row u = the reward context of table row u)."""
+        if server.compact is None:
+            raise ValueError("from_server needs a CompactPlan server "
+                             "(the k3 cascade layout)")
+        return cls(np.asarray(ctx, np.float32),
+                   np.asarray(server.compact.p_sorted, np.int32),
+                   np.asarray(server.compact.clicks_sorted, np.float32),
+                   server.chains, n_items=server.clicks.shape[1],
+                   expose=server.compact.expose, seed=seed)
+
+    def _n_items(self) -> int:
+        return self.n_items
+
+    @property
+    def d_context(self) -> int:
+        return int(self.ctx.shape[1])
+
+    def window(self, t: int, n: int) -> WindowChunk:
+        users = self.arrivals(t, n)
+        return WindowChunk(
+            ctx=np.asarray(self.ctx[users], np.float32),
+            rows=np.arange(n, dtype=np.int32),
+            tables={"p": np.ascontiguousarray(self.p_sorted[:, users]),
+                    "ck": np.ascontiguousarray(
+                        self.clicks_sorted[:, users])},
+            users=users)
+
+    # -- on-disk (memmap) form -------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Write the tables as raw ``.npy`` (memmap-loadable) + meta."""
+        os.makedirs(path, exist_ok=True)
+        np.save(os.path.join(path, "ctx.npy"),
+                np.asarray(self.ctx, np.float32))
+        np.save(os.path.join(path, "p_sorted.npy"),
+                np.asarray(self.p_sorted, np.int32))
+        np.save(os.path.join(path, "clicks_sorted.npy"),
+                np.asarray(self.clicks_sorted, np.float32))
+        with open(os.path.join(path, "meta.json"), "w") as f:
+            json.dump({"expose": self.expose, "n_items": self.n_items,
+                       "n_users": self.n_users}, f)
+
+    @classmethod
+    def load(cls, path: str, chains, *, seed: int = 0,
+             mmap: bool = True) -> "TableReplaySource":
+        """Open a saved universe; ``mmap=True`` keeps tables on disk."""
+        mode = "r" if mmap else None
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        return cls(np.load(os.path.join(path, "ctx.npy"), mmap_mode=mode),
+                   np.load(os.path.join(path, "p_sorted.npy"),
+                           mmap_mode=mode),
+                   np.load(os.path.join(path, "clicks_sorted.npy"),
+                           mmap_mode=mode),
+                   chains, n_items=int(meta["n_items"]),
+                   expose=int(meta["expose"]), seed=seed)

@@ -136,6 +136,167 @@ def build_world(cfg: WorldConfig = WorldConfig()) -> World:
 
 
 # ---------------------------------------------------------------------------
+# Streaming world: users as a pure function of (seed, user id)
+# ---------------------------------------------------------------------------
+#
+# ``build_world`` materializes every user up front - including a (U, I)
+# affinity matrix for histories and population-rank field quantization -
+# which caps it at a few thousand users.  The streaming variant keeps
+# the SAME latent-utility click model and O(I) item side but derives
+# each user row from a counter-based hash RNG (splitmix64 -> uniforms ->
+# Box-Muller), so ANY slice of an unbounded user universe materializes
+# on demand in O(n * I), independent of cfg.n_users: rank quantization
+# becomes Gaussian-CDF quantization (same distribution, per-user
+# computable) and the history Gumbel noise is keyed per (user, item).
+# It is a DIFFERENT (larger) world than build_world's for the same
+# config - bitwise parity across the two generators is neither needed
+# nor claimed; streamed-vs-materialized serving parity is tested on
+# replay sources that share one world.
+
+
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer: a bijective avalanche on uint64 (overflow
+    IS the mod-2^64 arithmetic, so the warning is silenced)."""
+    x = np.asarray(x).astype(np.uint64, copy=True)
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint64(30)
+        x *= _M1
+        x ^= x >> np.uint64(27)
+        x *= _M2
+        x ^= x >> np.uint64(31)
+    return x
+
+
+def _hash_u64(seed: int, *streams) -> np.ndarray:
+    """Counter-based uint64 hash of (seed, *streams) - broadcasting.
+
+    Each stream is folded in through the splitmix64 finalizer, so any
+    coordinate change avalanches the output; streams broadcast against
+    each other (e.g. ``(ids[:, None], dims[None, :])`` -> (n, d))."""
+    with np.errstate(over="ignore"):
+        x = _mix64(np.uint64(seed) + _GAMMA)
+        for k, s in enumerate(streams):
+            s = np.asarray(s, np.uint64)
+            x = _mix64(x ^ (s * _GAMMA + np.uint64(2 * k + 1)))
+    return x
+
+
+def _hash_u01(seed: int, *streams) -> np.ndarray:
+    """Uniforms in [2^-53, 1): the top 53 bits of the hash."""
+    u = (_hash_u64(seed, *streams) >> np.uint64(11)).astype(np.float64)
+    return np.maximum(u * (2.0 ** -53), 2.0 ** -53)
+
+
+def _hash_normal(seed: int, *streams) -> np.ndarray:
+    """Standard normals via Box-Muller on two hashed uniform draws
+    (sub-stream ids 0/1 appended to the key)."""
+    u1 = _hash_u01(seed, *streams, 0)
+    u2 = _hash_u01(seed, *streams, 1)
+    return np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2)
+
+
+# hash key sub-stream ids (the leading stream of every per-user draw)
+_H_TASTE, _H_ACT, _H_HIST, _H_CLICK = 11, 12, 13, 14
+
+# activity reference for history length (~97.7th pct of lognormal(0,1));
+# build_world uses the realized population max, which a lazy generator
+# cannot see - a fixed distributional reference replaces it
+_ACT_REF = float(np.exp(2.0))
+
+
+@dataclass
+class StreamingWorld:
+    """Unbounded-U lazy world: the item side of ``World`` plus per-user
+    generation on demand.
+
+    ``user_slab(ids)`` returns a regular ``World`` whose arrays hold
+    exactly those users under LOCAL indices 0..n-1 (``click_prob``,
+    ``reward_context`` and the cascade-model feature batches all run on
+    the slab unchanged), and ``clicks_slab(ids)`` samples the (n, I)
+    ground-truth click realization - keyed per (user, item), so a user
+    arriving in two windows sees the same clicks, exactly like the
+    materialized world's once-per-(user, item) sampling.
+    """
+
+    cfg: WorldConfig
+    z_item: np.ndarray  # (I, dl)
+    popularity: np.ndarray  # (I,)
+    item_cat: np.ndarray  # (I,) int
+    field_proj: np.ndarray  # (dl, F) field projections
+    field_sigma: np.ndarray  # (F,) per-field projection std
+
+    @classmethod
+    def build(cls, cfg: WorldConfig) -> "StreamingWorld":
+        """O(I) item side from its own seed stream (independent of U)."""
+        rng = np.random.default_rng((cfg.seed, 0xC0FFEE))
+        z_item = rng.normal(size=(cfg.n_items, cfg.d_latent)) \
+            / np.sqrt(cfg.d_latent)
+        popularity = -np.log(1.0 + np.arange(cfg.n_items) / 50.0)
+        popularity = popularity - popularity.mean()
+        rng.shuffle(popularity)
+        proto = rng.normal(size=(cfg.n_cats, cfg.d_latent))
+        item_cat = np.argmax(z_item @ proto.T, axis=1).astype(np.int64)
+        proj = rng.normal(size=(cfg.d_latent, cfg.n_user_fields))
+        # z_user ~ N(0, I/dl), so q_f = z @ proj_f ~ N(0, |proj_f|^2/dl)
+        sigma = np.linalg.norm(proj, axis=0) / np.sqrt(cfg.d_latent)
+        return cls(cfg, z_item, popularity, item_cat, proj, sigma)
+
+    @property
+    def d_context(self) -> int:
+        return 3 + self.cfg.n_user_fields + self.cfg.d_latent
+
+    def user_slab(self, ids: np.ndarray) -> World:
+        """Materialize exactly these users as a World (local indices)."""
+        from scipy.special import ndtr  # Phi, vectorized
+        cfg = self.cfg
+        ids = np.asarray(ids, np.int64)
+        n = len(ids)
+        z = _hash_normal(cfg.seed, _H_TASTE, ids[:, None],
+                         np.arange(cfg.d_latent)[None, :]) \
+            / np.sqrt(cfg.d_latent)
+        activity = np.exp(_hash_normal(cfg.seed, _H_ACT, ids))
+        # Gaussian-CDF quantization: same marginal as build_world's
+        # population ranks, but a pure per-user function
+        q = ndtr((z * np.sqrt(cfg.d_latent)) @ self.field_proj
+                 / (self.field_sigma[None, :] * np.sqrt(cfg.d_latent)))
+        user_fields = np.minimum((q * cfg.user_field_vocab).astype(np.int64),
+                                 cfg.user_field_vocab - 1)
+        user_fields += np.arange(cfg.n_user_fields) * cfg.user_field_vocab
+        # histories: affinity-proportional, Gumbel keyed per (user, item)
+        aff = z @ self.z_item.T + self.popularity[None, :]
+        gum = -np.log(-np.log(_hash_u01(
+            cfg.seed, _H_HIST, ids[:, None],
+            np.arange(cfg.n_items)[None, :])))
+        order = np.argsort(-(aff * 3.0 + gum), axis=1, kind="stable")
+        lengths = np.clip((activity / _ACT_REF * cfg.hist_len * 2)
+                          .astype(int), 3, cfg.hist_len)
+        hist_ids = order[:, :cfg.hist_len].astype(np.int64)
+        hist_mask = (np.arange(cfg.hist_len)[None, :]
+                     < lengths[:, None]).astype(np.float32)
+        hist_ids[hist_mask == 0.0] = 0
+        return World(cfg, z, self.z_item, activity, self.popularity,
+                     self.item_cat, user_fields, hist_ids, hist_mask)
+
+    def clicks_slab(self, ids: np.ndarray,
+                    slab: World | None = None) -> np.ndarray:
+        """(n, I) ground-truth clicks, keyed per (user, item)."""
+        cfg = self.cfg
+        ids = np.asarray(ids, np.int64)
+        slab = slab if slab is not None else self.user_slab(ids)
+        items = np.broadcast_to(np.arange(cfg.n_items),
+                                (len(ids), cfg.n_items))
+        p = slab.click_prob(np.arange(len(ids)), items)
+        u = _hash_u01(cfg.seed, _H_CLICK, ids[:, None],
+                      np.arange(cfg.n_items)[None, :])
+        return (u < p).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
 # Paper split (§5.1): 50% cascade-model train / 25% validation /
 # 22.5% reward-model sample generation / 2.5% final eval.  At mini scale
 # a 2.5% eval slice is a handful of users and the realized-revenue

@@ -36,7 +36,8 @@ from repro.core.pfec import pfec_report
 from repro.core.primal_dual import allocate, dual_bisect
 from repro.core.reward_model import (RewardModelConfig, chain_label_norm,
                                      denormalize_rewards, field_rce,
-                                     reward_matrix, reward_model_init)
+                                     reward_matrix, reward_matrix_chunked,
+                                     reward_model_init)
 from repro.data.synthetic import (World, WorldConfig, build_world, ctr_batch,
                                   split_users)
 from repro.models.recsys import dien, din, dssm, ydnn
@@ -299,9 +300,11 @@ def train_reward_model(exp: Experiment, *, recursive: bool = True,
 
 
 def predicted_rewards(exp: Experiment, params, rcfg, ctx) -> np.ndarray:
-    r = reward_matrix(params, rcfg, jnp.asarray(ctx),
-                      jnp.asarray(exp.chains.model_onehot),
-                      jnp.asarray(exp.chains.scale_multihot))
+    # chunked: offline scoring stays O(chunk * J) however many users the
+    # eval slice carries (bitwise equal to the full-matrix call per row)
+    r = reward_matrix_chunked(params, rcfg, ctx,
+                              jnp.asarray(exp.chains.model_onehot),
+                              jnp.asarray(exp.chains.scale_multihot))
     return np.asarray(denormalize_rewards(params, np.asarray(r)))
 
 

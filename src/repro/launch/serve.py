@@ -70,10 +70,19 @@ Scenario flags
                       plus every georegions knob
 --shards N            shard_map the pass over an N-way request mesh
                       (composes with tenants, georegions, geotenants)
+--source table        index the materialized eval universe (default)
+--source generated    stream windows from an unbounded hash-generated
+                      user universe (--users sets its size; no (U, J)
+                      table ever materializes - each window is scored
+                      on the fly by a data.request_source
+                      GeneratedSource; composes with every scenario)
+--source memmap       replay fixed precomputed tables from memmapped
+                      .npy files (saved to --replay-dir on first use):
+                      only the rows a window touches page in
 --legacy              run the seed's host loop (scoring + NumPy guard +
                       separate serve kernel) instead, for comparison
                       (with --scenario carbon: the CarbonBudgetController
-                      host loop)
+                      host loop; table source only)
 
 Reports per-window spend/lambda/downgrades/revenue, host dispatch time,
 and the final PFEC summary.
@@ -441,6 +450,18 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help=">0: shard_map over an N-way request mesh")
     ap.add_argument("--small", action="store_true", help="CI-sized world")
+    ap.add_argument("--source", default="table",
+                    choices=("table", "generated", "memmap"),
+                    help="request source: index the materialized eval "
+                         "universe, stream a hash-generated one, or "
+                         "replay memmapped tables")
+    ap.add_argument("--users", type=int, default=100_000,
+                    help="--source generated: size of the streamed "
+                         "user universe")
+    ap.add_argument("--replay-dir", default=None,
+                    help="--source memmap: directory for the saved "
+                         ".npy universe (default: "
+                         "results/replay_universe)")
     ap.add_argument("--legacy", action="store_true",
                     help="run the seed's host loop instead")
     ap.add_argument("--ci-trace", default="diurnal",
@@ -501,12 +522,48 @@ def main():
     sc = TrafficScenario(args.scenario, args.windows, args.requests,
                          spike_mult=args.spike, n_tenants=n_tenants)
     sizes = sc.window_sizes()
-    rng = np.random.default_rng(0)
-    n_eval = exp.ctx_eval.shape[0]
 
-    def sample_window(t, n):
-        rows = rng.integers(0, n_eval, n)
-        return exp.ctx_eval[rows], rows
+    if args.source != "table":
+        if args.legacy:
+            raise SystemExit("--legacy indexes the materialized server; "
+                             "the streaming --source forms have no "
+                             "legacy loop")
+        from repro.data.request_source import (GeneratedSource,
+                                               TableReplaySource)
+        if args.source == "generated":
+            from dataclasses import replace
+
+            from repro.data.synthetic import StreamingWorld
+            wcfg = replace(exp.cfg.world, n_users=args.users)
+            source = GeneratedSource(StreamingWorld.build(wcfg),
+                                     exp.models, chains,
+                                     expose=exp.cfg.expose)
+            print(f"[serve] source: generated stream over "
+                  f"U={args.users:,} hash-materialized users (no per-"
+                  f"user tables held)")
+        else:
+            import os
+            path = args.replay_dir or os.path.join(
+                os.path.dirname(__file__), "..", "..", "..", "results",
+                "replay_universe")
+            if not os.path.exists(os.path.join(path, "meta.json")):
+                print(f"[serve] saving replay universe -> {path}")
+                TableReplaySource.from_server(
+                    server, exp.ctx_eval).save(path)
+            source = TableReplaySource.load(path, chains)
+            print(f"[serve] source: memmapped replay of "
+                  f"U={source.n_users:,} users from {path}")
+        # streaming pipelines build over the layout-only universe; the
+        # source plugs straight into run_stream (duck-typed .window)
+        server = source.universe
+        sample_window = source
+    else:
+        rng = np.random.default_rng(0)
+        n_eval = exp.ctx_eval.shape[0]
+
+        def sample_window(t, n):
+            rows = rng.integers(0, n_eval, n)
+            return exp.ctx_eval[rows], rows
 
     mesh = None
     if args.shards > 0 and not args.legacy:

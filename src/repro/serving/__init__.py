@@ -25,6 +25,18 @@ A map of the unified allocator core and the layers over it:
       serving regions), each constraint walking only its own requests.
       ``downgrade_guard_chain`` sequences several constraint FAMILIES
       (tenant budgets THEN region budgets) over one window.
+  data.request_source     where REQUESTS come from.  A ``RequestSource``
+      produces each window on demand as a ``WindowChunk`` - sampled
+      arrivals, reward contexts, LOCAL rows and a per-window (G, n,
+      cap) slice of compact execution tables - so host memory scales
+      with the window, never the universe.  ``GeneratedSource`` streams
+      an unbounded hash-generated user world
+      (``data.synthetic.StreamingWorld``, U >= 100k); a
+      ``TableReplaySource`` replays fixed precomputed tables (in
+      memory or memmapped ``.npy``), bitwise identical to indexing the
+      materialized ``CascadeServer`` it was built from.
+      ``source.universe`` is the layout-only server handle a streaming
+      pipeline is constructed over.
   serving.pipeline        ``ServingPipeline.from_spec``: reward scoring
       (model-prefix grouped), priced allocation, the fused guard,
       CompactPlan cascade execution and the nearline dual update in ONE
@@ -32,35 +44,50 @@ A map of the unified allocator core and the layers over it:
       shared/priced; geo regions; and the combined tenant x region
       system (a (T + R,) price vector where a tenant-t request pays
       (lam_tenant[t] + lam_region[r]) * c_{j,r}, per-(tenant, region)
-      spends in ``WindowResult.tr_spend``).  Degenerate region ties are
-      rounded by the exact flow split (``RegionAxis(split="flow")``;
-      the deprecated ``region_jitter`` maps to it).  All modes compose
-      with the ("req",) shard_map mesh, the padded window buckets and
-      the CI-forecast dual warm-start (``dual_budget``/
-      ``dual_cost_scale``).  The legacy keyword constructor survives as
-      a thin shim over ``spec_from_legacy``.
+      spends in ``WindowResult.tr_spend``).  Tables are a TRACED
+      argument: ``serve_window(..., tables=chunk.tables)`` gathers
+      within a RequestSource chunk instead of a materialized user
+      axis.  Per-window budgets/scales take positional vectors or
+      NAMED dicts keyed by ``spec.compile().budget_names`` /
+      ``scale_names``.  Degenerate region ties are rounded by the
+      exact flow split (``RegionAxis(split="flow")``; the deprecated
+      ``region_jitter`` maps to it).  All modes compose with the
+      ("req",) shard_map mesh, bucketed window padding (``bucketing=
+      "linear"|"pow2"``; pow2 keeps the compiled-shape count
+      logarithmic under traffic swings) and the CI-forecast dual
+      warm-start (``dual_budget``/``dual_cost_scale``).
+      ``WindowResult.compiles``/``bucket`` surface per-window jit
+      cache misses - zero in steady state, by construction.  The
+      legacy keyword constructor survives as a thin shim over
+      ``spec_from_legacy``.
   serving.stream          double-buffered streaming driver (host
-      prepares window t+1 while the device executes t) + the
+      prepares window t+1 - a RequestSource chunk or a sampled slice
+      of a materialized universe - while the device executes t) + the
       ``SCENARIOS`` registry - ONE dict of per-window-size builders
       (constant, spike, diurnal, tenants, carbon, georegions,
-      geotenants) from which the valid-names error and the
+      geotenants, swing) from which the valid-names error and the
       ``launch/serve.py --scenario`` choices both derive; per-window
       budget/scale traces and ``forecast=True`` thread time-varying
-      carbon constraints through the pipeline without recompiles.
+      carbon constraints through the pipeline without recompiles;
+      ``StreamStats.steady_compiles`` audits the zero-recompile
+      guarantee over a finished run.
   carbon.*                the gCO2e side: intensity traces, the
       CarbonBudget / CarbonBudgetController wrappers (both
       spec-buildable via ``from_spec``), and the CarbonLedger
       (operational + embodied metering, per-region attribution for
       geo serving).
 
-``launch/serve.py`` is the CLI front end (--scenario ... --tenant-mode
-shared|priced --geo-split flow|argmax --shards N); benchmarks:
-``bench_serve.py`` (fused pass vs legacy loop, BENCH_serve.json),
-``bench_carbon.py`` (carbon-aware allocator, BENCH_carbon.json),
-``bench_geo.py`` (two-region router, BENCH_geo.json) and
-``bench_geotenants.py`` (the combined tenant x region spec vs the
-single-axis arms + the exact-dual pipeline gate,
-BENCH_geotenants.json).
+``launch/serve.py`` is the CLI front end (--scenario ... --source
+table|generated|memmap --tenant-mode shared|priced --geo-split
+flow|argmax --shards N); benchmarks: ``bench_serve.py`` (fused pass vs
+legacy loop, BENCH_serve.json), ``bench_carbon.py`` (carbon-aware
+allocator, BENCH_carbon.json), ``bench_geo.py`` (two-region router,
+BENCH_geo.json), ``bench_geotenants.py`` (the combined tenant x region
+spec vs the single-axis arms + the exact-dual pipeline gate,
+BENCH_geotenants.json) and ``bench_scale.py`` (the streamed geotenants
+pipeline at U >= 100k under 10x-1000x swings: requests/sec, p99 window
+latency, flat peak RSS w.r.t. U and zero steady-state recompiles,
+BENCH_scale.json).
 """
 import importlib
 

@@ -142,6 +142,8 @@ class WindowResult:
     region_spend: jnp.ndarray | None = None  # (R,) per-region spend
     k_budget: np.ndarray | None = None  # per-constraint budgets
     tr_spend: jnp.ndarray | None = None  # (T, R) per-(tenant, region)
+    compiles: int = 0  # jit cache misses this window (0 = warm bucket)
+    bucket: tuple | None = None  # the (b, padded, chunked) shape key
 
     @property
     def decisions_np(self) -> np.ndarray:
@@ -195,6 +197,7 @@ class ServingPipeline:
                  reward_cfg: RewardModelConfig, budget_per_window: float,
                  *, dual_cfg: DualDescentConfig | None = None,
                  guard: bool = True, mesh=None, pad_quantum: int = 32,
+                 bucketing: str = "linear",
                  tenant_budgets=None, tenant_mode: str = "shared",
                  n_regions: int | None = None, region_jitter: float = 0.0,
                  lam_init: float = 0.0, ledger=None,
@@ -229,12 +232,21 @@ class ServingPipeline:
         if self.tenant_budgets is not None:
             q = math.lcm(q, len(self.tenant_budgets))
         self.pad_quantum = q
+        if bucketing not in ("linear", "pow2"):
+            raise ValueError(f"bucketing must be 'linear' or 'pow2', "
+                             f"got {bucketing!r}")
+        self.bucketing = bucketing
 
         chains = self.chains
         self._prefix_plan = chain_prefix_plan(chains.chain_idx[:, :, 0])
         self._sh = jnp.asarray(chains.scale_multihot)
         self._costs = jnp.asarray(chains.costs, jnp.float32)
         self._cheap = int(chains.cheapest())
+        # a streaming universe (``data.request_source.StreamUniverse``)
+        # carries the compact LAYOUT only - every serve_window call must
+        # bring its own chunk tables
+        self._stream_only = bool(getattr(server, "stream_only", False))
+        self._cap = None
         if server.compact is not None:
             c = server.compact
             self._tables = {
@@ -244,6 +256,7 @@ class ServingPipeline:
                 "n3_of": jnp.asarray(c.n3_of_chain),
             }
             self._expose = c.expose
+            self._cap = int(c.cap)
         else:  # generic layout: the lax.scan kernel path
             self._tables = {
                 "orders": server._orders, "ranks": server._ranks,
@@ -260,19 +273,22 @@ class ServingPipeline:
             self.lam = jnp.float32(lam_init)
         self.stats: list[WindowResult] = []
         self._fns: dict = {}
+        self._built: list = []  # every jitted fn ever built (compile count)
 
     @classmethod
     def from_spec(cls, server: CascadeServer, reward_params: dict,
                   reward_cfg: RewardModelConfig, spec: ConstraintSpec,
                   *, dual_cfg: DualDescentConfig | None = None,
                   guard: bool = True, mesh=None, pad_quantum: int = 32,
-                  lam_init: float = 0.0, ledger=None) -> "ServingPipeline":
+                  bucketing: str = "linear", lam_init: float = 0.0,
+                  ledger=None) -> "ServingPipeline":
         """Build the pipeline from a declarative ConstraintSpec (the
         compiled total budget seeds ``budget_per_window``)."""
         return cls(server, reward_params, reward_cfg,
                    spec.compile().total_budget, dual_cfg=dual_cfg,
                    guard=guard, mesh=mesh, pad_quantum=pad_quantum,
-                   lam_init=lam_init, ledger=ledger, spec=spec)
+                   bucketing=bucketing, lam_init=lam_init, ledger=ledger,
+                   spec=spec)
 
     # -- fused pass -----------------------------------------------------------
 
@@ -709,30 +725,107 @@ class ServingPipeline:
         return jax.jit(fn)
 
     def _bucket(self, n: int) -> int:
+        """Pad target for an n-request window.
+
+        ``linear``: the next multiple of ``pad_quantum`` (historical -
+        tight padding, but a noisy size distribution visits many
+        buckets).  ``pow2``: the next power-of-two MULTIPLE of the
+        quantum, so arbitrary 10x-1000x traffic swings land on
+        O(log(max/min)) compiled shapes - the zero-steady-state-
+        recompile guarantee bench_scale gates on.
+        """
         q = self.pad_quantum
-        return max(q, ((n + q - 1) // q) * q)
+        b = max(q, ((n + q - 1) // q) * q)
+        if self.bucketing == "pow2":
+            b = q * (1 << max(0, (b + q - 1) // q - 1).bit_length())
+        return b
+
+    def compile_count(self) -> int:
+        """Total jit cache entries (XLA traces) across every window fn
+        this pipeline ever built - the delta per window lands in
+        ``WindowResult.compiles``; steady-state traffic on warm buckets
+        must hold it at zero."""
+        total = 0
+        for f in self._built:
+            try:
+                total += int(f._cache_size())
+            except AttributeError:  # older jax: count builds, not traces
+                total += 1
+        return total
 
     # -- public API -----------------------------------------------------------
+
+    def _named_vector(self, value, names: tuple, what: str):
+        """A named per-axis dict -> the canonical vector (scalar when
+        the axis is the single global one); non-dicts pass through."""
+        if not isinstance(value, dict):
+            return value
+        missing = [k for k in names if k not in value]
+        extra = [k for k in value if k not in names]
+        if missing or extra:
+            raise ValueError(
+                f"named {what} keys must be exactly {list(names)} "
+                f"(missing {missing}, unknown {extra})")
+        vec = np.asarray([float(value[k]) for k in names], np.float32)
+        return float(vec[0]) if names == ("global",) else vec
+
+    def _pad_chunk_tables(self, tables: dict, n: int, b: int) -> dict:
+        """A WindowChunk's (G, n, cap) tables -> the (G, b, cap) traced
+        tables of this window.  Padded REQUESTS gather chunk row 0 and
+        are valid-masked (exactly like the materialized path's padding
+        rows), so the sentinel fill rows here are never read - they only
+        keep the traced shape bucket-stable."""
+        if "p" not in self._tables:
+            raise ValueError("per-window chunk tables need the compact "
+                             "(k3) layout; this pipeline runs the "
+                             "generic scan kernel")
+        p = np.asarray(tables["p"], np.int32)
+        ck = np.asarray(tables["ck"], np.float32)
+        if p.shape[1] != n:
+            raise ValueError(f"chunk tables carry {p.shape[1]} rows for "
+                             f"a {n}-request window")
+        if b != n:
+            g_n, _, cap = p.shape
+            p = np.concatenate(
+                [p, np.full((g_n, b - n, cap), self._cap, np.int32)],
+                axis=1)
+            ck = np.concatenate(
+                [ck, np.zeros((g_n, b - n, cap), np.float32)], axis=1)
+        return {"p": jnp.asarray(p), "ck": jnp.asarray(ck),
+                "g_of": self._tables["g_of"],
+                "n3_of": self._tables["n3_of"]}
 
     def serve_window(self, ctx: np.ndarray, rows: np.ndarray, *,
                      lam=None, update_lam: bool = True, budget=None,
                      cost_scale=None, dual_budget=None,
-                     dual_cost_scale=None) -> WindowResult:
+                     dual_cost_scale=None,
+                     tables: dict | None = None) -> WindowResult:
         """Serve one traffic window.
 
         ctx (n, d_context) raw contexts, rows (n,) user indices into the
-        server's score tables.  Decisions use ``lam`` (default: the
-        pipeline's nearline price(s), i.e. lambda_{t-1}); the pass then
-        publishes lambda_t unless ``update_lam=False``.
+        server's score tables - or, with ``tables`` (a ``WindowChunk``'s
+        per-window (G, n, cap) compact tables), LOCAL chunk indices
+        0..n-1: the fused pass then gathers within the chunk instead of
+        a materialized user axis, which is how a streaming
+        ``RequestSource`` serves unbounded universes (REQUIRED when the
+        pipeline was built over a ``StreamUniverse``).  Decisions use
+        ``lam`` (default: the pipeline's nearline price(s), i.e.
+        lambda_{t-1}); the pass then publishes lambda_t unless
+        ``update_lam=False``.
 
         ``budget`` overrides this window's budget (scalar; (T,) with
         tenant blocks; (R,) in geo mode and (T + R,) - tenant grams
         first, region grams after - in the combined mode, REQUIRED
-        there together with an (R,) ``cost_scale``).  ``cost_scale``
-        re-denominates the window's costs as ``costs * cost_scale`` -
-        carbon pricing passes kappa*CI(t) [gCO2e/FLOP] here together
-        with a gCO2e ``budget``, making the dual price reward-per-gram.
-        All are traced, so time-varying values never recompile.
+        there together with an (R,) ``cost_scale``).  Both accept the
+        NAMED form: a dict keyed by ``spec.compile().budget_names`` /
+        ``.scale_names`` (the ``k_names`` constraint order) instead of
+        a positional vector - the vector form stays bit-identical.
+        ``cost_scale`` re-denominates the window's costs as
+        ``costs * cost_scale`` - carbon pricing passes kappa*CI(t)
+        [gCO2e/FLOP] here together with a gCO2e ``budget``, making the
+        dual price reward-per-gram.  All are traced, so time-varying
+        values never recompile; ``WindowResult.compiles`` reports this
+        window's jit cache misses (nonzero only on a cold bucket).
 
         ``dual_budget``/``dual_cost_scale`` aim the NEARLINE update at a
         different (budget, scale) than the online pass - pass the NEXT
@@ -742,6 +835,18 @@ class ServingPipeline:
         n = len(rows)
         ctx = np.asarray(ctx, np.float32)
         rows = np.asarray(rows, np.int32)
+        if self._stream_only and tables is None and n:
+            raise ValueError(
+                "this pipeline serves a streaming universe: every "
+                "window must carry its RequestSource chunk tables "
+                "(serve_window(..., tables=chunk.tables))")
+        bn = self._cs.budget_names
+        budget = self._named_vector(budget, bn, "budget")
+        dual_budget = self._named_vector(dual_budget, bn, "dual_budget")
+        sn = self._cs.scale_names
+        cost_scale = self._named_vector(cost_scale, sn, "cost_scale")
+        dual_cost_scale = self._named_vector(dual_cost_scale, sn,
+                                             "dual_cost_scale")
         cs = self._cs
         mode = cs.mode
         geo = mode == "geo"
@@ -837,6 +942,11 @@ class ServingPipeline:
             ctx, rows = ctx_b.reshape(b, -1), rows_b.reshape(b)
             valid = valid.reshape(b)
             k_of = np.repeat(np.arange(t_n, dtype=np.int32), bt)
+            # padded position -> original request index (per-block pad)
+            perm = np.zeros((t_n, bt), np.intp)
+            perm[:, :n_t] = (np.arange(t_n)[:, None] * n_t
+                             + np.arange(n_t)[None, :])
+            perm = perm.reshape(b)
         else:
             b = self._bucket(n)
             if b != n:
@@ -845,11 +955,21 @@ class ServingPipeline:
                 rows = np.concatenate([rows, np.zeros(b - n, np.int32)])
             valid = np.zeros(b, np.float32)
             valid[:n] = 1.0
-        key = (b, b != n)
+            perm = np.concatenate(
+                [np.arange(n, dtype=np.intp), np.zeros(b - n, np.intp)])
+        chunked = tables is not None
+        if chunked:
+            run_tables = self._pad_chunk_tables(tables, n, b)
+            rows = perm.astype(np.int32)  # gather within the padded chunk
+        else:
+            run_tables = self._tables
+        key = (b, b != n, chunked)
         if key not in self._fns:
             self._fns[key] = (self._build_main_fn(b, b != n),
                               self._build_dual_fn(b, b != n))
+            self._built.extend(self._fns[key])
         main_fn, dual_fn = self._fns[key]
+        c0 = self.compile_count()
         if lam is None:
             lam_in = self.lam
         else:
@@ -872,7 +992,7 @@ class ServingPipeline:
         else:
             bud_j, sc_j = jnp.float32(bud), jnp.float32(sc)
             args = (lam_in, bud_j, sc_j)
-        out = main_fn(self.reward_params, self._tables,
+        out = main_fn(self.reward_params, run_tables,
                       jnp.asarray(ctx), jnp.asarray(rows, jnp.int32),
                       valid_j, *args)
         (rewards, dec, rev, spend, flops, dg, t_spend, regions,
@@ -925,7 +1045,8 @@ class ServingPipeline:
             downgraded=dg, valid=valid, tenant_spend=t_spend, flops=flops,
             cost_scale=sc, regions=regions, region_spend=r_spend,
             k_budget=None if bud_vec is None else np.array(bud_vec),
-            tr_spend=tr_spend)
+            tr_spend=tr_spend, compiles=self.compile_count() - c0,
+            bucket=key)
         self.stats.append(res)
         if self.ledger is not None:
             self.ledger.record_result(res)

@@ -308,6 +308,37 @@ class CompiledSpec:
             return self.tenants.n
         return 1
 
+    def _region_names(self) -> list[str]:
+        r_names = self.regions.names or tuple(
+            f"region[{r}]" for r in range((self.regions.n)))
+        return list(r_names)
+
+    @property
+    def budget_names(self) -> tuple[str, ...]:
+        """Axis names of the per-window ``budget`` vector, in positional
+        order (the NAMED serve_window form keys a dict by these).  Equal
+        to ``k_names`` in the fully priced modes; a superset when
+        tenants share one price (every tenant still has a budget entry
+        even though none has its own price); ``("global",)`` for the
+        plain scalar mode."""
+        if self.mode == "geotenants":
+            return tuple([f"tenant[{t}]" for t in range(self.tenants.n)]
+                         + self._region_names())
+        if self.mode == "geo":
+            return tuple(self._region_names())
+        if self.mode == "tenants":
+            return tuple(f"tenant[{t}]" for t in range(self.tenants.n))
+        return ("global",)
+
+    @property
+    def scale_names(self) -> tuple[str, ...]:
+        """Axis names of the per-window ``cost_scale`` vector (regions
+        carry per-region carbon intensities; every other mode scales all
+        costs by one scalar)."""
+        if self.regions is not None:
+            return tuple(self._region_names())
+        return ("global",)
+
     # -- core-structure builders (jnp, trace-time) -------------------------
     # These run INSIDE the jitted window pass; they emit exactly the ops
     # the pre-spec pipeline emitted for the single-axis modes, so the

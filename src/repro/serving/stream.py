@@ -112,6 +112,19 @@ def _geotenants_windows(sc: TrafficScenario) -> list[int]:
     return _diurnal_windows(sc)
 
 
+def _swing_windows(sc: TrafficScenario) -> list[int]:
+    """Decade-ladder traffic swings: window sizes cycle through
+    ``n_base`` x {1, 10, 100, ...} up to ``spike_mult`` (so
+    spike_mult=1000 exercises 4 decades), the bench_scale protocol for
+    proving the bucketed-padding jit cache absorbs 10x-1000x swings
+    with ZERO steady-state recompiles (``bucketing='pow2'`` keeps the
+    compiled-shape count logarithmic in the swing)."""
+    decades = max(1, int(math.log10(max(10.0, sc.spike_mult))) + 1)
+    mults = [10.0 ** d for d in range(decades)]
+    return [int(sc.n_base * mults[t % decades])
+            for t in range(sc.n_windows)]
+
+
 # The ONE registry of traffic scenarios: name -> per-window size
 # builder.  launch/serve.py's --scenario choices and the unknown-name
 # error below both derive from these keys; each builder's docstring
@@ -124,6 +137,7 @@ SCENARIOS: dict = {
     "carbon": _carbon_windows,
     "georegions": _georegions_windows,
     "geotenants": _geotenants_windows,
+    "swing": _swing_windows,
 }
 
 
@@ -169,20 +183,50 @@ class StreamStats:
             worst = max(worst, float(r.spend) / cap - 1.0)
         return worst
 
+    @property
+    def compiles(self) -> list[int]:
+        """Per-window jit cache misses (WindowResult.compiles)."""
+        return [int(r.compiles) for r in self.windows]
+
+    @property
+    def steady_compiles(self) -> int:
+        """Cache misses in STEADY STATE: total compiles in windows
+        whose padding bucket was already served earlier in the run.
+        Bucketed padding promises this is ZERO however traffic swings -
+        every shape compiles once, on its first appearance."""
+        seen: set = set()
+        steady = 0
+        for r in self.windows:
+            if r.bucket in seen:
+                steady += int(r.compiles)
+            seen.add(r.bucket)
+        return steady
+
 
 def run_stream(pipeline: ServingPipeline, sizes: list[int],
-               sample_window, *, lam_trace=None, budget_trace=None,
+               source, *, lam_trace=None, budget_trace=None,
                scale_trace=None, forecast: bool = False) -> StreamStats:
     """Drive the pipeline through ``sizes``, double-buffering host prep.
 
-    sample_window(t, n) -> (ctx (n, d), rows (n,)) produces window t's
-    arrivals; it runs while the device executes window t-1.  lam_trace
-    optionally pins the per-window entry price (parity testing);
-    budget_trace / scale_trace set each window's budget and cost scale
-    (e.g. a ``CarbonBudget.schedule``'s grams + kappa*CI(t) columns; in
-    geo mode each entry is the (R,) per-region vector, in the combined
-    tenant x region mode the (T + R,) concatenation - tenant grams
-    first) - all are traced by the pipeline, so they never recompile.
+    ``source`` produces each window's arrivals and runs while the
+    device executes the previous window.  Two forms:
+
+    - a ``data.request_source.RequestSource`` (anything with a
+      ``.window(t, n)`` method): each window's ``WindowChunk`` carries
+      freshly generated/replayed contexts, LOCAL rows and per-chunk
+      score tables, which ``serve_window(..., tables=...)`` gathers
+      in-window - no (U, J) universe ever materializes on the device.
+    - a plain callable ``sample_window(t, n) -> (ctx (n, d), rows
+      (n,))`` indexing a materialized server (the legacy form).
+
+    lam_trace optionally pins the per-window entry price (parity
+    testing); budget_trace / scale_trace set each window's budget and
+    cost scale (e.g. a ``CarbonBudget.schedule``'s grams + kappa*CI(t)
+    columns; in geo mode each entry is the (R,) per-region vector, in
+    the combined tenant x region mode the (T + R,) concatenation -
+    tenant grams first; each entry may also be the NAMED dict form
+    keyed by ``spec.compile().budget_names``) - all are traced by the
+    pipeline, so they never recompile.
 
     ``forecast=True`` is the CI-forecast warm-start for the nearline
     dual update: window t's price update runs against window t+1's
@@ -192,18 +236,27 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
     window (the lambda-lag gap benchmarked in bench_carbon.py).  With
     constant traces this is a bit-exact no-op.
     """
+    streaming = hasattr(source, "window")
+
+    def _prep(t: int, n: int):
+        if streaming:
+            chunk = source.window(t, n)
+            return chunk.ctx, chunk.rows, chunk.tables
+        ctx, rows = source(t, n)
+        return ctx, rows, None
+
     t0 = time.perf_counter()
     dispatch_ms: list[float] = []
     results: list[WindowResult] = []
-    nxt = sample_window(0, sizes[0])
+    nxt = _prep(0, sizes[0])
     last = len(sizes) - 1
     for t, n in enumerate(sizes):
-        ctx, rows = nxt
+        ctx, rows, tables = nxt
         d0 = time.perf_counter()
         lam = None if lam_trace is None else lam_trace[t]
         t_next = min(t + 1, last)  # final window: nothing left to aim at
         results.append(pipeline.serve_window(
-            ctx, rows, lam=lam,
+            ctx, rows, lam=lam, tables=tables,
             budget=None if budget_trace is None else budget_trace[t],
             cost_scale=None if scale_trace is None else scale_trace[t],
             dual_budget=(budget_trace[t_next]
@@ -214,7 +267,7 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
                              else None)))
         dispatch_ms.append((time.perf_counter() - d0) * 1e3)
         if t + 1 < len(sizes):  # prep t+1 while the device runs t
-            nxt = sample_window(t + 1, sizes[t + 1])
+            nxt = _prep(t + 1, sizes[t + 1])
     for r in results:  # drain: force every window's device work
         r.revenue_np
     return StreamStats(windows=results, sizes=list(sizes),
