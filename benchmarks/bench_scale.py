@@ -11,9 +11,17 @@ jitted pass) from a ``GeneratedSource`` - every window generated,
 scored and compacted on the fly - and measures what the streaming
 refactor claims:
 
-  * requests/sec end-to-end (double-buffered ``run_stream``: window
-    t+1's chunk is generated while the device executes window t) and
-    the serve-only window latency (p50/p99, host-blocked);
+  * requests/sec end-to-end (prefetched ``run_stream``: a background
+    worker builds windows ahead of the serving thread; tables compact
+    ON DEVICE and the dual chain runs donated) and the serve-only
+    window latency (p50/p99, host-blocked), with a per-run
+    prep/stall/h2d breakdown;
+  * the same big universe through the exact PR 6 path (host table
+    compaction, sequential prep, undonated dual) - bitwise-identical
+    decisions, a host->device transfer comparison, and a >= 2x
+    throughput gate on full-size runs with >= 4 cores (the overlap
+    claim needs parallel hardware; below that the speedup is
+    report-only, like ci.yml skipping wall-clock speedup asserts);
   * peak host RSS at a small universe vs U >= 100k under an IDENTICAL
     window schedule - the gate asserts the delta stays under
     --rss-gate-mb, i.e. nothing anywhere allocates O(U) (for scale,
@@ -145,10 +153,17 @@ def _parity_gate(exp, server, params, rcfg, *, windows=6, base=48,
 
 
 def _swing_run(exp, params, rcfg, *, n_users, sizes, lat_sizes,
-               budget_frac=0.5, chunk=512) -> dict:
-    """One streamed geotenants run at ``n_users``: a double-buffered
+               budget_frac=0.5, chunk=512, device_tables=True,
+               prefetch=2, donate=True):
+    """One streamed geotenants run at ``n_users``: a prefetched
     throughput pass over ``sizes``, then a host-blocked latency pass
-    over ``lat_sizes`` on the same warm pipeline."""
+    over ``lat_sizes`` on the same warm pipeline.
+
+    ``device_tables=False, prefetch=0, donate=False`` reproduces the
+    PR 6 serving path exactly (host table compaction, sequential
+    double-buffered prep, undonated dual chain) - the baseline the
+    zero-stall claim is measured against.  Returns ``(metrics,
+    stream_stats)`` so callers can bitwise-compare the two modes."""
     import jax
 
     from dataclasses import replace
@@ -162,30 +177,37 @@ def _swing_run(exp, params, rcfg, *, n_users, sizes, lat_sizes,
     wcfg = replace(exp.cfg.world, n_users=n_users)
     gen = GeneratedSource(StreamingWorld.build(wcfg), exp.models,
                           chains, expose=exp.cfg.expose, seed=5,
-                          chunk=chunk)
+                          chunk=chunk, device_tables=device_tables)
     spec, traces = _geotenants_spec(chains, sizes[0], budget_frac)
     pipe = ServingPipeline.from_spec(gen.universe, params, rcfg, spec,
-                                     bucketing="pow2")
+                                     bucketing="pow2",
+                                     donate_dual=donate)
     src = _MeteredSource(gen)
     bt, st_ = traces(sizes)
     rss0 = _vm_mb()
-    st = run_stream(pipe, sizes, src, budget_trace=bt, scale_trace=st_)
+    st = run_stream(pipe, sizes, src, budget_trace=bt, scale_trace=st_,
+                    prefetch=prefetch)
     total_req = int(sum(sizes))
 
     # serve-only latency: chunk built first, then submit -> results
-    # host-ready (the nearline price chains on-device, off this path)
+    # host-ready (the nearline price chains on-device, off this path).
+    # Device-built tables are ASYNC futures - force them before the
+    # timer so table production stays attributed to prep, not serve.
     lat_s = []
     bt2, st2 = traces(lat_sizes)
     for i, n in enumerate(lat_sizes):
         c = gen.window(1000 + i, n)
+        jax.block_until_ready(c.tables)
         t0 = time.perf_counter()
         r = pipe.serve_window(c.ctx, c.rows, tables=c.tables,
                               budget=bt2[i], cost_scale=st2[i])
         jax.block_until_ready((r.decisions, r.revenue, r.spend))
         lat_s.append(time.perf_counter() - t0)
 
-    return {
+    metrics = {
         "n_users": int(n_users),
+        "mode": {"device_tables": bool(device_tables),
+                 "prefetch": int(prefetch), "donate_dual": bool(donate)},
         "sizes": [int(n) for n in sizes],
         "requests": total_req,
         "wall_s": round(st.wall_s, 3),
@@ -193,6 +215,12 @@ def _swing_run(exp, params, rcfg, *, n_users, sizes, lat_sizes,
         "compiles_per_window": st.compiles,
         "steady_state_recompiles": int(st.steady_compiles),
         "compiled_buckets": len({r.bucket for r in st.windows}),
+        "prep_ms_total": round(float(sum(st.prep_ms)), 1),
+        "stall_ms_total": round(float(sum(st.stall_ms)), 1),
+        "submit_ms_total": round(float(sum(st.submit_ms)), 1),
+        "h2d_mb": round(st.h2d_bytes / 1e6, 2),
+        "table_cache": {"hits": int(gen.cache_hits),
+                        "misses": int(gen.cache_misses)},
         "p50_window_ms": round(float(np.percentile(lat_s, 50)) * 1e3, 2),
         "p99_window_ms": round(float(np.percentile(lat_s, 99)) * 1e3, 2),
         "latency_sizes": [int(n) for n in lat_sizes],
@@ -201,6 +229,7 @@ def _swing_run(exp, params, rcfg, *, n_users, sizes, lat_sizes,
         "vm_hwm_mb": round(_vm_mb("VmHWM:"), 1),
         "total_revenue": round(st.total_revenue, 2),
     }
+    return metrics, st
 
 
 def run(*, users_small: int = 20_000, users_big: int = 150_000,
@@ -228,18 +257,45 @@ def run(*, users_small: int = 20_000, users_big: int = 150_000,
         TrafficScenario("swing", decades, base, spike_mult=spike,
                         n_tenants=2))
     runs = {}
-    for label, n_users in (("small_universe", users_small),
-                           ("big_universe", users_big)):
+    streams = {}
+    plans = (
+        ("small_universe", users_small, {}),
+        ("big_universe", users_big, {}),
+        ("big_universe_pr6", users_big,
+         {"device_tables": False, "prefetch": 0, "donate": False}),
+    )
+    for label, n_users, mode_kw in plans:
         print(f"[bench_scale] {label}: U={n_users:,}, "
               f"windows {sizes} ...")
-        runs[label] = _swing_run(exp, params, rcfg, n_users=n_users,
-                                 sizes=sizes, lat_sizes=lat_sizes,
-                                 budget_frac=budget_frac)
+        runs[label], streams[label] = _swing_run(
+            exp, params, rcfg, n_users=n_users, sizes=sizes,
+            lat_sizes=lat_sizes, budget_frac=budget_frac, **mode_kw)
         r = runs[label]
         print(f"[bench_scale]   {r['requests_per_sec']} req/s, "
-              f"p99 {r['p99_window_ms']} ms, peak RSS "
+              f"p99 {r['p99_window_ms']} ms, prep "
+              f"{r['prep_ms_total']} ms, stall {r['stall_ms_total']} "
+              f"ms, h2d {r['h2d_mb']} MB, peak RSS "
               f"{r['peak_rss_mb']} MB, steady recompiles "
               f"{r['steady_state_recompiles']}")
+
+    # cross-mode parity: the device-table + prefetched + donated path
+    # must reproduce the PR 6 host path bitwise at the big universe
+    for t, (a, b) in enumerate(zip(streams["big_universe"].windows,
+                                   streams["big_universe_pr6"].windows)):
+        tag = f"mode parity w{t}"
+        assert np.array_equal(a.decisions_np, b.decisions_np), tag
+        assert np.array_equal(a.revenue_np, b.revenue_np), tag
+        assert np.array_equal(np.asarray(a.spend),
+                              np.asarray(b.spend)), tag
+        assert np.array_equal(np.asarray(a.lam_after),
+                              np.asarray(b.lam_after)), tag
+    print(f"[bench_scale] mode parity OK over "
+          f"{len(streams['big_universe'].windows)} windows "
+          f"(device+prefetch+donate vs PR 6 path, bitwise)")
+    speedup = (runs["big_universe"]["requests_per_sec"]
+               / runs["big_universe_pr6"]["requests_per_sec"])
+    print(f"[bench_scale] big-universe speedup vs PR 6 path: "
+          f"{speedup:.2f}x")
 
     # what the retired path would have allocated at U_big: four (U, I)
     # float32 stage-score matrices, a (U, I) click matrix and the
@@ -260,6 +316,7 @@ def run(*, users_small: int = 20_000, users_big: int = 150_000,
                                "pow2 buckets)"},
         "parity_gate": parity,
         "runs": runs,
+        "speedup_vs_pr6": round(speedup, 2),
         "peak_rss_delta_mb": round(delta, 1),
         "rss_gate_mb": rss_gate_mb,
         "materialized_tables_mb_at_big": round(mat_mb, 1),
@@ -272,9 +329,27 @@ def run(*, users_small: int = 20_000, users_big: int = 150_000,
         f"peak RSS grew {delta:.1f} MB from U={users_small:,} to "
         f"U={users_big:,} (gate {rss_gate_mb} MB): something allocates "
         f"O(U)")
+    # the 2x claim is an OVERLAP claim: prefetch + device tables only
+    # buy wall-clock when host prep and device execution can run on
+    # different hardware.  Arm it on full-size multi-core runs; on a
+    # single/dual-core host the two modes do the same serial work and
+    # a wall-clock gate would only measure scheduler noise (same
+    # policy as ci.yml skipping bench_chain_sim's --check-speedup).
+    cores = os.cpu_count() or 1
+    gated_speedup = (not small) and cores >= 4
+    result["speedup_gate"] = (
+        "armed" if gated_speedup else
+        f"report-only ({'--small run' if small else f'{cores} cores'}: "
+        f"prefetch overlap needs parallel hardware)")
+    if gated_speedup:
+        assert speedup >= 2.0, (
+            f"big-universe throughput {speedup:.2f}x the PR 6 path "
+            f"(gate: >= 2x): the zero-stall claim regressed")
     result["gates"] = {"zero_steady_recompiles": True,
                        "rss_flat_wrt_users": True,
-                       "bitwise_parity": True}
+                       "bitwise_parity": True,
+                       "mode_parity_bitwise": True,
+                       "speedup_2x": bool(gated_speedup)}
     if json_path is not None:
         path = os.path.abspath(json_path)
         with open(path, "w") as f:

@@ -47,9 +47,10 @@ to a spec, bit-identically - see ``serving/spec.py`` for the table):
     ServingPipeline(..., tb, tenant_mode="priced")
                                         -> [TenantAxis(tb, priced=True)]
     ServingPipeline(..., n_regions=2)   -> [RegionAxis(2, "argmax"), ...]
-    region_jitter=eps                   -> DEPRECATED; RegionAxis(
-                                           split="flow") is the exact
-                                           replacement
+
+(The old ``region_jitter`` knob is gone - removed in PR 7 after the
+PR 5 deprecation; ``RegionAxis(split="flow")`` is its exact
+replacement.)
 
 The classic spike scenario of earlier revisions lives on as the
 production driver: ``python -m repro.launch.serve --small``.

@@ -435,6 +435,95 @@ def _compact_group_tables(stage_scores: dict, lay: dict, clicks: np.ndarray,
     return p_sorted, clicks_sorted, cap
 
 
+def _desc_perm_jax(scores: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Device twin of ``_desc_perm`` for float32 scores: indirect sort of
+    the last axis by (-score, id), BITWISE identical to the host order.
+
+    The int64 bit-pack of the host path needs x64; instead the
+    order-preserving int32 map of the float bits feeds a two-key
+    ``lax.sort`` with the (unique) candidate ids as tiebreak - unique
+    composite keys make the permutation a total order, so stability is
+    irrelevant and the result matches the host stable argsort exactly.
+    """
+    # canonicalize -0.0 to +0.0 without an add (XLA may fold x + 0.0)
+    s = jnp.where(scores == 0.0, jnp.float32(0.0), scores)
+    b = jax.lax.bitcast_convert_type(s, jnp.int32)
+    mono = b ^ ((b >> 31) & jnp.int32(0x7FFFFFFF))  # float order -> int
+    iota = jnp.broadcast_to(
+        jnp.arange(scores.shape[-1], dtype=jnp.int32), scores.shape)
+    _, _, perm = jax.lax.sort(
+        (~mono, ids.astype(jnp.int32), iota), dimension=-1, num_keys=2)
+    return perm
+
+
+def _compact_group_tables_jax(stage_scores: dict, lay: dict,
+                              clicks: jnp.ndarray):
+    """Jitted-traceable device twin of ``_compact_group_tables``.
+
+    Same algorithm on jnp float32 score slabs: every step is row
+    (user-axis) independent - per-row sorts, gathers and cumsums - so a
+    padded scoring chunk can be compacted at the fixed chunk shape and
+    sliced to the real rows afterwards.  Returns (p_sorted (G, U, cap)
+    int32, clicks_sorted (G, U, cap) float32); values are BITWISE equal
+    to the host builder (the parity gates in tests/test_request_source
+    ride on it).  Scores must be float32 (the streaming stage models');
+    other dtypes belong on the host path.
+    """
+    m0, m1, mr = lay["stage_names"]
+    u_n, i_n = clicks.shape
+    gk = lay["group_key"]
+    n2_list = sorted({g[1] for g in gk})
+    n2_pos = {n2: k for k, n2 in enumerate(n2_list)}
+    n2_max = n2_list[-1]
+    cap = min(n2_max, max(max(g[2]) for g in gk))
+
+    s0 = stage_scores[m0]
+    if s0.dtype != jnp.float32:
+        raise ValueError("device table builder needs float32 scores")
+    ids_full = jnp.broadcast_to(
+        jnp.arange(i_n, dtype=jnp.int32), (u_n, i_n))
+    cands = _desc_perm_jax(s0, ids_full)[:, :n2_max]  # (U, C)
+    sy = jnp.take_along_axis(stage_scores[m1], cands, axis=1)
+    yperm = _desc_perm_jax(sy, cands)  # (U, C)
+    l_items = jnp.take_along_axis(cands, yperm, axis=1)
+
+    # per distinct n2 (batched): compact the first-cap stage-1 survivors
+    n2_arr = jnp.asarray(n2_list, jnp.int32)
+    s1 = yperm[None, :, :] < n2_arr[:, None, None]
+    s1_i = s1.astype(jnp.int32)
+    q2 = jnp.cumsum(s1_i, axis=2) - s1_i  # exclusive survivor count
+    slot = jnp.where(s1 & (q2 < cap), q2, jnp.int32(cap))
+    k2 = len(n2_list)
+    scat = jnp.full((k2, u_n, cap + 1), n2_max, jnp.int32)
+    kk = jnp.arange(k2, dtype=jnp.int32)[:, None, None]
+    uu = jnp.arange(u_n, dtype=jnp.int32)[None, :, None]
+    vals = jnp.broadcast_to(jnp.arange(n2_max, dtype=jnp.int32),
+                            slot.shape)
+    # collisions only ever land on the dropped sentinel column ``cap``
+    scat = scat.at[kk, uu, slot].set(vals, mode="drop")
+    lpos = scat[:, :, :cap]
+    lvalid = lpos < n2_max
+    lpos_c = jnp.minimum(lpos, jnp.int32(n2_max - 1))
+
+    # per group = (rank model, n2): rank-model (-score, id) order
+    n2_of_g = np.asarray([n2_pos[n2] for _, n2, _ in gk], np.intp)
+    m_of_g = np.asarray([mi for mi, _, _ in gk], np.intp)
+    l_items_b = jnp.broadcast_to(l_items[None], (k2, u_n, n2_max))
+    g_items = jnp.take_along_axis(l_items_b, lpos_c, axis=2)[n2_of_g]
+    g_valid = lvalid[n2_of_g]
+    scores_r = jnp.stack([stage_scores[nm] for nm in mr])[m_of_g]
+    g_scores = jnp.take_along_axis(scores_r, g_items, axis=2)
+    g_scores = jnp.where(g_valid, g_scores, -jnp.inf)
+    mperm = _desc_perm_jax(g_scores, g_items)  # (G, U, cap)
+    p_sorted = jnp.where(jnp.take_along_axis(g_valid, mperm, axis=2),
+                         mperm, jnp.int32(cap))
+    g_n = len(gk)
+    clicks_b = jnp.broadcast_to(clicks[None], (g_n, u_n, i_n))
+    g_clicks = jnp.take_along_axis(clicks_b, g_items, axis=2) * g_valid
+    clicks_sorted = jnp.take_along_axis(g_clicks, mperm, axis=2)
+    return p_sorted, clicks_sorted.astype(jnp.float32)
+
+
 def _simulate_k3_numpy(stage_scores: dict, lay: dict, clicks: np.ndarray,
                        *, expose: int,
                        order1: np.ndarray | None = None) -> np.ndarray:

@@ -9,6 +9,18 @@ per-window ``WindowChunk``s for the fused serving pipeline -
 ``GeneratedSource`` scores arrivals on the fly, ``TableReplaySource``
 replays fixed (optionally memmapped) tables bitwise-identically to the
 materialized server they came from.
+
+Chunk tables are DEVICE-RESIDENT by default (``device_tables``):
+``GeneratedSource`` compacts stage scores into execution tables in a
+jitted pass (bitwise equal to the host builder - scores never cross
+back to host), scores a window's chunks on a small thread pool, and
+keeps a slab-keyed LRU cache so repeat-visitor chunks skip
+hashing/scoring; in-memory ``TableReplaySource`` uploads its tables
+once and serves windows as device row gathers.  ``WindowChunk.
+h2d_bytes`` meters what each window's production actually shipped to
+the device.  ``device_tables=False`` keeps the PR 6 host-numpy path
+(the parity reference, and the default for memmapped replay, whose
+point is that untouched rows never leave disk).
 """
 import importlib
 

@@ -40,12 +40,16 @@ from __future__ import annotations
 
 import json
 import os
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.cascade.engine import (CascadeModels, CompactPlan, _k3_layout,
-                                  _compact_group_tables, _user_batch,
+                                  _compact_group_tables,
+                                  _compact_group_tables_jax, _user_batch,
                                   build_compact_layout)
 from repro.data.synthetic import StreamingWorld, World
 
@@ -64,6 +68,7 @@ class WindowChunk:
     rows: np.ndarray  # (n,) int32 local row indices (arange)
     tables: dict  # {"p": (G, n, cap) int32, "ck": (G, n, cap) float32}
     users: np.ndarray | None = None  # (n,) global user ids
+    h2d_bytes: int = 0  # host->device bytes this chunk's production cost
 
     @property
     def n(self) -> int:
@@ -129,11 +134,25 @@ class GeneratedSource(RequestSource):
     (n, I) scores into the (G, n, cap) execution tables.  Peak host
     memory is O(chunk * I) transient + O(n * G * cap) for the chunk
     tables - independent of ``cfg.n_users``.
+
+    With ``device_tables=True`` (the default) the stage scores never
+    leave the device: compaction runs as a jitted pass
+    (``_compact_group_tables_jax``, bitwise equal to the host builder)
+    at the fixed chunk shape, ``WindowChunk.tables`` hold jax arrays
+    end-to-end (the pipeline pads them on device), and a slab-keyed
+    LRU cache of ``table_cache`` chunk tables lets repeat-visitor
+    chunks skip hashing/scoring entirely (``cache_hits``/
+    ``cache_misses`` count lookups).  ``workers`` > 1 scores a
+    window's chunks on a thread pool - each chunk is a pure function
+    of its arrival ids, so the parallel window is bitwise identical
+    to the sequential one.  ``device_tables=False`` keeps the PR 6
+    host-built numpy tables (the parity reference).
     """
 
     def __init__(self, world: StreamingWorld, models: CascadeModels,
                  chains, *, expose: int, seed: int = 0, chunk: int = 512,
-                 item_block: int = 256):
+                 item_block: int = 256, device_tables: bool = True,
+                 table_cache: int = 64, workers: int | None = None):
         self.world = world
         self.models = models
         self.chains = chains
@@ -146,6 +165,17 @@ class GeneratedSource(RequestSource):
         if self._lay is None:
             raise ValueError("GeneratedSource needs the k3 cascade layout")
         self._score_fns = None  # built lazily (jax import cost)
+        self.device_tables = bool(device_tables)
+        if workers is None:
+            workers = max(1, min(4, (os.cpu_count() or 2) - 1))
+        self.workers = int(workers)
+        self._table_fn = None  # jitted device compaction (lazy)
+        self._cache: OrderedDict = OrderedDict()  # slab key -> tables
+        self._cache_cap = int(table_cache)
+        self._lock = threading.Lock()
+        self._pool = None
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     def _n_items(self) -> int:
         return int(self.world.cfg.n_items)
@@ -237,6 +267,88 @@ class GeneratedSource(RequestSource):
             scores[name] = np.concatenate(cols, axis=1)
         return scores
 
+    def _score_slab_dev(self, slab: World, n_real: int):
+        """Device twin of ``_score_slab``: the same jitted kernels at the
+        same fixed chunk shape, but the (chunk, I) score slabs STAY jax
+        arrays (no ``np.asarray`` sync, no host copy) - rows past
+        ``n_real`` carry padding garbage the caller slices off on
+        device.  Returns ({name: (chunk, I) jax f32}, h2d_bytes)."""
+        import jax.numpy as jnp
+
+        if self._score_fns is None:
+            self._build_score_fns()
+        c = self.chunk
+        ub = _user_batch(slab, np.arange(n_real))
+        pad = c - n_real
+        if pad:
+            ub = {k: jnp.concatenate(
+                [v, jnp.zeros((pad, *v.shape[1:]), v.dtype)])
+                for k, v in ub.items()}
+        h2d = sum(int(v.size) * v.dtype.itemsize for v in ub.values())
+        scores = {
+            "DSSM": self._score_fns["DSSM"](ub["user_fields"]),
+            "YDNN": self._score_fns["YDNN"](ub["hist_ids"],
+                                            ub["hist_mask"],
+                                            ub["user_fields"]),
+        }
+        n_items = self._n_items()
+        for name in ("DIN", "DIEN"):
+            fn = self._score_fns[name]
+            cols = []
+            for lo in range(0, n_items, self.item_block):
+                hi = min(n_items, lo + self.item_block)
+                ids = jnp.broadcast_to(self._item_ids[lo:hi], (c, hi - lo))
+                cats = jnp.broadcast_to(self._item_cats[lo:hi],
+                                        (c, hi - lo))
+                cols.append(fn(ub, ids, cats))
+            scores[name] = (cols[0] if len(cols) == 1
+                            else jnp.concatenate(cols, axis=1))
+        return scores, h2d
+
+    # -- device chunk tables (jitted compaction + slab cache) --------------
+
+    def _build_table_fn(self):
+        import jax
+
+        lay = self._lay
+
+        @jax.jit
+        def build(scores, clicks):
+            return _compact_group_tables_jax(scores, lay, clicks)
+
+        self._table_fn = build
+
+    def _chunk_tables(self, ids: np.ndarray):
+        """One scoring chunk -> (ctx, p_dev, ck_dev, h2d_bytes), via the
+        slab cache when these exact arrivals were produced before (a
+        chunk is a pure function of its ids, so a hit IS the result)."""
+        key = (len(ids), ids.tobytes())
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._cache.move_to_end(key)
+                self.cache_hits += 1
+                return (*hit, 0)
+            self.cache_misses += 1
+        m = len(ids)
+        slab = self.world.user_slab(ids)
+        ctx = slab.reward_context(np.arange(m))
+        scores, h2d = self._score_slab_dev(slab, m)
+        if self._table_fn is None:
+            self._build_table_fn()
+        import jax.numpy as jnp
+
+        clicks = self.world.clicks_slab(ids, slab, pad_rows=self.chunk)
+        h2d += clicks.nbytes
+        p, ck = self._table_fn(scores, jnp.asarray(clicks))
+        if m != self.chunk:  # static device slice to the real rows
+            p, ck = p[:, :m], ck[:, :m]
+        with self._lock:
+            self._cache[key] = (ctx, p, ck)
+            while len(self._cache) > self._cache_cap:
+                self._cache.popitem(last=False)
+        return ctx, p, ck, h2d
+
     # -- window production -----------------------------------------------
 
     def window(self, t: int, n: int) -> WindowChunk:
@@ -252,23 +364,47 @@ class GeneratedSource(RequestSource):
                         "ck": np.zeros((g_n, 0, cap), np.float32)},
                 users=np.zeros(0, np.int64))
         users = self.arrivals(t, n)
-        ctx_parts, p_parts, ck_parts = [], [], []
-        for lo in range(0, n, self.chunk):
-            ids = users[lo:lo + self.chunk]
-            slab = self.world.user_slab(ids)
-            ctx_parts.append(slab.reward_context(np.arange(len(ids))))
-            scores = self._score_slab(slab, len(ids))
-            clicks = self.world.clicks_slab(ids, slab)
-            p, ck, _cap = _compact_group_tables(
-                scores, self._lay, clicks, expose=self.expose)
-            p_parts.append(p.astype(np.int32))
-            ck_parts.append(ck.astype(np.float32))
-        return WindowChunk(
-            ctx=np.concatenate(ctx_parts, axis=0),
-            rows=np.arange(n, dtype=np.int32),
-            tables={"p": np.concatenate(p_parts, axis=1),
-                    "ck": np.concatenate(ck_parts, axis=1)},
-            users=users)
+        if not self.device_tables:  # host-built numpy tables (PR 6 path)
+            ctx_parts, p_parts, ck_parts = [], [], []
+            for lo in range(0, n, self.chunk):
+                ids = users[lo:lo + self.chunk]
+                slab = self.world.user_slab(ids)
+                ctx_parts.append(slab.reward_context(np.arange(len(ids))))
+                scores = self._score_slab(slab, len(ids))
+                clicks = self.world.clicks_slab(ids, slab)
+                p, ck, _cap = _compact_group_tables(
+                    scores, self._lay, clicks, expose=self.expose)
+                p_parts.append(p.astype(np.int32))
+                ck_parts.append(ck.astype(np.float32))
+            return WindowChunk(
+                ctx=np.concatenate(ctx_parts, axis=0),
+                rows=np.arange(n, dtype=np.int32),
+                tables={"p": np.concatenate(p_parts, axis=1),
+                        "ck": np.concatenate(ck_parts, axis=1)},
+                users=users)
+        import jax.numpy as jnp
+
+        chunk_ids = [users[lo:lo + self.chunk]
+                     for lo in range(0, n, self.chunk)]
+        if self.workers > 1 and len(chunk_ids) > 1:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.workers,
+                    thread_name_prefix="chunk-score")
+            parts = list(self._pool.map(self._chunk_tables, chunk_ids))
+        else:
+            parts = [self._chunk_tables(ids) for ids in chunk_ids]
+        if len(parts) == 1:
+            ctx, p, ck, h2d = parts[0]
+        else:
+            ctx = np.concatenate([pt[0] for pt in parts], axis=0)
+            p = jnp.concatenate([pt[1] for pt in parts], axis=1)
+            ck = jnp.concatenate([pt[2] for pt in parts], axis=1)
+            h2d = sum(pt[3] for pt in parts)
+        return WindowChunk(ctx=np.asarray(ctx, np.float32),
+                           rows=np.arange(n, dtype=np.int32),
+                           tables={"p": p, "ck": ck}, users=users,
+                           h2d_bytes=int(h2d))
 
 
 class TableReplaySource(RequestSource):
@@ -285,11 +421,18 @@ class TableReplaySource(RequestSource):
     bit-identical to indexing the materialized universe: the chunk
     tables are row-gathers of the server's own tables and the contexts
     are the same array rows.
+
+    ``device_tables`` uploads the full tables to the device ONCE and
+    turns each window into a device-side row gather - no per-window
+    (G, n, cap) host->device copy.  Default: on for in-memory tables,
+    off for memmapped ones (whose point is that untouched rows never
+    leave the disk).
     """
 
     def __init__(self, ctx: np.ndarray, p_sorted: np.ndarray,
                  clicks_sorted: np.ndarray, chains, *, n_items: int,
-                 expose: int, seed: int = 0):
+                 expose: int, seed: int = 0,
+                 device_tables: bool | None = None):
         if ctx.shape[0] != p_sorted.shape[1]:
             raise ValueError(
                 f"ctx rows ({ctx.shape[0]}) must match table users "
@@ -302,6 +445,10 @@ class TableReplaySource(RequestSource):
         self.expose = int(expose)
         self.seed = int(seed)
         self.n_users = int(ctx.shape[0])
+        if device_tables is None:
+            device_tables = not isinstance(p_sorted, np.memmap)
+        self.device_tables = bool(device_tables)
+        self._dev = None  # one-time device upload (lazy)
         lay = build_compact_layout(chains, n_items=self.n_items,
                                    expose=self.expose)
         if lay is None or lay.cap != p_sorted.shape[2]:
@@ -310,8 +457,9 @@ class TableReplaySource(RequestSource):
                 f"chain set's compact layout at n_items={self.n_items}")
 
     @classmethod
-    def from_server(cls, server, ctx: np.ndarray, *,
-                    seed: int = 0) -> "TableReplaySource":
+    def from_server(cls, server, ctx: np.ndarray, *, seed: int = 0,
+                    device_tables: bool | None = None
+                    ) -> "TableReplaySource":
         """Replay source over a materialized CascadeServer's universe
         (``ctx`` row u = the reward context of table row u)."""
         if server.compact is None:
@@ -321,7 +469,8 @@ class TableReplaySource(RequestSource):
                    np.asarray(server.compact.p_sorted, np.int32),
                    np.asarray(server.compact.clicks_sorted, np.float32),
                    server.chains, n_items=server.clicks.shape[1],
-                   expose=server.compact.expose, seed=seed)
+                   expose=server.compact.expose, seed=seed,
+                   device_tables=device_tables)
 
     def _n_items(self) -> int:
         return self.n_items
@@ -332,6 +481,24 @@ class TableReplaySource(RequestSource):
 
     def window(self, t: int, n: int) -> WindowChunk:
         users = self.arrivals(t, n)
+        if self.device_tables:
+            import jax.numpy as jnp
+
+            h2d = 0
+            if self._dev is None:  # one-time universe upload
+                self._dev = (
+                    jnp.asarray(np.asarray(self.p_sorted, np.int32)),
+                    jnp.asarray(np.asarray(self.clicks_sorted,
+                                           np.float32)))
+                h2d = int(self._dev[0].nbytes + self._dev[1].nbytes)
+            u = jnp.asarray(users.astype(np.int32))
+            h2d += int(u.nbytes)
+            return WindowChunk(
+                ctx=np.asarray(self.ctx[users], np.float32),
+                rows=np.arange(n, dtype=np.int32),
+                tables={"p": jnp.take(self._dev[0], u, axis=1),
+                        "ck": jnp.take(self._dev[1], u, axis=1)},
+                users=users, h2d_bytes=h2d)
         return WindowChunk(
             ctx=np.asarray(self.ctx[users], np.float32),
             rows=np.arange(n, dtype=np.int32),

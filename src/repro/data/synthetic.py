@@ -282,18 +282,27 @@ class StreamingWorld:
         return World(cfg, z, self.z_item, activity, self.popularity,
                      self.item_cat, user_fields, hist_ids, hist_mask)
 
-    def clicks_slab(self, ids: np.ndarray,
-                    slab: World | None = None) -> np.ndarray:
-        """(n, I) ground-truth clicks, keyed per (user, item)."""
+    def clicks_slab(self, ids: np.ndarray, slab: World | None = None,
+                    pad_rows: int | None = None) -> np.ndarray:
+        """(n, I) ground-truth clicks, keyed per (user, item).
+
+        ``pad_rows`` returns a (pad_rows, I) array with zero rows past
+        ``len(ids)`` - the chunk-padded layout the device table builder
+        consumes, written once instead of computed then copied."""
         cfg = self.cfg
         ids = np.asarray(ids, np.int64)
+        n = len(ids)
         slab = slab if slab is not None else self.user_slab(ids)
         items = np.broadcast_to(np.arange(cfg.n_items),
-                                (len(ids), cfg.n_items))
-        p = slab.click_prob(np.arange(len(ids)), items)
+                                (n, cfg.n_items))
+        p = slab.click_prob(np.arange(n), items)
         u = _hash_u01(cfg.seed, _H_CLICK, ids[:, None],
                       np.arange(cfg.n_items)[None, :])
-        return (u < p).astype(np.float32)
+        if pad_rows is None:
+            return (u < p).astype(np.float32)
+        out = np.zeros((pad_rows, cfg.n_items), np.float32)
+        np.less(u, p, out=out[:n])
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -51,9 +51,7 @@ Scenario flags
                       results/carbon_report_geo.csv.  --geo-split
                       flow|argmax picks the degenerate-tie rounding
                       (flow = the exact proportional flow split;
-                      argmax = the historical knife edge); --geo-jitter
-                      is deprecated (value ignored; 0 selects argmax,
-                      nonzero flow)
+                      argmax = the historical knife edge)
 --scenario geotenants the COMBINED tenant x region pipeline (spec:
                       TenantAxis(budgets, priced=True) + RegionAxis(2)
                       + GlobalAxis(pricing="carbon")): per-tenant gram
@@ -174,7 +172,8 @@ def _build_ci_trace(args):
 
 
 def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
-                   sample_window, pricing, mesh=None, forecast=False):
+                   sample_window, pricing, mesh=None, forecast=False,
+                   prefetch=2):
     """Fused-pipeline carbon day: per-window gram budgets + CI-scaled
     costs threaded through run_stream (carbon pricing) or the
     effective-FLOPs-budget reduction (flops pricing); ``forecast`` aims
@@ -185,11 +184,12 @@ def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
     if pricing == "carbon":
         st = run_stream(pipe, sizes, sample_window,
                         budget_trace=sched["grams"],
-                        scale_trace=sched["scale"], forecast=forecast)
+                        scale_trace=sched["scale"], forecast=forecast,
+                        prefetch=prefetch)
     else:
         st = run_stream(pipe, sizes, sample_window,
                         budget_trace=sched["flops_budget"],
-                        forecast=forecast)
+                        forecast=forecast, prefetch=prefetch)
     print(f"{'win':>4} {'n':>5} {'ci_g/kwh':>9} {'spend/budget':>13} "
           f"{'lam':>12} {'downgraded':>10} {'revenue':>9} "
           f"{'dispatch_ms':>11}")
@@ -202,18 +202,6 @@ def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
     print(f"[serve] {len(sizes)} windows in {st.wall_s:.2f}s "
           f"({len(sizes) / st.wall_s:.1f} win/s)")
     return st.total_revenue, total_flops
-
-
-def _geo_split(args) -> str:
-    """Resolve the region-tie rounding from the CLI: --geo-split, with
-    the deprecated --geo-jitter kept as an alias (0 = argmax, nonzero =
-    flow; the jitter VALUE is ignored)."""
-    if args.geo_jitter is not None:
-        print("[serve] --geo-jitter is deprecated (value ignored): "
-              f"selecting --geo-split "
-              f"{'flow' if args.geo_jitter > 0 else 'argmax'}")
-        return "flow" if args.geo_jitter > 0 else "argmax"
-    return args.geo_split
 
 
 def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
@@ -242,7 +230,7 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
     scale_trace = np.stack([kpf * ci_w[r] for r in names], axis=1)
     g_total = flops_budget * kpf * args.ci_mean
     budget_trace = np.full((n_w, len(names)), g_total / len(names))
-    split = _geo_split(args)
+    split = args.geo_split
     print(f"[serve] geo day: {n_w} windows x {window_s / 3600.0:.2f} h, "
           f"regions {names} offset {args.geo_offset_h:.0f} h, "
           f"{g_total / len(names):.3e} g/window/region, split "
@@ -256,7 +244,7 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
         dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
     st = run_stream(pipe, sizes, sample_window,
                     budget_trace=budget_trace, scale_trace=scale_trace,
-                    forecast=args.ci_forecast)
+                    forecast=args.ci_forecast, prefetch=args.prefetch)
     header = " ".join(f"{'ci_' + r[-1]:>6} {'spd/bud_' + r[-1]:>9}"
                       for r in names)
     print(f"{'win':>4} {'n':>5} {'split':>12} {header} {'revenue':>9} "
@@ -342,7 +330,7 @@ def _geotenants_stream(chains, server, params, rcfg, sizes,
     region_g = np.full(r_n, args.region_cap_frac * g_total)
     budget_trace = np.tile(np.concatenate([tenant_g, region_g]),
                            (n_w, 1))
-    split = _geo_split(args)
+    split = args.geo_split
     print(f"[serve] geotenants day: {n_w} windows x "
           f"{window_s / 3600.0:.2f} h, {t_n} tenants x {r_n} regions "
           f"(offset {args.geo_offset_h:.0f} h), tenant grams "
@@ -361,7 +349,7 @@ def _geotenants_stream(chains, server, params, rcfg, sizes,
         dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
     st = run_stream(pipe, sizes, sample_window,
                     budget_trace=budget_trace, scale_trace=scale_trace,
-                    forecast=args.ci_forecast)
+                    forecast=args.ci_forecast, prefetch=args.prefetch)
     t_hdr = " ".join(f"{'t' + str(k) + ' s/b':>8}" for k in range(t_n))
     r_hdr = " ".join(f"{'r_' + r[-1] + ' s/b':>8}" for r in names)
     print(f"{'win':>4} {'n':>5} {'split':>12} {t_hdr} {r_hdr} "
@@ -490,9 +478,6 @@ def main():
                     help="region-tie rounding: 'flow' = exact "
                          "proportional flow split of the degenerate "
                          "window, 'argmax' = the historical knife edge")
-    ap.add_argument("--geo-jitter", type=float, default=None,
-                    help="DEPRECATED (value ignored): 0 selects "
-                         "--geo-split argmax, nonzero --geo-split flow")
     ap.add_argument("--tenant-spread", type=float, default=4.0,
                     help="geotenants: gram-budget ratio of the loosest "
                          "to the tightest tenant")
@@ -506,7 +491,19 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="devices metered for embodied carbon (per "
                          "region in georegions)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="window-prep prefetch queue depth (0 = the "
+                         "sequential double-buffered reference path)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent JAX compilation-cache directory: "
+                         "repeat runs skip XLA compiles entirely")
     args = ap.parse_args()
+    if args.cache_dir:
+        import jax
+        jax.config.update("jax_compilation_cache_dir", args.cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        print(f"[serve] jax compilation cache -> {args.cache_dir}")
     if args.embodied_g_per_device_h is None:  # resolved ONCE for every
         from repro.carbon.ledger import \
             DEFAULT_EMBODIED_G_PER_DEVICE_H  # scenario that meters it
@@ -600,7 +597,7 @@ def main():
             total_rev, total_flops = _carbon_stream(
                 server, params, rcfg, sizes, cb, ledger,
                 sample_window, args.carbon_pricing, mesh=mesh,
-                forecast=args.ci_forecast)
+                forecast=args.ci_forecast, prefetch=args.prefetch)
         report_path = args.carbon_report or os.path.join(
             os.path.dirname(__file__), "..", "..", "..", "results",
             "carbon_report.csv")
@@ -647,7 +644,8 @@ def main():
             stats = []
             for p in pipes:
                 stats.append(run_stream(
-                    p, [n // n_tenants for n in sizes], sample_window))
+                    p, [n // n_tenants for n in sizes], sample_window,
+                    prefetch=args.prefetch))
             total_rev = sum(s.total_revenue for s in stats)
             total_flops = sum(s.total_spend for s in stats)
             for t in range(len(sizes)):
@@ -664,7 +662,8 @@ def main():
                                    tenant_mode=(args.tenant_mode
                                                 if tb is not None
                                                 else "shared"))
-            st = run_stream(pipe, sizes, sample_window)
+            st = run_stream(pipe, sizes, sample_window,
+                            prefetch=args.prefetch)
             total_rev, total_flops = st.total_revenue, st.total_spend
             priced = tb is not None and args.tenant_mode == "priced"
             lam_hdr = "lam(per-tenant)" if priced else "lam"

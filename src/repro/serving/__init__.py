@@ -36,7 +36,12 @@ A map of the unified allocator core and the layers over it:
       memory or memmapped ``.npy``), bitwise identical to indexing the
       materialized ``CascadeServer`` it was built from.
       ``source.universe`` is the layout-only server handle a streaming
-      pipeline is constructed over.
+      pipeline is constructed over.  With ``device_tables`` (default
+      for generated and in-memory replay sources) chunk tables live
+      ON DEVICE end-to-end: stage scores never cross to host, the
+      compaction runs as a jitted pass bitwise equal to the host
+      builder, replay windows gather device-resident tables, and a
+      slab-keyed LRU cache skips rescoring repeat-visitor chunks.
   serving.pipeline        ``ServingPipeline.from_spec``: reward scoring
       (model-prefix grouped), priced allocation, the fused guard,
       CompactPlan cascade execution and the nearline dual update in ONE
@@ -50,19 +55,27 @@ A map of the unified allocator core and the layers over it:
       axis.  Per-window budgets/scales take positional vectors or
       NAMED dicts keyed by ``spec.compile().budget_names`` /
       ``scale_names``.  Degenerate region ties are rounded by the
-      exact flow split (``RegionAxis(split="flow")``; the deprecated
-      ``region_jitter`` maps to it).  All modes compose with the
+      exact flow split (``RegionAxis(split="flow")``).  All modes
+      compose with the
       ("req",) shard_map mesh, bucketed window padding (``bucketing=
       "linear"|"pow2"``; pow2 keeps the compiled-shape count
       logarithmic under traffic swings) and the CI-forecast dual
       warm-start (``dual_budget``/``dual_cost_scale``).
       ``WindowResult.compiles``/``bucket`` surface per-window jit
-      cache misses - zero in steady state, by construction.  The
-      legacy keyword constructor survives as a thin shim over
+      cache misses - zero in steady state, by construction -
+      alongside ``h2d_bytes``/``prep_ms``/``stall_ms``.  The nearline
+      dual chain runs through donated jits (``donate_dual``, default
+      on): steady-state windows update the price allocation-free,
+      with readable record copies in ``lam_before``/``lam_after``.
+      The legacy keyword constructor survives as a thin shim over
       ``spec_from_legacy``.
-  serving.stream          double-buffered streaming driver (host
-      prepares window t+1 - a RequestSource chunk or a sampled slice
-      of a materialized universe - while the device executes t) + the
+  serving.stream          prefetching streaming driver: ``run_stream
+      (..., prefetch=N)`` moves chunk production to one background
+      worker feeding a bounded queue (windows in strict t order, so
+      bitwise identical to ``prefetch=0`` - the sequential
+      double-buffered reference), records per-window ``stall_ms``,
+      and splits the old dispatch time into ``prep_ms`` +
+      ``submit_ms`` (``dispatch_ms`` survives as their sum) + the
       ``SCENARIOS`` registry - ONE dict of per-window-size builders
       (constant, spike, diurnal, tenants, carbon, georegions,
       geotenants, swing) from which the valid-names error and the
@@ -70,7 +83,8 @@ A map of the unified allocator core and the layers over it:
       budget/scale traces and ``forecast=True`` thread time-varying
       carbon constraints through the pipeline without recompiles;
       ``StreamStats.steady_compiles`` audits the zero-recompile
-      guarantee over a finished run.
+      guarantee and ``StreamStats.h2d_bytes`` the transfer budget
+      over a finished run.
   carbon.*                the gCO2e side: intensity traces, the
       CarbonBudget / CarbonBudgetController wrappers (both
       spec-buildable via ``from_spec``), and the CarbonLedger

@@ -50,9 +50,9 @@ the pipeline's front door is ``ServingPipeline.from_spec``:
     and the guard chains a tenant walk with a per-region walk.
 
 The legacy keyword constructor (``tenant_budgets``/``tenant_mode``/
-``n_regions``/``region_jitter``) survives as a thin shim that builds
-the equivalent spec (``serving.spec.spec_from_legacy``) - bit-identical
-to the historical flag paths.
+``n_regions``) survives as a thin shim that builds the equivalent spec
+(``serving.spec.spec_from_legacy``) - bit-identical to the historical
+flag paths.
 
 Region ties: the proportional cost structure (c_{j,r} = s_r * flops_j)
 makes every request indifferent between regions at once at the dual
@@ -64,8 +64,6 @@ FLOPs mass proportional to its remaining budget capacity - the
 flow-splitting primal rounding of the fractional LP optimum.
 ``split="argmax"`` keeps the historical knife-edge behavior (and the
 bit-exact reduction to a pinned pipeline when regions are identical).
-The old ``region_jitter`` eps-distortion is deprecated: its value is
-ignored; nonzero selects "flow".
 
 Request-axis sharding: pass a 1-D mesh (``launch.mesh.make_request_mesh``)
 and the pass runs under ``shard_map`` over axis "req" - per-request work
@@ -144,6 +142,9 @@ class WindowResult:
     tr_spend: jnp.ndarray | None = None  # (T, R) per-(tenant, region)
     compiles: int = 0  # jit cache misses this window (0 = warm bucket)
     bucket: tuple | None = None  # the (b, padded, chunked) shape key
+    h2d_bytes: int = 0  # host->device bytes dispatched for this window
+    prep_ms: float = 0.0  # host chunk production (set by run_stream)
+    stall_ms: float = 0.0  # host wait for a prefetched chunk (run_stream)
 
     @property
     def decisions_np(self) -> np.ndarray:
@@ -186,10 +187,13 @@ class ServingPipeline:
         TOTAL budget; per-tenant/per-region caps refine it below).
     mesh: optional 1-D request mesh -> shard_map over axis "req"
         (composes with every pricing mode).
-    tenant_budgets / tenant_mode / n_regions / region_jitter: legacy
-        flags, see ``spec_from_legacy`` for the mapping
-        (``region_jitter`` is deprecated: the value is ignored, nonzero
-        selects the exact flow-splitting region-tie rounding).
+    tenant_budgets / tenant_mode / n_regions: legacy flags, see
+        ``spec_from_legacy`` for the mapping.
+    donate_dual: thread the nearline lambda update through
+        ``jax.jit(..., donate_argnums=...)`` so the steady-state price
+        chain updates its device buffer IN PLACE (allocation-free);
+        records stay readable via a bitwise device copy, so results
+        are bit-identical either way.
     spec: a ConstraintSpec - overrides the legacy flags entirely.
     """
 
@@ -199,14 +203,14 @@ class ServingPipeline:
                  guard: bool = True, mesh=None, pad_quantum: int = 32,
                  bucketing: str = "linear",
                  tenant_budgets=None, tenant_mode: str = "shared",
-                 n_regions: int | None = None, region_jitter: float = 0.0,
+                 n_regions: int | None = None,
                  lam_init: float = 0.0, ledger=None,
+                 donate_dual: bool = True,
                  spec: ConstraintSpec | None = None):
         if spec is None:
             spec = spec_from_legacy(
                 float(budget_per_window), tenant_budgets=tenant_budgets,
-                tenant_mode=tenant_mode, n_regions=n_regions,
-                region_jitter=region_jitter)
+                tenant_mode=tenant_mode, n_regions=n_regions)
         cs = spec.compile()
         self.spec = spec
         self._cs = cs
@@ -271,6 +275,13 @@ class ServingPipeline:
             self.lam = jnp.full(cs.n_prices, lam_init, jnp.float32)
         else:
             self.lam = jnp.float32(lam_init)
+        # with donation the chain buffer ``self.lam`` is consumed by the
+        # next window's dual dispatch; ``_lam_rec`` is its always-
+        # readable twin (a bitwise device copy) that WindowResult
+        # records point at
+        self.donate_dual = bool(donate_dual)
+        self._lam_rec = jnp.copy(self.lam) if donate_dual else self.lam
+        self._h2d_window = 0
         self.stats: list[WindowResult] = []
         self._fns: dict = {}
         self._built: list = []  # every jitted fn ever built (compile count)
@@ -281,14 +292,15 @@ class ServingPipeline:
                   *, dual_cfg: DualDescentConfig | None = None,
                   guard: bool = True, mesh=None, pad_quantum: int = 32,
                   bucketing: str = "linear", lam_init: float = 0.0,
-                  ledger=None) -> "ServingPipeline":
+                  ledger=None,
+                  donate_dual: bool = True) -> "ServingPipeline":
         """Build the pipeline from a declarative ConstraintSpec (the
         compiled total budget seeds ``budget_per_window``)."""
         return cls(server, reward_params, reward_cfg,
                    spec.compile().total_budget, dual_cfg=dual_cfg,
                    guard=guard, mesh=mesh, pad_quantum=pad_quantum,
                    bucketing=bucketing, lam_init=lam_init, ledger=ledger,
-                   spec=spec)
+                   donate_dual=donate_dual, spec=spec)
 
     # -- fused pass -----------------------------------------------------------
 
@@ -641,8 +653,20 @@ class ServingPipeline:
         The (M, K) dual cost map and (I, K) membership come from the
         compiled ConstraintSpec (``dual_cost_map``/``dual_member``) -
         tenant columns draw a request's spend wherever it is served,
-        region columns only from their own region's options."""
+        region columns only from their own region's options.
+
+        With ``donate_dual`` the lambda argument is DONATED: the update
+        aliases its output onto the incoming price buffer (same shape/
+        dtype, so XLA reuses it in place) and the steady-state chain
+        lambda_0 -> lambda_1 -> ... runs allocation-free.  The donated
+        buffer is dead afterwards - ``serve_window`` keeps
+        ``self._lam_rec`` as the readable twin for records."""
         axis = AXIS if self.mesh is not None else None
+
+        def _jit(fn, lam_argnum):
+            if self.donate_dual:
+                return jax.jit(fn, donate_argnums=(lam_argnum,))
+            return jax.jit(fn)
         cfg = self.dual_cfg
         costs = self._costs
         j_n = int(costs.shape[0])
@@ -671,7 +695,7 @@ class ServingPipeline:
                                in_specs=(P(AXIS), P(AXIS), P(AXIS), P(),
                                          P(), P()),
                                out_specs=P())
-            return jax.jit(fn)
+            return _jit(fn, 3)
 
         if r_n is not None:
             def fn(rewards, valid, lam, budgets, scales):
@@ -690,7 +714,7 @@ class ServingPipeline:
                                in_specs=(P(AXIS), P(AXIS), P(), P(),
                                          P()),
                                out_specs=P())
-            return jax.jit(fn)
+            return _jit(fn, 2)
 
         if priced:
             def fn(rewards, valid, k_of, lam, budgets, scale):
@@ -708,7 +732,7 @@ class ServingPipeline:
                                in_specs=(P(AXIS), P(AXIS), P(AXIS), P(),
                                          P(), P()),
                                out_specs=P())
-            return jax.jit(fn)
+            return _jit(fn, 3)
 
         def fn(rewards, valid, lam, budget, scale):
             mask = valid if padded else None
@@ -722,7 +746,7 @@ class ServingPipeline:
             fn = shard_map(fn, mesh=self.mesh,
                            in_specs=(P(AXIS), P(AXIS), P(), P(), P()),
                            out_specs=P())
-        return jax.jit(fn)
+        return _jit(fn, 2)
 
     def _bucket(self, n: int) -> int:
         """Pad target for an n-request window.
@@ -779,11 +803,23 @@ class ServingPipeline:
             raise ValueError("per-window chunk tables need the compact "
                              "(k3) layout; this pipeline runs the "
                              "generic scan kernel")
-        p = np.asarray(tables["p"], np.int32)
-        ck = np.asarray(tables["ck"], np.float32)
+        p, ck = tables["p"], tables["ck"]
         if p.shape[1] != n:
             raise ValueError(f"chunk tables carry {p.shape[1]} rows for "
                              f"a {n}-request window")
+        if isinstance(p, jax.Array):  # device-resident chunk: pad there
+            if p.dtype != jnp.int32:
+                p = p.astype(jnp.int32)
+            if ck.dtype != jnp.float32:
+                ck = ck.astype(jnp.float32)
+            if b != n:
+                p = jnp.pad(p, ((0, 0), (0, b - n), (0, 0)),
+                            constant_values=self._cap)
+                ck = jnp.pad(ck, ((0, 0), (0, b - n), (0, 0)))
+            return {"p": p, "ck": ck, "g_of": self._tables["g_of"],
+                    "n3_of": self._tables["n3_of"]}
+        p = np.asarray(p, np.int32)
+        ck = np.asarray(ck, np.float32)
         if b != n:
             g_n, _, cap = p.shape
             p = np.concatenate(
@@ -791,6 +827,7 @@ class ServingPipeline:
                 axis=1)
             ck = np.concatenate(
                 [ck, np.zeros((g_n, b - n, cap), np.float32)], axis=1)
+        self._h2d_window += int(p.nbytes + ck.nbytes)
         return {"p": jnp.asarray(p), "ck": jnp.asarray(ck),
                 "g_of": self._tables["g_of"],
                 "n3_of": self._tables["n3_of"]}
@@ -901,8 +938,8 @@ class ServingPipeline:
         if n == 0:  # zero-arrival window: nothing to serve or learn from
             r_n = self.n_regions
             res = WindowResult(
-                n_valid=0, budget=bud, lam_before=self.lam,
-                lam_after=self.lam, decisions=jnp.zeros(0, jnp.int32),
+                n_valid=0, budget=bud, lam_before=self._lam_rec,
+                lam_after=self._lam_rec, decisions=jnp.zeros(0, jnp.int32),
                 revenue=jnp.zeros(0, jnp.float32),
                 spend=jnp.float32(0.0), downgraded=jnp.int32(0),
                 valid=np.zeros(0, np.float32), flops=jnp.float32(0.0),
@@ -958,6 +995,8 @@ class ServingPipeline:
             perm = np.concatenate(
                 [np.arange(n, dtype=np.intp), np.zeros(b - n, np.intp)])
         chunked = tables is not None
+        self._h2d_window = int(ctx.nbytes + rows.nbytes + valid.nbytes
+                               + (k_of.nbytes if k_of is not None else 0))
         if chunked:
             run_tables = self._pad_chunk_tables(tables, n, b)
             rows = perm.astype(np.int32)  # gather within the padded chunk
@@ -972,9 +1011,21 @@ class ServingPipeline:
         c0 = self.compile_count()
         if lam is None:
             lam_in = self.lam
+            lam_before_rec = self._lam_rec
         else:
             lam_in = jnp.broadcast_to(
                 jnp.asarray(lam, jnp.float32), jnp.shape(self.lam))
+            lam_before_rec = lam_in
+        # the dual fn DONATES its lambda argument: hand it the chain
+        # buffer only when this call advances the chain; otherwise (a
+        # pinned price, or update_lam=False keeping the old chain) a
+        # bitwise device copy is consumed so live buffers survive
+        if not self.donate_dual:
+            lam_dual = lam_in
+        elif lam is None and update_lam:
+            lam_dual = lam_in
+        else:
+            lam_dual = jnp.copy(lam_in)
         valid_j = jnp.asarray(valid)
 
         if combined:
@@ -1012,13 +1063,13 @@ class ServingPipeline:
             d_sc = sc_j if dual_cost_scale is None \
                 else jnp.asarray(np.asarray(dual_cost_scale, np.float32))
             lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
-                              lam_in, d_bud, d_sc)
+                              lam_dual, d_bud, d_sc)
         elif geo:
             d_bud = bud_j if dual_budget is None \
                 else jnp.asarray(np.asarray(dual_budget, np.float32))
             d_sc = sc_j if dual_cost_scale is None \
                 else jnp.asarray(np.asarray(dual_cost_scale, np.float32))
-            lam_new = dual_fn(rewards, valid_j, lam_in, d_bud, d_sc)
+            lam_new = dual_fn(rewards, valid_j, lam_dual, d_bud, d_sc)
         elif tb is not None:
             d_bud = bud_j if dual_budget is None \
                 else jnp.asarray(np.asarray(dual_budget,
@@ -1027,26 +1078,34 @@ class ServingPipeline:
                 else jnp.float32(dual_cost_scale)
             if cs.tenant_priced:
                 lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
-                                  lam_in, d_bud, d_sc)
+                                  lam_dual, d_bud, d_sc)
             else:  # shared price descends on the TOTAL budget
-                lam_new = dual_fn(rewards, valid_j, lam_in,
+                lam_new = dual_fn(rewards, valid_j, lam_dual,
                                   jnp.sum(d_bud), d_sc)
         else:
             d_bud = bud_j if dual_budget is None else jnp.float32(
                 dual_budget)
             d_sc = sc_j if dual_cost_scale is None else jnp.float32(
                 dual_cost_scale)
-            lam_new = dual_fn(rewards, valid_j, lam_in, d_bud, d_sc)
+            lam_new = dual_fn(rewards, valid_j, lam_dual, d_bud, d_sc)
         if update_lam:
             self.lam = lam_new
+            # the chain buffer will be donated next window; records keep
+            # a bitwise device copy that stays readable forever
+            self._lam_rec = jnp.copy(lam_new) if self.donate_dual \
+                else lam_new
+            lam_after_rec = self._lam_rec
+        else:  # orphan price: never enters the chain, never donated
+            lam_after_rec = lam_new
         res = WindowResult(
-            n_valid=n, budget=bud, lam_before=lam_in,
-            lam_after=lam_new, decisions=dec, revenue=rev, spend=spend,
+            n_valid=n, budget=bud, lam_before=lam_before_rec,
+            lam_after=lam_after_rec, decisions=dec, revenue=rev,
+            spend=spend,
             downgraded=dg, valid=valid, tenant_spend=t_spend, flops=flops,
             cost_scale=sc, regions=regions, region_spend=r_spend,
             k_budget=None if bud_vec is None else np.array(bud_vec),
             tr_spend=tr_spend, compiles=self.compile_count() - c0,
-            bucket=key)
+            bucket=key, h2d_bytes=self._h2d_window)
         self.stats.append(res)
         if self.ledger is not None:
             self.ledger.record_result(res)

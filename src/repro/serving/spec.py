@@ -50,13 +50,9 @@ legacy constructor runs):
       (tenant_mode="shared")
     tenant_budgets=tb,                     [TenantAxis(tb, priced=True)]
       tenant_mode="priced"
-    n_regions=R, region_jitter=0.0         [RegionAxis(R,
+    n_regions=R                            [RegionAxis(R,
                                               split="argmax"),
                                             GlobalAxis(budget=B)]
-    n_regions=R, region_jitter>0           [RegionAxis(R, split="flow"),
-      (DEPRECATED: jitter is a no-op         GlobalAxis(budget=B)]
-      alias that now selects the exact
-      flow-splitting rounding)
     (carbon pricing)                       any of the above +
                                            GlobalAxis(pricing="carbon");
                                            grams/scales still ride the
@@ -71,14 +67,13 @@ costs tie across regions are divided deterministically in arrival
 order, each tied region receiving a share of the window's FLOPs mass
 proportional to its remaining budget capacity - the flow-splitting
 primal rounding of the fractional LP optimum.  ``split="argmax"`` keeps
-the historical pure argmax (bit-identical to the pre-spec pipeline with
-``region_jitter=0``).  The old ``region_jitter`` eps-distortion is
-deprecated: the value is ignored, and passing a nonzero jitter selects
-``split="flow"``.
+the historical pure argmax (bit-identical to the pre-spec pipeline;
+the legacy shim maps ``n_regions`` here).  The pre-spec
+``region_jitter`` eps-distortion is GONE (deprecated in PR 5, removed
+in PR 7): ``split="flow"`` is its exact replacement.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 
 
@@ -123,16 +118,13 @@ class RegionAxis:
     ``serve_window(budget=..., cost_scale=...)`` traces (they are
     time-varying by nature - grid intensity).  ``split`` selects the
     degenerate-tie rounding (see module docstring); ``tie_tol`` is the
-    relative per-flop price band treated as tied.  ``jitter`` is the
-    DEPRECATED pre-spec eps-distortion: its value is ignored, nonzero
-    selects ``split="flow"``.
+    relative per-flop price band treated as tied.
     """
 
     n_regions: int = 2
     names: tuple[str, ...] | None = None
     split: str = "flow"
     tie_tol: float = 0.05
-    jitter: float = 0.0  # deprecated no-op alias -> split="flow"
 
     def __post_init__(self):
         if self.n_regions < 2:
@@ -146,12 +138,6 @@ class RegionAxis:
         if self.names is not None and len(self.names) != self.n_regions:
             raise ValueError(f"{len(self.names)} names for "
                              f"{self.n_regions} regions")
-        if self.jitter:
-            warnings.warn(
-                "RegionAxis.jitter is deprecated and ignored; the exact "
-                "flow-splitting rounding (split='flow') replaces the "
-                "jitter workaround", DeprecationWarning, stacklevel=3)
-            object.__setattr__(self, "split", "flow")
 
     @property
     def n(self) -> int:
@@ -389,15 +375,14 @@ class CompiledSpec:
 
 def spec_from_legacy(budget_per_window: float, *, tenant_budgets=None,
                      tenant_mode: str = "shared",
-                     n_regions: int | None = None,
-                     region_jitter: float = 0.0) -> ConstraintSpec:
+                     n_regions: int | None = None) -> ConstraintSpec:
     """The legacy ``ServingPipeline`` kwargs -> their ConstraintSpec.
 
     Every historical flag combination maps to a spec whose compiled
     pipeline is bit-identical to the pre-spec code path (the parity
-    gates in tests/test_spec.py).  ``region_jitter`` is deprecated: 0
-    keeps the historical pure argmax, nonzero selects the exact
-    flow-splitting rounding that replaced the jitter workaround.
+    gates in tests/test_spec.py).  The pre-spec ``region_jitter`` knob
+    was removed in PR 7 (two PRs after deprecation); its exact
+    replacement is ``RegionAxis(split="flow")``.
     """
     if tenant_mode not in ("shared", "priced"):
         raise ValueError(f"tenant_mode must be 'shared' or 'priced', "
@@ -407,14 +392,6 @@ def spec_from_legacy(budget_per_window: float, *, tenant_budgets=None,
         axes.append(TenantAxis(tuple(float(b) for b in tenant_budgets),
                                priced=tenant_mode == "priced"))
     if n_regions is not None:
-        if region_jitter:
-            warnings.warn(
-                "region_jitter is deprecated and ignored; nonzero "
-                "values select the exact flow-splitting rounding "
-                "(RegionAxis(split='flow'))", DeprecationWarning,
-                stacklevel=3)
-        axes.append(RegionAxis(
-            int(n_regions),
-            split="flow" if region_jitter else "argmax"))
+        axes.append(RegionAxis(int(n_regions), split="argmax"))
     axes.append(GlobalAxis(budget=float(budget_per_window)))
     return ConstraintSpec(axes)

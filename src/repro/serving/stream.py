@@ -1,12 +1,16 @@
-"""Double-buffered streaming driver + pluggable traffic scenarios.
+"""Prefetching streaming driver + pluggable traffic scenarios.
 
 ``run_stream`` drives a ServingPipeline through a traffic scenario the
-way a production frontend would: window t's pass is DISPATCHED (jax
-async dispatch - device arrays come back immediately), then the host
-prepares window t+1 (sampling arrivals, building contexts, padding)
-while the device is still executing, and only then does the host read
-window t's results.  The nearline price update chains device-side, so
-the host never blocks on it.
+way a production frontend would: a background prefetch thread produces
+window chunks (sampling arrivals, hashing user rows, dispatching chunk
+scoring) into a bounded queue while the serving thread dispatches each
+window's fused pass (jax async dispatch - device arrays come back
+immediately) and only blocks when a chunk is not ready yet (the
+per-window ``stall_ms``).  The nearline price update chains
+device-side - with buffer donation it updates the price buffer in
+place - so the host never blocks on it.  ``prefetch=0`` falls back to
+the sequential double-buffered loop, bitwise identical (each window is
+a pure function of (seed, t)).
 
 Scenarios live in the ``SCENARIOS`` registry: one dict of builder
 functions mapping a scenario name to its per-window request counts.
@@ -160,12 +164,39 @@ def scenario_windows(sc: TrafficScenario) -> list[int]:
 
 @dataclass
 class StreamStats:
-    """Host-side view of a finished streaming run."""
+    """Host-side view of a finished streaming run.
+
+    Timing is attributed per window: ``prep_ms`` is host chunk
+    production (arrival sampling, hashing, scoring dispatch - off the
+    critical path when prefetching), ``submit_ms`` is the
+    ``serve_window`` dispatch, and ``stall_ms`` is how long the serving
+    thread actually waited for a chunk that was not ready.  The legacy
+    ``dispatch_ms`` survives as the per-window prep + submit sum."""
 
     windows: list[WindowResult]
     sizes: list[int]
-    dispatch_ms: list[float]  # host time per submit (prep + dispatch)
+    submit_ms: list[float]  # host time per serve_window dispatch
     wall_s: float
+
+    @property
+    def prep_ms(self) -> list[float]:
+        return [float(r.prep_ms) for r in self.windows]
+
+    @property
+    def stall_ms(self) -> list[float]:
+        return [float(r.stall_ms) for r in self.windows]
+
+    @property
+    def dispatch_ms(self) -> list[float]:
+        """Legacy aggregate: per-window prep + submit (the two used to
+        be timed as one number)."""
+        return [p + s for p, s in zip(self.prep_ms, self.submit_ms)]
+
+    @property
+    def h2d_bytes(self) -> int:
+        """Total host->device bytes across the run (chunk production +
+        per-window serving uploads)."""
+        return int(sum(int(r.h2d_bytes) for r in self.windows))
 
     @property
     def total_revenue(self) -> float:
@@ -205,8 +236,9 @@ class StreamStats:
 
 def run_stream(pipeline: ServingPipeline, sizes: list[int],
                source, *, lam_trace=None, budget_trace=None,
-               scale_trace=None, forecast: bool = False) -> StreamStats:
-    """Drive the pipeline through ``sizes``, double-buffering host prep.
+               scale_trace=None, forecast: bool = False,
+               prefetch: int = 2) -> StreamStats:
+    """Drive the pipeline through ``sizes``, prefetching host prep.
 
     ``source`` produces each window's arrivals and runs while the
     device executes the previous window.  Two forms:
@@ -235,27 +267,41 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
     the NEXT window's CI needs it instead of lagging the swing by one
     window (the lambda-lag gap benchmarked in bench_carbon.py).  With
     constant traces this is a bit-exact no-op.
+
+    ``prefetch`` > 0 moves chunk production to ONE background thread
+    feeding a bounded queue (depth = ``prefetch``): the serving thread
+    only blocks when a chunk is not ready yet (recorded per window as
+    ``stall_ms``), and host prep genuinely overlaps device execution
+    instead of merely overlapping async dispatch.  Windows are produced
+    strictly in t order by a single worker and every window is a pure
+    function of (seed, t), so the prefetched stream is BITWISE
+    identical to ``prefetch=0`` (the sequential double-buffered path,
+    kept as the parity/debug reference).
     """
     streaming = hasattr(source, "window")
 
     def _prep(t: int, n: int):
+        p0 = time.perf_counter()
         if streaming:
             chunk = source.window(t, n)
-            return chunk.ctx, chunk.rows, chunk.tables
-        ctx, rows = source(t, n)
-        return ctx, rows, None
+            out = (chunk.ctx, chunk.rows, chunk.tables,
+                   int(getattr(chunk, "h2d_bytes", 0)))
+        else:
+            ctx, rows = source(t, n)
+            out = (ctx, rows, None, 0)
+        return out + ((time.perf_counter() - p0) * 1e3,)
 
     t0 = time.perf_counter()
-    dispatch_ms: list[float] = []
+    submit_ms: list[float] = []
     results: list[WindowResult] = []
-    nxt = _prep(0, sizes[0])
     last = len(sizes) - 1
-    for t, n in enumerate(sizes):
-        ctx, rows, tables = nxt
+
+    def _serve(t: int, item, stall: float):
+        ctx, rows, tables, h2d, prep = item
         d0 = time.perf_counter()
         lam = None if lam_trace is None else lam_trace[t]
         t_next = min(t + 1, last)  # final window: nothing left to aim at
-        results.append(pipeline.serve_window(
+        res = pipeline.serve_window(
             ctx, rows, lam=lam, tables=tables,
             budget=None if budget_trace is None else budget_trace[t],
             cost_scale=None if scale_trace is None else scale_trace[t],
@@ -264,12 +310,52 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
                          else None),
             dual_cost_scale=(scale_trace[t_next]
                              if forecast and scale_trace is not None
-                             else None)))
-        dispatch_ms.append((time.perf_counter() - d0) * 1e3)
-        if t + 1 < len(sizes):  # prep t+1 while the device runs t
-            nxt = _prep(t + 1, sizes[t + 1])
+                             else None))
+        submit_ms.append((time.perf_counter() - d0) * 1e3)
+        res.prep_ms += prep
+        res.stall_ms += stall
+        res.h2d_bytes += h2d
+        results.append(res)
+
+    if prefetch > 0:
+        import queue
+        import threading
+
+        q: queue.Queue = queue.Queue(maxsize=max(1, int(prefetch)))
+
+        def _worker():
+            try:
+                for t, n in enumerate(sizes):
+                    q.put(_prep(t, n))
+            except BaseException as e:  # surface in the serving thread
+                q.put(e)
+
+        th = threading.Thread(target=_worker, daemon=True,
+                              name="chunk-prefetch")
+        th.start()
+        try:
+            for t, n in enumerate(sizes):
+                s0 = time.perf_counter()
+                item = q.get()
+                stall = (time.perf_counter() - s0) * 1e3
+                if isinstance(item, BaseException):
+                    raise item
+                _serve(t, item, stall)
+        finally:
+            while th.is_alive():  # unblock a worker stuck on q.put
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    pass
+                th.join(timeout=0.05)
+    else:  # sequential double-buffered reference path
+        nxt = _prep(0, sizes[0])
+        for t, n in enumerate(sizes):
+            _serve(t, nxt, 0.0)
+            if t + 1 < len(sizes):  # prep t+1 while the device runs t
+                nxt = _prep(t + 1, sizes[t + 1])
     for r in results:  # drain: force every window's device work
         r.revenue_np
     return StreamStats(windows=results, sizes=list(sizes),
-                       dispatch_ms=dispatch_ms,
+                       submit_ms=submit_ms,
                        wall_s=time.perf_counter() - t0)

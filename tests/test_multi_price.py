@@ -332,19 +332,21 @@ def test_geo_router_shifts_toward_greener_region(tiny_stack):
     majority green and respects per-region gram caps.  The proportional
     cost structure makes the dual equilibrium degenerate (every request
     flips region at once under a pure argmax), so the router runs with
-    ``region_jitter`` - the per-request perturbation that turns the
-    knife edge into a stable proportional split - and a faster-decaying
-    dual step so the published prices settle inside the jitter band."""
+    the exact flow split (``RegionAxis(split="flow")`` - the
+    proportional rounding of the degenerate window) and a
+    faster-decaying dual step so the published prices settle."""
     from repro.core.primal_dual import DualDescentConfig
     from repro.serving.pipeline import ServingPipeline
+    from repro.serving.spec import ConstraintSpec, GlobalAxis, RegionAxis
 
     chains, server, params, rcfg = tiny_stack
     b = 64
     kappa = 3.2e-7
     flops_budget = 0.45 * float(chains.costs.max()) * b
-    geo = ServingPipeline(
-        server, params, rcfg, flops_budget, n_regions=2,
-        region_jitter=0.2,
+    geo = ServingPipeline.from_spec(
+        server, params, rcfg,
+        ConstraintSpec([RegionAxis(2, split="flow"),
+                        GlobalAxis(budget=float(flops_budget))]),
         dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
     ci = np.array([600.0, 200.0])  # region 1 is 3x greener
     scales = kappa * ci

@@ -1,8 +1,8 @@
 """Declarative ConstraintSpec API: the ISSUE acceptance gates.
 
   * axis/spec validation and the legacy-kwargs -> spec mapping
-    (``spec_from_legacy``), including the ``region_jitter``
-    deprecation;
+    (``spec_from_legacy``), including the removal of the old
+    ``region_jitter`` knob;
   * property-style parity: any SINGLE-AXIS ConstraintSpec reproduces
     the corresponding legacy flag path bit-identically (decisions,
     lambda traces, spends) across shared / priced / geo / carbon;
@@ -59,12 +59,17 @@ def test_axis_validation():
         ConstraintSpec(["tenants"]).compile()
 
 
-def test_region_jitter_deprecation_selects_flow():
-    with pytest.warns(DeprecationWarning, match="flow"):
-        ax = RegionAxis(2, split="argmax", jitter=0.2)
-    assert ax.split == "flow"
-    with pytest.warns(DeprecationWarning, match="region_jitter"):
-        spec = spec_from_legacy(10.0, n_regions=2, region_jitter=0.3)
+def test_region_jitter_is_gone():
+    """The PR 5 deprecation window closed: RegionAxis has no jitter
+    field and spec_from_legacy no region_jitter kwarg; the explicit
+    split= knob is the only tie-rounding control."""
+    with pytest.raises(TypeError):
+        RegionAxis(2, jitter=0.2)
+    with pytest.raises(TypeError):
+        spec_from_legacy(10.0, n_regions=2, region_jitter=0.3)
+    assert spec_from_legacy(10.0, n_regions=2).compile().split == "argmax"
+    spec = ConstraintSpec([RegionAxis(2, split="flow"),
+                           GlobalAxis(budget=10.0)])
     assert spec.compile().split == "flow"
 
 

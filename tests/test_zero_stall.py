@@ -1,0 +1,335 @@
+"""Zero-stall streaming: device-resident chunk tables, true prefetch,
+and the donated dual chain.
+
+The PR 7 claim is that NONE of the fast-path machinery is observable in
+the numbers: the jitted device table builder is bitwise the host
+builder, the prefetched stream is bitwise the sequential one, the
+donated dual chain publishes the same prices as the undonated one, and
+the slab-keyed table cache returns the same tables it would recompute.
+Every test here pins one of those equivalences, plus the new
+observability surface (prep/stall/h2d in StreamStats).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def serving_stack(system_exp, system_reward):
+    from repro.cascade.engine import CascadeServer, precompute_stage_scores
+
+    exp = system_exp
+    params, rcfg = system_reward
+    scores = precompute_stage_scores(exp.models, exp.world,
+                                     exp.split.final_eval)
+    server = CascadeServer(stage_scores=scores, chains=exp.chains,
+                           clicks=exp.clicks_eval, expose=exp.cfg.expose)
+    return exp, server, params, rcfg
+
+
+def _gen_source(exp, *, device_tables, seed=3, chunk=64, workers=None,
+                n_users=50_000, table_cache=64):
+    from dataclasses import replace
+
+    from repro.data.request_source import GeneratedSource
+    from repro.data.synthetic import StreamingWorld
+
+    wcfg = replace(exp.cfg.world, n_users=n_users)
+    return GeneratedSource(StreamingWorld.build(wcfg), exp.models,
+                           exp.chains, expose=exp.cfg.expose, seed=seed,
+                           chunk=chunk, item_block=128,
+                           device_tables=device_tables, workers=workers,
+                           table_cache=table_cache)
+
+
+def _assert_window_parity(a, b, tag=""):
+    np.testing.assert_array_equal(a.decisions_np, b.decisions_np,
+                                  err_msg=f"{tag} decisions")
+    np.testing.assert_array_equal(a.revenue_np, b.revenue_np,
+                                  err_msg=f"{tag} revenue")
+    assert np.array_equal(np.asarray(a.spend), np.asarray(b.spend)), tag
+    assert np.array_equal(np.asarray(a.lam_after),
+                          np.asarray(b.lam_after)), tag
+
+
+def _geotenants_spec(chains, sizes):
+    from repro.serving.spec import (ConstraintSpec, GlobalAxis,
+                                    RegionAxis, TenantAxis)
+
+    per_req = 0.5 * float(chains.costs.max())
+    spec = ConstraintSpec([
+        TenantAxis((per_req * 24, per_req * 24), priced=True),
+        RegionAxis(2), GlobalAxis(pricing="carbon"),
+    ])
+    bt = [np.concatenate([np.full(2, per_req * n / 2),
+                          np.full(2, 0.6 * per_req * n)]).astype(
+        np.float32) for n in sizes]
+    st_ = [np.array([1.0, 1.3], np.float32)] * len(sizes)
+    return spec, bt, st_
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity: the full fast path vs the PR 6 reference path
+# ---------------------------------------------------------------------------
+
+
+def test_fast_path_parity_generated_plain(serving_stack):
+    """Generated source, plain pipeline: device tables + threaded chunk
+    scoring + prefetch + donation vs host tables + sequential prep +
+    undonated dual - bitwise identical windows."""
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.stream import run_stream
+
+    exp, _, params, rcfg = serving_stack
+    sizes = [32, 96, 32, 64]
+    budget = 0.5 * exp.chains.costs.max() * 32
+    ref = _gen_source(exp, device_tables=False)
+    fast = _gen_source(exp, device_tables=True, workers=2)
+    st_ref = run_stream(
+        ServingPipeline(ref.universe, params, rcfg, budget,
+                        donate_dual=False),
+        sizes, ref, prefetch=0)
+    st_fast = run_stream(
+        ServingPipeline(fast.universe, params, rcfg, budget,
+                        donate_dual=True),
+        sizes, fast, prefetch=2)
+    for t, (a, b) in enumerate(zip(st_ref.windows, st_fast.windows)):
+        _assert_window_parity(a, b, f"w{t}")
+
+
+def test_fast_path_parity_replay_geotenants(serving_stack):
+    """Replay source, combined tenant x region pipeline: the one-time
+    device table upload + per-window device gather vs host row slices -
+    bitwise, including regions and the (T, R) spend."""
+    from repro.data.request_source import TableReplaySource
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.stream import run_stream
+
+    exp, server, params, rcfg = serving_stack
+    sizes = [48, 96, 48]
+    spec, bt, st_ = _geotenants_spec(exp.chains, sizes)
+    ref = TableReplaySource.from_server(server, exp.ctx_eval, seed=7,
+                                        device_tables=False)
+    fast = TableReplaySource.from_server(server, exp.ctx_eval, seed=7,
+                                         device_tables=True)
+    st_ref = run_stream(
+        ServingPipeline.from_spec(ref.universe, params, rcfg, spec,
+                                  donate_dual=False),
+        sizes, ref, budget_trace=bt, scale_trace=st_, prefetch=0)
+    st_fast = run_stream(
+        ServingPipeline.from_spec(fast.universe, params, rcfg, spec,
+                                  donate_dual=True),
+        sizes, fast, budget_trace=bt, scale_trace=st_, prefetch=2)
+    for t, (a, b) in enumerate(zip(st_ref.windows, st_fast.windows)):
+        _assert_window_parity(a, b, f"geot w{t}")
+        np.testing.assert_array_equal(a.regions_np, b.regions_np)
+        np.testing.assert_array_equal(np.asarray(a.tr_spend),
+                                      np.asarray(b.tr_spend))
+    assert st_fast.h2d_bytes > 0  # one-time upload + per-window ids
+
+
+def test_device_table_builder_bitwise_vs_host(serving_stack):
+    """The jitted compaction pass returns exactly the host builder's
+    tables - including at a ragged (non-chunk-multiple) window."""
+    exp, _, _, _ = serving_stack
+    host = _gen_source(exp, device_tables=False)
+    dev = _gen_source(exp, device_tables=True)
+    for t, n in ((2, 64), (3, 37), (4, 100), (5, 1)):
+        a, b = host.window(t, n), dev.window(t, n)
+        assert isinstance(b.tables["p"], jnp.ndarray)
+        np.testing.assert_array_equal(a.ctx, b.ctx, err_msg=str((t, n)))
+        np.testing.assert_array_equal(
+            np.asarray(a.tables["p"], np.int32),
+            np.asarray(b.tables["p"]), err_msg=str((t, n)))
+        np.testing.assert_array_equal(
+            np.asarray(a.tables["ck"], np.float32),
+            np.asarray(b.tables["ck"]), err_msg=str((t, n)))
+
+
+# ---------------------------------------------------------------------------
+# Prefetch: determinism + stall accounting
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_deterministic_under_seed(serving_stack):
+    """Re-running the prefetched stream replays identical windows (each
+    is a pure function of (seed, t); the single ordered worker adds no
+    schedule dependence)."""
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.stream import run_stream
+
+    exp, _, params, rcfg = serving_stack
+    sizes = [32, 64, 32]
+    budget = 0.5 * exp.chains.costs.max() * 32
+    runs = []
+    for _ in range(2):
+        src = _gen_source(exp, device_tables=True, workers=2)
+        pipe = ServingPipeline(src.universe, params, rcfg, budget)
+        runs.append(run_stream(pipe, sizes, src, prefetch=3))
+    for t, (a, b) in enumerate(zip(runs[0].windows, runs[1].windows)):
+        _assert_window_parity(a, b, f"rerun w{t}")
+
+
+def test_prefetch_worker_exception_surfaces(serving_stack):
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.stream import run_stream
+
+    exp, _, params, rcfg = serving_stack
+    src = _gen_source(exp, device_tables=True)
+    pipe = ServingPipeline(src.universe, params, rcfg, 100.0)
+
+    class Boom(RuntimeError):
+        pass
+
+    class FailingSource:
+        def window(self, t, n):
+            if t == 1:
+                raise Boom("window 1 failed")
+            return src.window(t, n)
+
+    with pytest.raises(Boom, match="window 1"):
+        run_stream(pipe, [16, 16, 16], FailingSource(), prefetch=2)
+
+
+def test_stream_stats_timing_fields(serving_stack):
+    """dispatch_ms (legacy) == prep + submit per window; stall and h2d
+    are recorded; the prefetch=0 path reports zero stalls."""
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.stream import run_stream
+
+    exp, _, params, rcfg = serving_stack
+    sizes = [32, 64]
+    budget = 0.5 * exp.chains.costs.max() * 32
+    src = _gen_source(exp, device_tables=True)
+    st = run_stream(ServingPipeline(src.universe, params, rcfg, budget),
+                    sizes, src, prefetch=2)
+    assert len(st.prep_ms) == len(st.submit_ms) == len(sizes)
+    np.testing.assert_allclose(
+        st.dispatch_ms,
+        [p + s for p, s in zip(st.prep_ms, st.submit_ms)])
+    assert all(s >= 0.0 for s in st.stall_ms)
+    assert st.h2d_bytes > 0
+
+    src0 = _gen_source(exp, device_tables=True)
+    st0 = run_stream(
+        ServingPipeline(src0.universe, params, rcfg, budget),
+        sizes, src0, prefetch=0)
+    assert st0.stall_ms == [0.0] * len(sizes)
+
+
+# ---------------------------------------------------------------------------
+# Slab-keyed device table cache
+# ---------------------------------------------------------------------------
+
+
+def test_table_cache_hits_are_bitwise(serving_stack):
+    """A replayed window hits the cache (no rescoring) and returns the
+    same tables bit for bit; a cold source recomputes them equal."""
+    exp, _, _, _ = serving_stack
+    src = _gen_source(exp, device_tables=True)
+    a = src.window(4, 100)
+    misses = src.cache_misses
+    assert misses > 0 and src.cache_hits == 0
+    b = src.window(4, 100)  # same arrivals -> every chunk cached
+    assert src.cache_hits > 0 and src.cache_misses == misses
+    np.testing.assert_array_equal(np.asarray(a.tables["p"]),
+                                  np.asarray(b.tables["p"]))
+    np.testing.assert_array_equal(np.asarray(a.tables["ck"]),
+                                  np.asarray(b.tables["ck"]))
+    cold = _gen_source(exp, device_tables=True)
+    c = cold.window(4, 100)
+    np.testing.assert_array_equal(np.asarray(a.tables["p"]),
+                                  np.asarray(c.tables["p"]))
+
+
+def test_table_cache_lru_eviction(serving_stack):
+    exp, _, _, _ = serving_stack
+    src = _gen_source(exp, device_tables=True, table_cache=2)
+    src.window(0, 64)
+    src.window(1, 64)
+    src.window(2, 64)  # evicts window 0's slab
+    assert len(src._cache) == 2
+    misses = src.cache_misses
+    src.window(0, 64)  # cold again
+    assert src.cache_misses == misses + 1
+
+
+# ---------------------------------------------------------------------------
+# Donated dual chain
+# ---------------------------------------------------------------------------
+
+
+def test_donated_dual_bitwise_and_records_readable(serving_stack):
+    """Donation is invisible: same prices as donate_dual=False, and
+    every WindowResult's lam_before/lam_after stays host-readable after
+    the chain buffer is consumed by the next window."""
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.stream import run_stream
+
+    exp, server, params, rcfg = serving_stack
+    sizes = [48, 96, 48]
+    budget = 0.5 * exp.chains.costs.max() * 48
+
+    def sample(t, n):
+        rng = np.random.default_rng((7, t))
+        rows = rng.integers(0, exp.ctx_eval.shape[0], n)
+        return exp.ctx_eval[rows], rows
+
+    st_d = run_stream(
+        ServingPipeline(server, params, rcfg, budget, donate_dual=True),
+        sizes, sample)
+    st_u = run_stream(
+        ServingPipeline(server, params, rcfg, budget,
+                        donate_dual=False),
+        sizes, sample)
+    for t, (a, b) in enumerate(zip(st_d.windows, st_u.windows)):
+        _assert_window_parity(a, b, f"donate w{t}")
+        # the records are copies, not the donated buffers
+        assert np.isfinite(np.asarray(a.lam_before)).all()
+        assert np.isfinite(np.asarray(a.lam_after)).all()
+
+
+def test_donated_pipeline_survives_pinned_lam(serving_stack):
+    """An explicit-lam (orphan price) call between chained windows must
+    not invalidate the live chain buffer."""
+    from repro.serving.pipeline import ServingPipeline
+
+    exp, server, params, rcfg = serving_stack
+    n = 48
+    budget = 0.5 * exp.chains.costs.max() * n
+    rng = np.random.default_rng(11)
+    rows = rng.integers(0, exp.ctx_eval.shape[0], n)
+    ctx = exp.ctx_eval[rows]
+    pipe = ServingPipeline(server, params, rcfg, budget,
+                           donate_dual=True)
+    r1 = pipe.serve_window(ctx, rows)
+    pinned = pipe.serve_window(ctx, rows, lam=0.5, update_lam=False)
+    assert float(np.asarray(pinned.lam_before)) == 0.5
+    r2 = pipe.serve_window(ctx, rows)  # chain continues from r1's price
+    assert np.array_equal(np.asarray(r2.lam_before),
+                          np.asarray(r1.lam_after))
+
+
+# ---------------------------------------------------------------------------
+# Zero steady-state recompiles on the fast path
+# ---------------------------------------------------------------------------
+
+
+def test_zero_steady_recompiles_fast_path(serving_stack):
+    """Device tables + prefetch + donation under a 10x swing: every
+    bucket compiles once, steady state never recompiles."""
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.stream import run_stream
+
+    exp, _, params, rcfg = serving_stack
+    src = _gen_source(exp, device_tables=True, workers=2)
+    b = 32
+    budget = 0.5 * exp.chains.costs.max() * b
+    pipe = ServingPipeline(src.universe, params, rcfg, budget,
+                           bucketing="pow2", donate_dual=True)
+    sizes = [b, 10 * b, b, 10 * b, b, 10 * b]
+    st = run_stream(pipe, sizes, src, prefetch=2)
+    assert st.steady_compiles == 0
+    assert st.compiles[2] == st.compiles[3] == st.compiles[4] == 0
+    assert st.total_revenue > 0
