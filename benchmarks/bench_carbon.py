@@ -204,6 +204,8 @@ def run(*, windows: int = 24, requests: int = 64, band_frac: float = 0.5,
         }
         print(f"[bench_carbon] wrote {os.path.abspath(report_path)}")
     if json_path is not None:
+        from repro.obs.env import env_info
+        result["env"] = env_info()
         path = os.path.abspath(json_path)
         with open(path, "w") as f:
             json.dump(result, f, indent=2)

@@ -133,6 +133,8 @@ def run(*, users: int = 160, items: int = 200, expose: int = 8,
         "exact_match_vs_seed": exact_vs_seed,
     }
     if json_path is not None:
+        from repro.obs.env import env_info
+        result["env"] = env_info()
         path = os.path.abspath(json_path)
         with open(path, "w") as f:
             json.dump(result, f, indent=2)

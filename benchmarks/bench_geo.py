@@ -219,6 +219,8 @@ def run(*, windows: int = 24, requests: int = 48, band_frac: float = 0.5,
                                          for r in rows_out)),
     }
     if json_path is not None:
+        from repro.obs.env import env_info
+        result["env"] = env_info()
         path = os.path.abspath(json_path)
         with open(path, "w") as f:
             json.dump(result, f, indent=2)

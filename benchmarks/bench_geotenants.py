@@ -381,6 +381,8 @@ def run(*, windows: int = 24, requests: int = 48, n_tenants: int = 3,
                                          for r in rows_out)),
     }
     if json_path is not None:
+        from repro.obs.env import env_info
+        result["env"] = env_info()
         path = os.path.abspath(json_path)
         with open(path, "w") as f:
             json.dump(result, f, indent=2)

@@ -120,6 +120,8 @@ def run(*, windows: int = 40, requests: int = 96, budget_frac: float = 0.6,
         "decision_parity": True,  # asserted above
     }
     if json_path is not None:
+        from repro.obs.env import env_info
+        result["env"] = env_info()
         path = os.path.abspath(json_path)
         with open(path, "w") as f:
             json.dump(result, f, indent=2)

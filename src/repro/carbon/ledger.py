@@ -95,7 +95,9 @@ class CarbonLedger:
                  cfg: EnergyConfig | None = None, window_s: float = 3600.0,
                  phase_s: float = 0.0,
                  embodied_g_per_device_h: float = 0.0, n_devices: int = 1,
-                 name: str = "serving"):
+                 name: str = "serving", obs=None):
+        from repro.obs import get_obs
+        self.obs = get_obs(obs)
         self.chains = chains
         self.trace = trace
         self.cfg = cfg or EnergyConfig()
@@ -127,6 +129,21 @@ class CarbonLedger:
                 self._stage_table[j, k] = f
                 self._model_table[j, names.index(m.name)] += f
         self._max_cost = float(chains.costs.max())
+
+        # metered-total mirrors (labeled per ledger, e.g. per region)
+        m = self.obs.metrics
+        self._windows_c = m.counter(
+            "greenflow_ledger_windows_total",
+            "windows metered by the carbon ledger").labels(name=name)
+        self._flops_c = m.counter(
+            "greenflow_flops_total",
+            "realized FLOPs metered", "FLOPs").labels(name=name)
+        self._kwh_c = m.counter(
+            "greenflow_energy_kwh_total",
+            "operational energy metered (Eq. 1)", "kWh").labels(name=name)
+        self._gco2e_c = m.counter(
+            "greenflow_gco2e_total",
+            "operational carbon metered (Eq. 2)", "g").labels(name=name)
 
     # -- recording ----------------------------------------------------------
 
@@ -164,6 +181,10 @@ class CarbonLedger:
             model_flops={m: float(v)
                          for m, v in zip(self.model_names, per_model)})
         self._entries.append(entry)
+        self._windows_c.inc()
+        self._flops_c.inc(flops)
+        self._kwh_c.inc(kwh)
+        self._gco2e_c.inc(kwh * ci)
         return entry
 
     def record_result(self, result) -> None:
@@ -173,8 +194,13 @@ class CarbonLedger:
 
     def _drain(self) -> None:
         pending, self._pending = self._pending, []
-        for res in pending:
-            self.record(res.decisions_np)
+        if not pending:
+            return
+        # lazy metering: this is the only place ledger work reads device
+        # arrays, and it runs at report time, never inside the stream
+        with self.obs.span("ledger", windows=len(pending)):
+            for res in pending:
+                self.record(res.decisions_np)
 
     @property
     def entries(self) -> list[WindowCarbonEntry]:

@@ -152,7 +152,8 @@ class GeneratedSource(RequestSource):
     def __init__(self, world: StreamingWorld, models: CascadeModels,
                  chains, *, expose: int, seed: int = 0, chunk: int = 512,
                  item_block: int = 256, device_tables: bool = True,
-                 table_cache: int = 64, workers: int | None = None):
+                 table_cache: int = 64, workers: int | None = None,
+                 obs=None):
         self.world = world
         self.models = models
         self.chains = chains
@@ -174,8 +175,18 @@ class GeneratedSource(RequestSource):
         self._cache_cap = int(table_cache)
         self._lock = threading.Lock()
         self._pool = None
+        # the plain ints stay authoritative (bench/report reads survive
+        # a disabled registry); the obs counters mirror them
         self.cache_hits = 0
         self.cache_misses = 0
+        from repro.obs import get_obs
+        self.obs = get_obs(obs)
+        self._hits_c = self.obs.metrics.counter(
+            "greenflow_table_cache_hits_total",
+            "slab-table cache hits (a hit IS the chunk result)")
+        self._misses_c = self.obs.metrics.counter(
+            "greenflow_table_cache_misses_total",
+            "slab-table cache misses (chunk scored + compacted)")
 
     def _n_items(self) -> int:
         return int(self.world.cfg.n_items)
@@ -328,8 +339,10 @@ class GeneratedSource(RequestSource):
             if hit is not None:
                 self._cache.move_to_end(key)
                 self.cache_hits += 1
+                self._hits_c.inc()
                 return (*hit, 0)
             self.cache_misses += 1
+            self._misses_c.inc()
         m = len(ids)
         slab = self.world.user_slab(ids)
         ctx = slab.reward_context(np.arange(m))
@@ -386,14 +399,17 @@ class GeneratedSource(RequestSource):
 
         chunk_ids = [users[lo:lo + self.chunk]
                      for lo in range(0, n, self.chunk)]
-        if self.workers > 1 and len(chunk_ids) > 1:
-            if self._pool is None:
-                self._pool = ThreadPoolExecutor(
-                    max_workers=self.workers,
-                    thread_name_prefix="chunk-score")
-            parts = list(self._pool.map(self._chunk_tables, chunk_ids))
-        else:
-            parts = [self._chunk_tables(ids) for ids in chunk_ids]
+        with self.obs.span("chunk_tables", t=t, n=n,
+                           chunks=len(chunk_ids)):
+            if self.workers > 1 and len(chunk_ids) > 1:
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=self.workers,
+                        thread_name_prefix="chunk-score")
+                parts = list(self._pool.map(self._chunk_tables,
+                                            chunk_ids))
+            else:
+                parts = [self._chunk_tables(ids) for ids in chunk_ids]
         if len(parts) == 1:
             ctx, p, ck, h2d = parts[0]
         else:

@@ -84,6 +84,14 @@ Scenario flags
 
 Reports per-window spend/lambda/downgrades/revenue, host dispatch time,
 and the final PFEC summary.
+
+Observability (repro/obs/): --metrics-out PATH writes a Prometheus-text
+snapshot (+ PATH.json + PATH.windows.jsonl per-window flight log),
+--trace-out PATH writes the host span trace as Chrome trace-event JSON
+(open in ui.perfetto.dev), --obs-interval N prints a live line every N
+windows, --profile-dir DIR wraps the run in jax.profiler.trace with
+host spans as TraceAnnotations.  Telemetry never changes decisions or
+prices - enabled runs are bitwise identical to disabled runs.
 """
 from __future__ import annotations
 
@@ -173,23 +181,23 @@ def _build_ci_trace(args):
 
 def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
                    sample_window, pricing, mesh=None, forecast=False,
-                   prefetch=2):
+                   prefetch=2, obs=None):
     """Fused-pipeline carbon day: per-window gram budgets + CI-scaled
     costs threaded through run_stream (carbon pricing) or the
     effective-FLOPs-budget reduction (flops pricing); ``forecast`` aims
     each nearline dual update at the NEXT window's CI."""
     sched = cb.schedule(len(sizes))
     pipe = ServingPipeline(server, params, rcfg, cb.flops_ref,
-                           ledger=ledger, mesh=mesh)
+                           ledger=ledger, mesh=mesh, obs=obs)
     if pricing == "carbon":
         st = run_stream(pipe, sizes, sample_window,
                         budget_trace=sched["grams"],
                         scale_trace=sched["scale"], forecast=forecast,
-                        prefetch=prefetch)
+                        prefetch=prefetch, obs=obs)
     else:
         st = run_stream(pipe, sizes, sample_window,
                         budget_trace=sched["flops_budget"],
-                        forecast=forecast, prefetch=prefetch)
+                        forecast=forecast, prefetch=prefetch, obs=obs)
     print(f"{'win':>4} {'n':>5} {'ci_g/kwh':>9} {'spend/budget':>13} "
           f"{'lam':>12} {'downgraded':>10} {'revenue':>9} "
           f"{'dispatch_ms':>11}")
@@ -205,7 +213,7 @@ def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
 
 
 def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
-                sample_window, mesh=None):
+                sample_window, mesh=None, obs=None):
     """Two-region geo-shifted serving day: (R,) per-region gram budgets
     and kappa*CI_r(t) cost scales through the fused router, per-region
     CarbonLedgers merged into one region-attributed CSV."""
@@ -240,18 +248,19 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
         GlobalAxis(budget=float(flops_budget), pricing="carbon"),
     ])
     pipe = ServingPipeline.from_spec(
-        server, params, rcfg, spec, mesh=mesh,
+        server, params, rcfg, spec, mesh=mesh, obs=obs,
         dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
     st = run_stream(pipe, sizes, sample_window,
                     budget_trace=budget_trace, scale_trace=scale_trace,
-                    forecast=args.ci_forecast, prefetch=args.prefetch)
+                    forecast=args.ci_forecast, prefetch=args.prefetch,
+                    obs=obs)
     header = " ".join(f"{'ci_' + r[-1]:>6} {'spd/bud_' + r[-1]:>9}"
                       for r in names)
     print(f"{'win':>4} {'n':>5} {'split':>12} {header} {'revenue':>9} "
           f"{'dispatch_ms':>11}")
     ledgers = {
         r: CarbonLedger(chains, traces[r], window_s=window_s,
-                        phase_s=phase_s, name=r,
+                        phase_s=phase_s, name=r, obs=obs,
                         embodied_g_per_device_h=args.embodied_g_per_device_h,
                         n_devices=args.devices)
         for r in names}
@@ -290,7 +299,8 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
 
 
 def _geotenants_stream(chains, server, params, rcfg, sizes,
-                       flops_budget, args, sample_window, mesh=None):
+                       flops_budget, args, sample_window, mesh=None,
+                       obs=None):
     """The combined tenant x region day: per-tenant gram budgets AND
     per-region gram caps priced in one fused pass (the ConstraintSpec
     headline).  Budget trace entries are the (T + R,) concatenation -
@@ -345,18 +355,19 @@ def _geotenants_stream(chains, server, params, rcfg, sizes,
         GlobalAxis(pricing="carbon"),
     ])
     pipe = ServingPipeline.from_spec(
-        server, params, rcfg, spec, mesh=mesh,
+        server, params, rcfg, spec, mesh=mesh, obs=obs,
         dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
     st = run_stream(pipe, sizes, sample_window,
                     budget_trace=budget_trace, scale_trace=scale_trace,
-                    forecast=args.ci_forecast, prefetch=args.prefetch)
+                    forecast=args.ci_forecast, prefetch=args.prefetch,
+                    obs=obs)
     t_hdr = " ".join(f"{'t' + str(k) + ' s/b':>8}" for k in range(t_n))
     r_hdr = " ".join(f"{'r_' + r[-1] + ' s/b':>8}" for r in names)
     print(f"{'win':>4} {'n':>5} {'split':>12} {t_hdr} {r_hdr} "
           f"{'revenue':>9} {'dispatch_ms':>11}")
     ledgers = {
         r: CarbonLedger(chains, traces[r], window_s=window_s,
-                        phase_s=phase_s, name=r,
+                        phase_s=phase_s, name=r, obs=obs,
                         embodied_g_per_device_h=args.embodied_g_per_device_h,
                         n_devices=args.devices)
         for r in names}
@@ -497,6 +508,23 @@ def main():
     ap.add_argument("--cache-dir", default=None,
                     help="persistent JAX compilation-cache directory: "
                          "repeat runs skip XLA compiles entirely")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a Prometheus-text metrics snapshot here "
+                         "at exit (plus a JSON snapshot at PATH.json and "
+                         "the per-window JSONL flight log at "
+                         "PATH.windows.jsonl)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the host span trace as Chrome "
+                         "trace-event JSON (open in ui.perfetto.dev or "
+                         "chrome://tracing; prefetch and serving "
+                         "threads land on separate tracks)")
+    ap.add_argument("--obs-interval", type=int, default=0,
+                    help=">0: print a compact live telemetry line every "
+                         "N windows")
+    ap.add_argument("--profile-dir", default=None,
+                    help="run under jax.profiler.trace writing here; "
+                         "host spans become TraceAnnotations lined up "
+                         "against XLA device events")
     args = ap.parse_args()
     if args.cache_dir:
         import jax
@@ -508,6 +536,20 @@ def main():
         from repro.carbon.ledger import \
             DEFAULT_EMBODIED_G_PER_DEVICE_H  # scenario that meters it
         args.embodied_g_per_device_h = DEFAULT_EMBODIED_G_PER_DEVICE_H
+
+    obs = None
+    if (args.metrics_out or args.trace_out or args.obs_interval
+            or args.profile_dir):
+        from repro.obs import Obs, WindowEventLog
+        obs = Obs(events=(WindowEventLog(args.metrics_out
+                                         + ".windows.jsonl")
+                          if args.metrics_out else None),
+                  interval=args.obs_interval,
+                  annotate=bool(args.profile_dir))
+    if args.profile_dir:
+        import jax
+        jax.profiler.start_trace(args.profile_dir)
+        print(f"[obs] jax profiler trace -> {args.profile_dir}")
 
     print("[serve] building world + training cascade & reward models ...")
     exp, server, params, rcfg = build_serving_stack(
@@ -534,7 +576,7 @@ def main():
             wcfg = replace(exp.cfg.world, n_users=args.users)
             source = GeneratedSource(StreamingWorld.build(wcfg),
                                      exp.models, chains,
-                                     expose=exp.cfg.expose)
+                                     expose=exp.cfg.expose, obs=obs)
             print(f"[serve] source: generated stream over "
                   f"U={args.users:,} hash-materialized users (no per-"
                   f"user tables held)")
@@ -583,7 +625,7 @@ def main():
         ledger = CarbonLedger(
             chains, trace, window_s=window_s, phase_s=cb.phase_s,
             embodied_g_per_device_h=args.embodied_g_per_device_h,
-            n_devices=args.devices)
+            n_devices=args.devices, obs=obs)
         print(f"[serve] carbon day: {len(sizes)} windows x "
               f"{window_s / 3600.0:.2f} h, CI '{trace.name}' mean "
               f"{trace.mean():.0f} g/kWh, budget "
@@ -597,7 +639,8 @@ def main():
             total_rev, total_flops = _carbon_stream(
                 server, params, rcfg, sizes, cb, ledger,
                 sample_window, args.carbon_pricing, mesh=mesh,
-                forecast=args.ci_forecast, prefetch=args.prefetch)
+                forecast=args.ci_forecast, prefetch=args.prefetch,
+                obs=obs)
         report_path = args.carbon_report or os.path.join(
             os.path.dirname(__file__), "..", "..", "..", "results",
             "carbon_report.csv")
@@ -624,7 +667,7 @@ def main():
                              "(the router exists only in the fused pass)")
         total_rev, total_flops = _geo_stream(
             chains, server, params, rcfg, sizes, float(budget), args,
-            sample_window, mesh=mesh)
+            sample_window, mesh=mesh, obs=obs)
     elif args.scenario == "geotenants":
         if args.legacy:
             raise SystemExit("--scenario geotenants has no legacy loop "
@@ -632,20 +675,20 @@ def main():
                              "only in the fused pipeline)")
         total_rev, total_flops = _geotenants_stream(
             chains, server, params, rcfg, sizes, float(budget), args,
-            sample_window, mesh=mesh)
+            sample_window, mesh=mesh, obs=obs)
     elif args.legacy:
         total_rev, total_flops = _legacy_loop(exp, server, params, rcfg,
                                               sizes, budget)
     else:
         if args.scenario == "tenants" and args.tenant_mode == "independent":
             pipes = [ServingPipeline(server, params, rcfg,
-                                     budget / n_tenants)
+                                     budget / n_tenants, obs=obs)
                      for _ in range(n_tenants)]
             stats = []
             for p in pipes:
                 stats.append(run_stream(
                     p, [n // n_tenants for n in sizes], sample_window,
-                    prefetch=args.prefetch))
+                    prefetch=args.prefetch, obs=obs))
             total_rev = sum(s.total_revenue for s in stats)
             total_flops = sum(s.total_spend for s in stats)
             for t in range(len(sizes)):
@@ -661,9 +704,9 @@ def main():
                                    mesh=mesh, tenant_budgets=tb,
                                    tenant_mode=(args.tenant_mode
                                                 if tb is not None
-                                                else "shared"))
+                                                else "shared"), obs=obs)
             st = run_stream(pipe, sizes, sample_window,
-                            prefetch=args.prefetch)
+                            prefetch=args.prefetch, obs=obs)
             total_rev, total_flops = st.total_revenue, st.total_spend
             priced = tb is not None and args.tenant_mode == "priced"
             lam_hdr = "lam(per-tenant)" if priced else "lam"
@@ -691,6 +734,23 @@ def main():
     rep = pfec_report(clicks=float(total_rev), flops=float(total_flops))
     for k, v in rep.as_row().items():
         print(f"    {k:14s} {v}")
+
+    if args.profile_dir:
+        import jax
+        jax.profiler.stop_trace()
+    if obs is not None:
+        import os
+        if args.metrics_out:
+            prom, js = obs.export(args.metrics_out)
+            print(f"[obs] metrics -> {prom} (+ {os.path.basename(js)})")
+            if obs.events is not None:
+                print(f"[obs] window log -> {obs.events.path} "
+                      f"({obs.events.rows_written} rows)")
+        if args.trace_out:
+            path = obs.tracer.write(args.trace_out)
+            print(f"[obs] trace -> {path} "
+                  f"({len(obs.tracer.events)} spans; open in "
+                  f"ui.perfetto.dev)")
     return 0
 
 

@@ -90,6 +90,27 @@ A map of the unified allocator core and the layers over it:
       spec-buildable via ``from_spec``), and the CarbonLedger
       (operational + embodied metering, per-region attribution for
       geo serving).
+  obs (repro.obs)         the FLIGHT RECORDER over all of the above:
+      a pure-Python metrics registry (counters / gauges / fixed-
+      bucket log2 histograms under the ``greenflow_*`` namespace -
+      see ``repro/obs/__init__.py`` for the full metric table), span
+      tracing (``prep``/``stall``/``serve``/``h2d``/``dispatch``/
+      ``dual_update``/``chunk_tables``/``ledger``/
+      ``block_until_ready``) exported as Chrome trace-event JSON
+      (ui.perfetto.dev; the chunk-prefetch worker and the serving
+      thread render as separate tracks), and a per-window JSONL
+      event log (size, bucket, per-axis lambda / spend vs budget by
+      ``CompiledSpec.k_names``, FLOPs, gCO2e, h2d bytes, prep /
+      stall / submit ms, recompiles).  Pass an ``Obs`` into
+      ``run_stream`` / ``ServingPipeline`` / ``GeneratedSource`` /
+      ``CarbonLedger`` (CLI: ``--metrics-out``, ``--trace-out``,
+      ``--obs-interval``, ``--profile-dir``).  Two invariants, both
+      pinned by tests/test_obs.py and bench_scale gates: telemetry
+      on vs off is BITWISE identical (device arrays are only read in
+      the post-drain flush), and disabled telemetry is free (shared
+      no-op singletons, zero allocations on the window hot path).
+      ``run_stream(..., clock=...)`` injects the timing clock so
+      tests pin prep/stall/submit attribution deterministically.
 
 ``launch/serve.py`` is the CLI front end (--scenario ... --source
 table|generated|memmap --tenant-mode shared|priced --geo-split

@@ -206,7 +206,7 @@ class ServingPipeline:
                  n_regions: int | None = None,
                  lam_init: float = 0.0, ledger=None,
                  donate_dual: bool = True,
-                 spec: ConstraintSpec | None = None):
+                 spec: ConstraintSpec | None = None, obs=None):
         if spec is None:
             spec = spec_from_legacy(
                 float(budget_per_window), tenant_budgets=tenant_budgets,
@@ -216,6 +216,8 @@ class ServingPipeline:
         self._cs = cs
         self.server = server
         self.ledger = ledger  # optional CarbonLedger (lazy metering hook)
+        from repro.obs import get_obs
+        self.obs = get_obs(obs)  # host spans only; never touches numerics
         self.chains = server.chains
         self.reward_params = reward_params
         self.reward_cfg = reward_cfg
@@ -293,14 +295,14 @@ class ServingPipeline:
                   guard: bool = True, mesh=None, pad_quantum: int = 32,
                   bucketing: str = "linear", lam_init: float = 0.0,
                   ledger=None,
-                  donate_dual: bool = True) -> "ServingPipeline":
+                  donate_dual: bool = True, obs=None) -> "ServingPipeline":
         """Build the pipeline from a declarative ConstraintSpec (the
         compiled total budget seeds ``budget_per_window``)."""
         return cls(server, reward_params, reward_cfg,
                    spec.compile().total_budget, dual_cfg=dual_cfg,
                    guard=guard, mesh=mesh, pad_quantum=pad_quantum,
                    bucketing=bucketing, lam_init=lam_init, ledger=ledger,
-                   donate_dual=donate_dual, spec=spec)
+                   donate_dual=donate_dual, spec=spec, obs=obs)
 
     # -- fused pass -----------------------------------------------------------
 
@@ -997,11 +999,14 @@ class ServingPipeline:
         chunked = tables is not None
         self._h2d_window = int(ctx.nbytes + rows.nbytes + valid.nbytes
                                + (k_of.nbytes if k_of is not None else 0))
-        if chunked:
-            run_tables = self._pad_chunk_tables(tables, n, b)
-            rows = perm.astype(np.int32)  # gather within the padded chunk
-        else:
-            run_tables = self._tables
+        with self.obs.span("h2d", n=n, b=b):
+            if chunked:
+                run_tables = self._pad_chunk_tables(tables, n, b)
+                rows = perm.astype(np.int32)  # gather within padded chunk
+            else:
+                run_tables = self._tables
+            ctx_j = jnp.asarray(ctx)
+            rows_j = jnp.asarray(rows, jnp.int32)
         key = (b, b != n, chunked)
         if key not in self._fns:
             self._fns[key] = (self._build_main_fn(b, b != n),
@@ -1043,9 +1048,9 @@ class ServingPipeline:
         else:
             bud_j, sc_j = jnp.float32(bud), jnp.float32(sc)
             args = (lam_in, bud_j, sc_j)
-        out = main_fn(self.reward_params, run_tables,
-                      jnp.asarray(ctx), jnp.asarray(rows, jnp.int32),
-                      valid_j, *args)
+        with self.obs.span("dispatch", n=n, b=b):
+            out = main_fn(self.reward_params, run_tables,
+                          ctx_j, rows_j, valid_j, *args)
         (rewards, dec, rev, spend, flops, dg, t_spend, regions,
          r_spend) = out[:9]
         tr_spend = out[9] if len(out) > 9 else None
@@ -1056,38 +1061,41 @@ class ServingPipeline:
         # dual_budget/dual_cost_scale retarget it at the next window's
         # constraint (CI-forecast warm-start); defaults keep this
         # window's, bit-identical to the non-forecast behavior.
-        if combined:
-            d_bud = bud_j if dual_budget is None \
-                else jnp.asarray(np.asarray(dual_budget,
-                                            np.float32).reshape(-1))
-            d_sc = sc_j if dual_cost_scale is None \
-                else jnp.asarray(np.asarray(dual_cost_scale, np.float32))
-            lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
-                              lam_dual, d_bud, d_sc)
-        elif geo:
-            d_bud = bud_j if dual_budget is None \
-                else jnp.asarray(np.asarray(dual_budget, np.float32))
-            d_sc = sc_j if dual_cost_scale is None \
-                else jnp.asarray(np.asarray(dual_cost_scale, np.float32))
-            lam_new = dual_fn(rewards, valid_j, lam_dual, d_bud, d_sc)
-        elif tb is not None:
-            d_bud = bud_j if dual_budget is None \
-                else jnp.asarray(np.asarray(dual_budget,
-                                            np.float32).reshape(-1))
-            d_sc = sc_j if dual_cost_scale is None \
-                else jnp.float32(dual_cost_scale)
-            if cs.tenant_priced:
+        with self.obs.span("dual_update", n=n, b=b):
+            if combined:
+                d_bud = bud_j if dual_budget is None \
+                    else jnp.asarray(np.asarray(dual_budget,
+                                                np.float32).reshape(-1))
+                d_sc = sc_j if dual_cost_scale is None \
+                    else jnp.asarray(np.asarray(dual_cost_scale,
+                                                np.float32))
                 lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
                                   lam_dual, d_bud, d_sc)
-            else:  # shared price descends on the TOTAL budget
-                lam_new = dual_fn(rewards, valid_j, lam_dual,
-                                  jnp.sum(d_bud), d_sc)
-        else:
-            d_bud = bud_j if dual_budget is None else jnp.float32(
-                dual_budget)
-            d_sc = sc_j if dual_cost_scale is None else jnp.float32(
-                dual_cost_scale)
-            lam_new = dual_fn(rewards, valid_j, lam_dual, d_bud, d_sc)
+            elif geo:
+                d_bud = bud_j if dual_budget is None \
+                    else jnp.asarray(np.asarray(dual_budget, np.float32))
+                d_sc = sc_j if dual_cost_scale is None \
+                    else jnp.asarray(np.asarray(dual_cost_scale,
+                                                np.float32))
+                lam_new = dual_fn(rewards, valid_j, lam_dual, d_bud, d_sc)
+            elif tb is not None:
+                d_bud = bud_j if dual_budget is None \
+                    else jnp.asarray(np.asarray(dual_budget,
+                                                np.float32).reshape(-1))
+                d_sc = sc_j if dual_cost_scale is None \
+                    else jnp.float32(dual_cost_scale)
+                if cs.tenant_priced:
+                    lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
+                                      lam_dual, d_bud, d_sc)
+                else:  # shared price descends on the TOTAL budget
+                    lam_new = dual_fn(rewards, valid_j, lam_dual,
+                                      jnp.sum(d_bud), d_sc)
+            else:
+                d_bud = bud_j if dual_budget is None else jnp.float32(
+                    dual_budget)
+                d_sc = sc_j if dual_cost_scale is None else jnp.float32(
+                    dual_cost_scale)
+                lam_new = dual_fn(rewards, valid_j, lam_dual, d_bud, d_sc)
         if update_lam:
             self.lam = lam_new
             # the chain buffer will be donated next window; records keep

@@ -30,6 +30,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs import MS_EDGES, get_obs
+from repro.obs.metrics import log2_edges
 from repro.serving.pipeline import ServingPipeline, WindowResult
 
 
@@ -237,7 +239,8 @@ class StreamStats:
 def run_stream(pipeline: ServingPipeline, sizes: list[int],
                source, *, lam_trace=None, budget_trace=None,
                scale_trace=None, forecast: bool = False,
-               prefetch: int = 2) -> StreamStats:
+               prefetch: int = 2, obs=None,
+               clock=None) -> StreamStats:
     """Drive the pipeline through ``sizes``, prefetching host prep.
 
     ``source`` produces each window's arrivals and runs while the
@@ -277,45 +280,94 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
     function of (seed, t), so the prefetched stream is BITWISE
     identical to ``prefetch=0`` (the sequential double-buffered path,
     kept as the parity/debug reference).
+
+    ``obs`` (an ``repro.obs.Obs`` bundle, default off) records spans
+    ("prep" on the producer thread, "serve"/"stall" on the serving
+    thread, "block_until_ready" around the final drain) and per-window
+    metrics; ``clock`` (default ``time.perf_counter``) is the timing
+    source for every host measurement, injectable so tests can pin
+    prep/stall/submit attribution with a fake clock.  Neither touches
+    the numerics: telemetry-on runs are bitwise identical.
     """
     streaming = hasattr(source, "window")
+    obs = get_obs(obs)
+    if clock is None:
+        clock = time.perf_counter
+    m = obs.metrics
+    windows_c = m.counter("greenflow_windows_total",
+                          "serving windows completed")
+    reqs_c = m.counter("greenflow_requests_total",
+                       "requests served across windows")
+    size_h = m.histogram("greenflow_window_size",
+                         "requests per window", "1",
+                         log2_edges(1.0, float(1 << 22)))
+    prep_h = m.histogram("greenflow_prep_ms",
+                         "host chunk production time", "ms", MS_EDGES)
+    stall_h = m.histogram("greenflow_stall_ms",
+                          "serving-thread wait for an unready chunk",
+                          "ms", MS_EDGES)
+    submit_h = m.histogram("greenflow_submit_ms",
+                           "serve_window dispatch time", "ms", MS_EDGES)
+    h2d_c = m.counter("greenflow_h2d_bytes_total",
+                      "host->device bytes uploaded", "bytes")
+    compiles_c = m.counter("greenflow_compiles_total",
+                           "jit cache misses")
+    bucket_c = m.counter("greenflow_bucket_windows_total",
+                         "windows served per padding bucket")
 
     def _prep(t: int, n: int):
-        p0 = time.perf_counter()
-        if streaming:
-            chunk = source.window(t, n)
-            out = (chunk.ctx, chunk.rows, chunk.tables,
-                   int(getattr(chunk, "h2d_bytes", 0)))
-        else:
-            ctx, rows = source(t, n)
-            out = (ctx, rows, None, 0)
-        return out + ((time.perf_counter() - p0) * 1e3,)
+        with obs.span("prep", t=t, n=n):
+            p0 = clock()
+            if streaming:
+                chunk = source.window(t, n)
+                out = (chunk.ctx, chunk.rows, chunk.tables,
+                       int(getattr(chunk, "h2d_bytes", 0)))
+            else:
+                ctx, rows = source(t, n)
+                out = (ctx, rows, None, 0)
+            return out + ((clock() - p0) * 1e3,)
 
-    t0 = time.perf_counter()
+    t0 = clock()
     submit_ms: list[float] = []
     results: list[WindowResult] = []
     last = len(sizes) - 1
 
     def _serve(t: int, item, stall: float):
         ctx, rows, tables, h2d, prep = item
-        d0 = time.perf_counter()
+        d0 = clock()
         lam = None if lam_trace is None else lam_trace[t]
         t_next = min(t + 1, last)  # final window: nothing left to aim at
-        res = pipeline.serve_window(
-            ctx, rows, lam=lam, tables=tables,
-            budget=None if budget_trace is None else budget_trace[t],
-            cost_scale=None if scale_trace is None else scale_trace[t],
-            dual_budget=(budget_trace[t_next]
-                         if forecast and budget_trace is not None
-                         else None),
-            dual_cost_scale=(scale_trace[t_next]
-                             if forecast and scale_trace is not None
-                             else None))
-        submit_ms.append((time.perf_counter() - d0) * 1e3)
+        with obs.span("serve", t=t, n=sizes[t]):
+            res = pipeline.serve_window(
+                ctx, rows, lam=lam, tables=tables,
+                budget=None if budget_trace is None else budget_trace[t],
+                cost_scale=None if scale_trace is None
+                else scale_trace[t],
+                dual_budget=(budget_trace[t_next]
+                             if forecast and budget_trace is not None
+                             else None),
+                dual_cost_scale=(scale_trace[t_next]
+                                 if forecast and scale_trace is not None
+                                 else None))
+        submit = (clock() - d0) * 1e3
+        submit_ms.append(submit)
         res.prep_ms += prep
         res.stall_ms += stall
         res.h2d_bytes += h2d
         results.append(res)
+        # per-window host-side metrics (never reads a device array)
+        windows_c.inc()
+        reqs_c.inc(sizes[t])
+        size_h.observe(sizes[t])
+        prep_h.observe(res.prep_ms)
+        stall_h.observe(res.stall_ms)
+        submit_h.observe(submit)
+        h2d_c.inc(int(res.h2d_bytes))
+        compiles_c.inc(int(res.compiles))
+        if res.bucket is not None:
+            bucket_c.labels(bucket=res.bucket).inc()
+        if obs.interval > 0 and t % obs.interval == 0:
+            print(obs.live_line(t, res, submit))
 
     if prefetch > 0:
         import queue
@@ -335,9 +387,10 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
         th.start()
         try:
             for t, n in enumerate(sizes):
-                s0 = time.perf_counter()
-                item = q.get()
-                stall = (time.perf_counter() - s0) * 1e3
+                s0 = clock()
+                with obs.span("stall", t=t):
+                    item = q.get()
+                stall = (clock() - s0) * 1e3
                 if isinstance(item, BaseException):
                     raise item
                 _serve(t, item, stall)
@@ -354,8 +407,14 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
             _serve(t, nxt, 0.0)
             if t + 1 < len(sizes):  # prep t+1 while the device runs t
                 nxt = _prep(t + 1, sizes[t + 1])
-    for r in results:  # drain: force every window's device work
-        r.revenue_np
-    return StreamStats(windows=results, sizes=list(sizes),
-                       submit_ms=submit_ms,
-                       wall_s=time.perf_counter() - t0)
+    with obs.span("block_until_ready", windows=len(results)):
+        for r in results:  # drain: force every window's device work
+            r.revenue_np
+    stats = StreamStats(windows=results, sizes=list(sizes),
+                        submit_ms=submit_ms,
+                        wall_s=clock() - t0)
+    # gauges + JSONL flight log: only AFTER the drain, so these device
+    # reads can no longer stall the serving path
+    obs.flush_stream(stats, cs=getattr(pipeline, "_cs", None),
+                     ledger=getattr(pipeline, "ledger", None))
+    return stats
