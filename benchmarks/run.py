@@ -127,7 +127,8 @@ def run_all_json(fast: bool = False) -> dict:
     import os
 
     from benchmarks import (bench_carbon, bench_chain_sim, bench_geo,
-                            bench_geotenants, bench_scale, bench_serve)
+                            bench_geotenants, bench_multihost,
+                            bench_scale, bench_serve, bench_truncate)
 
     repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     out = {}
@@ -163,6 +164,17 @@ def run_all_json(fast: bool = False) -> dict:
     bench_scale.run(json_path=os.path.join(repo, "BENCH_scale.json"),
                     small=fast)
     out["scale"] = "BENCH_scale.json"
+    print("[run --all] multi-host request mesh sweep ...")
+    bench_multihost.run(
+        json_path=os.path.join(repo, "BENCH_multihost.json"),
+        **({"procs": (1, 2), "sizes": [64, 96, 64]} if fast else {}))
+    out["multihost"] = "BENCH_multihost.json"
+    print("[run --all] cascade-truncation kernel vs XLA baseline ...")
+    bench_truncate.run(
+        json_path=os.path.join(repo, "BENCH_truncate.json"),
+        **({"batches": (256, 1024), "u_count": 128, "parity_batch": 64,
+            "smoke_batch": 32, "reps": 3} if fast else {}))
+    out["truncate"] = "BENCH_truncate.json"
     for name, path in out.items():
         print(f"[run --all] {name:10s} -> {path}")
     return out

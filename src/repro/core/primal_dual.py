@@ -62,6 +62,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import ordered_psum
+
 
 def _as_cost_map(costs: jnp.ndarray) -> jnp.ndarray:
     """(M,) or (M, K) costs -> (M, K) cost map."""
@@ -134,7 +136,7 @@ def consumption(rewards: jnp.ndarray, costs: jnp.ndarray,
                 tk = tk * member[:, k]
             cols.append(jnp.sum(tk if mask is None else tk * mask))
         used = jnp.stack(cols)
-    return used if axis_name is None else jax.lax.psum(used, axis_name)
+    return used if axis_name is None else ordered_psum(used, axis_name)
 
 
 def realized_reward(rewards: jnp.ndarray, j_star: jnp.ndarray) -> jnp.ndarray:
@@ -184,11 +186,11 @@ def dual_descent(rewards: jnp.ndarray, costs: jnp.ndarray, budget,
     if mask is None:
         n_eff = jnp.float32(rewards.shape[0])
         if axis_name is not None:
-            n_eff = jax.lax.psum(n_eff, axis_name)
+            n_eff = ordered_psum(n_eff, axis_name)
     else:
         n_eff = jnp.sum(mask.astype(jnp.float32))
         if axis_name is not None:
-            n_eff = jax.lax.psum(n_eff, axis_name)
+            n_eff = ordered_psum(n_eff, axis_name)
     if not vector:
         # an all-masked (empty) window carries no information: floor
         # n_eff so the step normalization cannot explode and slam the
@@ -200,7 +202,7 @@ def dual_descent(rewards: jnp.ndarray, costs: jnp.ndarray, budget,
             m = member if mask is None else member * mask[:, None]
             n_k = jnp.sum(m, axis=0)
             if axis_name is not None:
-                n_k = jax.lax.psum(n_k, axis_name)
+                n_k = ordered_psum(n_k, axis_name)
         else:
             n_k = n_eff
         # per-constraint norm n_k * mean_k^2 where mean_k averages the

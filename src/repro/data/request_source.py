@@ -69,9 +69,12 @@ class WindowChunk:
     tables: dict  # {"p": (G, n, cap) int32, "ck": (G, n, cap) float32}
     users: np.ndarray | None = None  # (n,) global user ids
     h2d_bytes: int = 0  # host->device bytes this chunk's production cost
+    shard: object | None = None  # HostWindowSlice in a multi-host stream
 
     @property
     def n(self) -> int:
+        if self.shard is not None:
+            return int(self.shard.n)
         return int(len(self.rows))
 
 
@@ -107,6 +110,16 @@ class RequestSource:
         return rng.integers(0, self.n_users, size=n)
 
     def window(self, t: int, n: int) -> WindowChunk:
+        raise NotImplementedError
+
+    def window_for_users(self, users: np.ndarray) -> WindowChunk:
+        """Chunk for an EXPLICIT arrival list (rows = arange(len)).
+
+        The multi-host routing layer depends on this split of
+        ``window``: every host can compute the full ``arrivals(t, n)``
+        cheaply (a pure (seed, t) function), then materialize contexts
+        and score tables for ONLY the slice of users it serves.
+        """
         raise NotImplementedError
 
     @property
@@ -376,7 +389,12 @@ class GeneratedSource(RequestSource):
                 tables={"p": np.zeros((g_n, 0, cap), np.int32),
                         "ck": np.zeros((g_n, 0, cap), np.float32)},
                 users=np.zeros(0, np.int64))
-        users = self.arrivals(t, n)
+        return self.window_for_users(self.arrivals(t, n), _t=t)
+
+    def window_for_users(self, users: np.ndarray,
+                         _t: int | None = None) -> WindowChunk:
+        users = np.asarray(users)
+        n = len(users)
         if not self.device_tables:  # host-built numpy tables (PR 6 path)
             ctx_parts, p_parts, ck_parts = [], [], []
             for lo in range(0, n, self.chunk):
@@ -399,7 +417,7 @@ class GeneratedSource(RequestSource):
 
         chunk_ids = [users[lo:lo + self.chunk]
                      for lo in range(0, n, self.chunk)]
-        with self.obs.span("chunk_tables", t=t, n=n,
+        with self.obs.span("chunk_tables", t=_t, n=n,
                            chunks=len(chunk_ids)):
             if self.workers > 1 and len(chunk_ids) > 1:
                 if self._pool is None:
@@ -496,7 +514,11 @@ class TableReplaySource(RequestSource):
         return int(self.ctx.shape[1])
 
     def window(self, t: int, n: int) -> WindowChunk:
-        users = self.arrivals(t, n)
+        return self.window_for_users(self.arrivals(t, n))
+
+    def window_for_users(self, users: np.ndarray) -> WindowChunk:
+        users = np.asarray(users)
+        n = len(users)
         if self.device_tables:
             import jax.numpy as jnp
 

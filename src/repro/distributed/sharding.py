@@ -12,6 +12,7 @@ Axis-name conventions (see launch/mesh.py):
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 BATCH_AXES = ("pod", "data")  # logical batch axis = pod x data
@@ -21,6 +22,29 @@ BATCH_AXES = ("pod", "data")  # logical batch axis = pod x data
 # prefix sums and dual consumption stitch across it with
 # all_gather/psum.  One name, shared by mesh builders and the pipeline.
 REQUEST_AXIS = "req"
+
+
+def ordered_psum(x, axis_name: str):
+    """Cross-shard sum with a shard-ORDER-DETERMINISTIC reduction.
+
+    ``jax.lax.psum`` lowers to the backend allreduce, whose reduction
+    order (and therefore float rounding) differs between XLA's
+    in-process collectives and the cross-process gloo/NCCL rings - the
+    same window summed by an 8-device single process and by 8
+    one-device processes can disagree in the last ulp, which breaks
+    the serving path's bitwise lambda/spend parity gates.  Gathering
+    first and summing locally pins one association: ``all_gather`` is
+    pure data movement (no arithmetic), and the local ``jnp.sum`` over
+    the leading shard axis compiles to the same reduction everywhere,
+    so every host of a multi-process mesh - and the identically-sharded
+    single-process reference - produces bit-identical replicated sums.
+
+    Use at the serving path's cross-shard seams (guard spends, dual
+    consumption, per-axis spend reports) where bitwise multi-host
+    agreement matters more than allreduce bandwidth; ``pmax``/``pmin``
+    are order-invariant and need no such pinning.
+    """
+    return jnp.sum(jax.lax.all_gather(x, axis_name), axis=0)
 
 
 from repro.distributed.compat import current_mesh  # noqa: F401 (re-export)

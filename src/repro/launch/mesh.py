@@ -23,13 +23,54 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def mesh_num_shards(mesh) -> int:
-    """Total device count of a mesh (1 for ``None``) - what the serving
-    pipeline's pad quantum and per-shard window slices key off."""
+    """GLOBAL device count of a mesh (1 for ``None``).
+
+    ``mesh.shape`` spans every process of a multi-process mesh, so this
+    is the count the serving pipeline's pad quantum and window bucketing
+    MUST key off: padded shapes derive from (n, quantum) only, so every
+    host computes the same bucket for the same window and per-shard
+    slices divide evenly.  Host-local array building (how many rows
+    THIS process materializes) keys off ``mesh_local_shards`` instead -
+    conflating the two breaks pow2 bucketing the moment a second
+    process joins (local count 1, global count P).
+    """
     if mesh is None:
         return 1
     import numpy as np
 
     return int(np.prod(list(mesh.shape.values())))
+
+
+def mesh_local_shards(mesh) -> int:
+    """Shards of ``mesh`` owned by THIS process (1 for ``None``).
+
+    Equal to ``mesh_num_shards`` in a single-process mesh; in a
+    ``jax.distributed`` mesh it is the addressable-device count -
+    what sizes the host-local slice of a request-sharded array.
+    """
+    if mesh is None:
+        return 1
+    pid = jax.process_index()
+    return sum(1 for d in mesh.devices.flat if d.process_index == pid)
+
+
+def process_shard_rows(mesh, b: int) -> list[tuple[int, int]]:
+    """Row slices of a (b,)-request-sharded array held by THIS process.
+
+    One ``[lo, hi)`` pair per addressable device, in mesh order: shard
+    ``s`` of the 1-D request mesh holds rows ``[s*b/S, (s+1)*b/S)`` of
+    the globally padded window (``S = mesh_num_shards``).  This is the
+    routing table of the multi-host window protocol: each host builds
+    exactly these rows of every window and never ships a request.
+    """
+    n_shards = mesh_num_shards(mesh)
+    if b % n_shards:
+        raise ValueError(f"b={b} not divisible by {n_shards} shards")
+    per = b // n_shards
+    pid = jax.process_index()
+    return [(pos * per, (pos + 1) * per)
+            for pos, d in enumerate(mesh.devices.flat)
+            if d.process_index == pid]
 
 
 def make_request_mesh(n_shards: int | None = None):
@@ -38,7 +79,10 @@ def make_request_mesh(n_shards: int | None = None):
     The fused ServingPipeline shard_maps its window pass over this axis:
     per-request work (scoring, Eq. 10, cascade execution) stays local
     while the guard and the dual update stitch global sums.  Defaults to
-    all local devices.
+    ALL devices - in a ``jax.distributed`` run ``jax.devices()`` spans
+    every process, so the default mesh is the process-spanning request
+    mesh (each host contributes its local devices; pass
+    ``repro.distributed.multihost.initialize`` first).
     """
     from repro.distributed.sharding import REQUEST_AXIS
 

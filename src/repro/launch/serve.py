@@ -92,6 +92,36 @@ snapshot (+ PATH.json + PATH.windows.jsonl per-window flight log),
 windows, --profile-dir DIR wraps the run in jax.profiler.trace with
 host spans as TraceAnnotations.  Telemetry never changes decisions or
 prices - enabled runs are bitwise identical to disabled runs.
+
+Multi-host runbook
+------------------
+One serve process per host, every process running the SAME command
+plus its own identity flags (or the GREENFLOW_COORDINATOR /
+GREENFLOW_NUM_PROCESSES / GREENFLOW_PROCESS_ID environment
+variables)::
+
+    # host 0 (also runs the coordinator service)
+    PYTHONPATH=src python -m repro.launch.serve --source generated \
+        --processes 2 --process-id 0 --coordinator host0:9987
+    # host 1
+    PYTHONPATH=src python -m repro.launch.serve --source generated \
+        --processes 2 --process-id 1 --coordinator host0:9987
+
+What happens (repro/distributed/multihost.py): the processes join one
+``jax.distributed`` group, the request mesh spans every host's
+devices, and each host GENERATES its deterministic slice of every
+window - arrivals are pure (seed, t) functions, so no request ever
+crosses the network; only the guard/dual collectives do.  All hosts
+agree bitwise on every dual price and every decision (the parity gate
+in tests/test_multihost.py).  Requirements: a streaming --source
+(generated or memmap - every host needs the same universe; --source
+table and --legacy are single-process), and --shards unset (the mesh
+is the full process-spanning device set).  Per-host telemetry:
+--metrics-out/--trace-out write per-host files suffixed with the host
+label; merge the traces with ``repro.obs.merge_chrome_traces`` to see
+every host's tracks in one Perfetto timeline.  Elastic resharding
+(host join/leave) is checkpoint/replay - see
+``repro.distributed.multihost.checkpoint_stream``.
 """
 from __future__ import annotations
 
@@ -101,8 +131,14 @@ import numpy as np
 
 from repro.core.pfec import pfec_report
 from repro.experiments import build_serving_stack, serve_config
+from repro.obs.events import _host_np
 from repro.serving.pipeline import ServingPipeline
 from repro.serving.stream import SCENARIOS, TrafficScenario, run_stream
+
+
+def _f(x) -> float:
+    """Scalar host value of a (possibly multi-process) device array."""
+    return float(np.sum(_host_np(x)))
 
 
 def make_legacy_scorer(exp, rcfg):
@@ -181,7 +217,7 @@ def _build_ci_trace(args):
 
 def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
                    sample_window, pricing, mesh=None, forecast=False,
-                   prefetch=2, obs=None):
+                   prefetch=2, obs=None, wrap_source=None):
     """Fused-pipeline carbon day: per-window gram budgets + CI-scaled
     costs threaded through run_stream (carbon pricing) or the
     effective-FLOPs-budget reduction (flops pricing); ``forecast`` aims
@@ -189,6 +225,8 @@ def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
     sched = cb.schedule(len(sizes))
     pipe = ServingPipeline(server, params, rcfg, cb.flops_ref,
                            ledger=ledger, mesh=mesh, obs=obs)
+    if wrap_source is not None:  # multi-host: route windows over hosts
+        sample_window = wrap_source(pipe, sample_window)
     if pricing == "carbon":
         st = run_stream(pipe, sizes, sample_window,
                         budget_trace=sched["grams"],
@@ -203,17 +241,17 @@ def _carbon_stream(server, params, rcfg, sizes, cb, ledger,
           f"{'dispatch_ms':>11}")
     for t, r in enumerate(st.windows):
         print(f"{t:>4} {r.n_valid:>5} {sched['ci'][t]:>9.1f} "
-              f"{float(r.spend) / r.budget:>13.3f} "
-              f"{float(r.lam_after):>12.3e} {int(r.downgraded):>10d} "
+              f"{_f(r.spend) / r.budget:>13.3f} "
+              f"{_f(r.lam_after):>12.3e} {int(r.downgraded):>10d} "
               f"{r.revenue_np.sum():>9.1f} {st.dispatch_ms[t]:>11.2f}")
-    total_flops = float(sum(float(r.flops) for r in st.windows))
+    total_flops = float(sum(_f(r.flops) for r in st.windows))
     print(f"[serve] {len(sizes)} windows in {st.wall_s:.2f}s "
           f"({len(sizes) / st.wall_s:.1f} win/s)")
     return st.total_revenue, total_flops
 
 
 def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
-                sample_window, mesh=None, obs=None):
+                sample_window, mesh=None, obs=None, wrap_source=None):
     """Two-region geo-shifted serving day: (R,) per-region gram budgets
     and kappa*CI_r(t) cost scales through the fused router, per-region
     CarbonLedgers merged into one region-attributed CSV."""
@@ -250,6 +288,8 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
     pipe = ServingPipeline.from_spec(
         server, params, rcfg, spec, mesh=mesh, obs=obs,
         dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
+    if wrap_source is not None:  # multi-host: route windows over hosts
+        sample_window = wrap_source(pipe, sample_window)
     st = run_stream(pipe, sizes, sample_window,
                     budget_trace=budget_trace, scale_trace=scale_trace,
                     forecast=args.ci_forecast, prefetch=args.prefetch,
@@ -270,7 +310,7 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
         dec = r.decisions_np
         split = [int(x) for x in np.bincount(regions,
                                              minlength=len(names))]
-        spends = np.asarray(r.region_spend)
+        spends = _host_np(r.region_spend)
         cols = " ".join(
             f"{ci_w[n_][t]:>6.0f} "
             f"{spends[k] / r.k_budget[k]:>9.3f}"
@@ -280,7 +320,7 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
         for k, n_ in enumerate(names):
             ledgers[n_].record(dec[regions == k], t=t, ci=ci_w[n_][t])
         total_rev += float(r.revenue_np.sum())
-        total_flops += float(r.flops)
+        total_flops += _f(r.flops)
     print(f"[serve] {n_w} windows in {st.wall_s:.2f}s "
           f"({n_w / st.wall_s:.1f} win/s)")
     report_path = args.carbon_report or os.path.join(
@@ -300,7 +340,7 @@ def _geo_stream(chains, server, params, rcfg, sizes, flops_budget, args,
 
 def _geotenants_stream(chains, server, params, rcfg, sizes,
                        flops_budget, args, sample_window, mesh=None,
-                       obs=None):
+                       obs=None, wrap_source=None):
     """The combined tenant x region day: per-tenant gram budgets AND
     per-region gram caps priced in one fused pass (the ConstraintSpec
     headline).  Budget trace entries are the (T + R,) concatenation -
@@ -357,6 +397,8 @@ def _geotenants_stream(chains, server, params, rcfg, sizes,
     pipe = ServingPipeline.from_spec(
         server, params, rcfg, spec, mesh=mesh, obs=obs,
         dual_cfg=DualDescentConfig(max_iters=300, step_decay=0.98))
+    if wrap_source is not None:  # multi-host: route windows over hosts
+        sample_window = wrap_source(pipe, sample_window)
     st = run_stream(pipe, sizes, sample_window,
                     budget_trace=budget_trace, scale_trace=scale_trace,
                     forecast=args.ci_forecast, prefetch=args.prefetch,
@@ -377,7 +419,7 @@ def _geotenants_stream(chains, server, params, rcfg, sizes,
         regions = r.regions_np
         dec = r.decisions_np
         split_c = [int(x) for x in np.bincount(regions, minlength=r_n)]
-        tr = np.asarray(r.tr_spend)
+        tr = _host_np(r.tr_spend)
         tenant_spend += tr.sum(axis=1)
         t_cols = " ".join(f"{tr[k].sum() / tenant_g[k]:>8.3f}"
                           for k in range(t_n))
@@ -389,7 +431,7 @@ def _geotenants_stream(chains, server, params, rcfg, sizes,
         for k, n_ in enumerate(names):
             ledgers[n_].record(dec[regions == k], t=t, ci=ci_w[n_][t])
         total_rev += float(r.revenue_np.sum())
-        total_flops += float(r.flops)
+        total_flops += _f(r.flops)
     print(f"[serve] {n_w} windows in {st.wall_s:.2f}s "
           f"({n_w / st.wall_s:.1f} win/s)")
     print("[serve] day totals, per tenant (spend_g / budget_g): "
@@ -448,6 +490,19 @@ def main():
     ap.add_argument("--budget-frac", type=float, default=0.6)
     ap.add_argument("--shards", type=int, default=0,
                     help=">0: shard_map over an N-way request mesh")
+    ap.add_argument("--processes", type=int, default=0,
+                    help=">1: join a jax.distributed group of N serve "
+                         "processes (one per host); the request mesh "
+                         "then spans every host's devices and each "
+                         "host generates its slice of every window "
+                         "(see the multi-host runbook above)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank in the --processes group "
+                         "(default: $GREENFLOW_PROCESS_ID)")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of the jax.distributed coordinator "
+                         "(process 0's address; default: "
+                         "$GREENFLOW_COORDINATOR)")
     ap.add_argument("--small", action="store_true", help="CI-sized world")
     ap.add_argument("--source", default="table",
                     choices=("table", "generated", "memmap"),
@@ -526,6 +581,35 @@ def main():
                          "host spans become TraceAnnotations lined up "
                          "against XLA device events")
     args = ap.parse_args()
+    multihost = False
+    host = None
+    if args.processes > 1 or args.coordinator:
+        from repro.distributed import multihost as mh
+        if args.legacy:
+            raise SystemExit("--processes runs the fused SPMD pipeline; "
+                             "--legacy is single-process")
+        if args.source == "table":
+            raise SystemExit("--processes needs a streaming --source "
+                             "(generated or memmap): every host "
+                             "generates its own slice of each window")
+        if args.shards > 0:
+            raise SystemExit("--shards picks a device subset; with "
+                             "--processes the mesh is always the full "
+                             "process-spanning device set (drop "
+                             "--shards)")
+        multihost = mh.initialize(
+            coordinator=args.coordinator,
+            num_processes=args.processes or None,
+            process_id=args.process_id)
+        if not multihost:
+            raise SystemExit("--processes > 1 needs a --coordinator "
+                             "(or $GREENFLOW_COORDINATOR)")
+        host = mh.host_label()
+        # per-host artifact files: suffix every output with the label
+        for attr in ("metrics_out", "trace_out"):
+            if getattr(args, attr):
+                setattr(args, attr, getattr(args, attr) + "." + host)
+        print(f"[serve] multihost: {mh.host_report()}")
     if args.cache_dir:
         import jax
         jax.config.update("jax_compilation_cache_dir", args.cache_dir)
@@ -545,7 +629,7 @@ def main():
                                          + ".windows.jsonl")
                           if args.metrics_out else None),
                   interval=args.obs_interval,
-                  annotate=bool(args.profile_dir))
+                  annotate=bool(args.profile_dir), host=host)
     if args.profile_dir:
         import jax
         jax.profiler.start_trace(args.profile_dir)
@@ -605,7 +689,15 @@ def main():
             return exp.ctx_eval[rows], rows
 
     mesh = None
-    if args.shards > 0 and not args.legacy:
+    wrap_source = None
+    if multihost:
+        from repro.launch.mesh import make_request_mesh
+        mesh = make_request_mesh()  # spans every process's devices
+
+        def wrap_source(pipe, src_):
+            from repro.distributed.multihost import MultihostSource
+            return MultihostSource(src_, pipe)
+    elif args.shards > 0 and not args.legacy:
         from repro.launch.mesh import make_request_mesh
         mesh = make_request_mesh(args.shards)
 
@@ -640,7 +732,7 @@ def main():
                 server, params, rcfg, sizes, cb, ledger,
                 sample_window, args.carbon_pricing, mesh=mesh,
                 forecast=args.ci_forecast, prefetch=args.prefetch,
-                obs=obs)
+                obs=obs, wrap_source=wrap_source)
         report_path = args.carbon_report or os.path.join(
             os.path.dirname(__file__), "..", "..", "..", "results",
             "carbon_report.csv")
@@ -667,7 +759,7 @@ def main():
                              "(the router exists only in the fused pass)")
         total_rev, total_flops = _geo_stream(
             chains, server, params, rcfg, sizes, float(budget), args,
-            sample_window, mesh=mesh, obs=obs)
+            sample_window, mesh=mesh, obs=obs, wrap_source=wrap_source)
     elif args.scenario == "geotenants":
         if args.legacy:
             raise SystemExit("--scenario geotenants has no legacy loop "
@@ -675,12 +767,16 @@ def main():
                              "only in the fused pipeline)")
         total_rev, total_flops = _geotenants_stream(
             chains, server, params, rcfg, sizes, float(budget), args,
-            sample_window, mesh=mesh, obs=obs)
+            sample_window, mesh=mesh, obs=obs, wrap_source=wrap_source)
     elif args.legacy:
         total_rev, total_flops = _legacy_loop(exp, server, params, rcfg,
                                               sizes, budget)
     else:
         if args.scenario == "tenants" and args.tenant_mode == "independent":
+            if multihost:
+                raise SystemExit("--tenant-mode independent runs one "
+                                 "pipeline per tenant; compose with "
+                                 "--processes via shared or priced")
             pipes = [ServingPipeline(server, params, rcfg,
                                      budget / n_tenants, obs=obs)
                      for _ in range(n_tenants)]
@@ -705,6 +801,8 @@ def main():
                                    tenant_mode=(args.tenant_mode
                                                 if tb is not None
                                                 else "shared"), obs=obs)
+            if wrap_source is not None:  # multi-host window routing
+                sample_window = wrap_source(pipe, sample_window)
             st = run_stream(pipe, sizes, sample_window,
                             prefetch=args.prefetch, obs=obs)
             total_rev, total_flops = st.total_revenue, st.total_spend
@@ -716,11 +814,11 @@ def main():
             for t, r in enumerate(st.windows):
                 if priced:
                     lam_disp = "/".join(
-                        f"{v:.2e}" for v in np.asarray(r.lam_after))
+                        f"{v:.2e}" for v in _host_np(r.lam_after))
                 else:
-                    lam_disp = f"{float(r.lam_after):.3e}"
+                    lam_disp = f"{_f(r.lam_after):.3e}"
                 print(f"{t:>4} {r.n_valid:>5} "
-                      f"{float(np.sum(np.asarray(r.spend))) / r.budget:>13.3f} "
+                      f"{_f(r.spend) / r.budget:>13.3f} "
                       f"{lam_disp:>12} "
                       f"{int(r.downgraded):>10d} "
                       f"{r.revenue_np.sum():>9.1f} "

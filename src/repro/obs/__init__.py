@@ -65,7 +65,8 @@ from repro.obs.events import WindowEventLog, window_event
 from repro.obs.env import env_info
 from repro.obs.metrics import (MetricsRegistry, NULL_INSTRUMENT,
                                NULL_REGISTRY, log2_edges)
-from repro.obs.trace import NULL_SPAN, NULL_TRACER, Tracer
+from repro.obs.trace import (NULL_SPAN, NULL_TRACER, Tracer,
+                             merge_chrome_traces)
 
 MS_EDGES = log2_edges(0.25, 8192.0)
 
@@ -84,11 +85,14 @@ class Obs:
     def __init__(self, *, metrics: MetricsRegistry | None = None,
                  tracer: Tracer | None = None,
                  events: WindowEventLog | None = None,
-                 interval: int = 0, annotate: bool = False):
+                 interval: int = 0, annotate: bool = False,
+                 host: str | None = None):
         self.metrics = MetricsRegistry() if metrics is None else metrics
-        self.tracer = Tracer(annotate=annotate) if tracer is None else tracer
+        self.tracer = (Tracer(annotate=annotate, process_label=host)
+                       if tracer is None else tracer)
         self.events = events
         self.interval = int(interval)
+        self.host = host  # per-host label of a multi-host run
         self.enabled = self.metrics.enabled or self.tracer.enabled
 
     def span(self, name: str, **args):
@@ -103,7 +107,8 @@ class Obs:
         serving path."""
         if not self.enabled or not stats.windows:
             return
-        rows = [window_event(t, r, s, cs=cs, ledger=ledger)
+        rows = [window_event(t, r, s, cs=cs, ledger=ledger,
+                             host=self.host)
                 for t, (r, s) in enumerate(zip(stats.windows,
                                                stats.submit_ms))]
         last = rows[-1]
@@ -158,5 +163,6 @@ __all__ = [
     "Obs", "NULL_OBS", "get_obs",
     "MetricsRegistry", "NULL_REGISTRY", "NULL_INSTRUMENT", "log2_edges",
     "Tracer", "NULL_TRACER", "NULL_SPAN", "MS_EDGES",
+    "merge_chrome_traces",
     "WindowEventLog", "window_event", "env_info",
 ]

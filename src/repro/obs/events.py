@@ -34,6 +34,18 @@ def _names_or(names, fallback: str) -> tuple[str, ...]:
     return tuple(names) if names else (fallback,)
 
 
+def _host_np(x) -> np.ndarray:
+    """Host value of a (possibly multi-process) array.
+
+    Replicated outputs of a ``jax.distributed`` run are not fully
+    addressable, so ``np.asarray`` refuses them; every addressable
+    shard holds the same replicated bytes, so the first one is the
+    value.  Plain arrays/scalars pass straight through."""
+    if getattr(x, "is_fully_addressable", True):
+        return np.asarray(x)
+    return np.asarray(x.addressable_shards[0].data)
+
+
 def _axis_dict(names, values) -> dict | None:
     """Zip axis names with a scalar-or-vector value into {name: float}."""
     if values is None:
@@ -49,41 +61,46 @@ def _axis_dict(names, values) -> dict | None:
 
 
 def window_event(t: int, result, submit_ms: float | None = None, *,
-                 cs=None, ledger=None) -> dict:
+                 cs=None, ledger=None, host: str | None = None) -> dict:
     """One WindowResult -> one JSON-able event row.
 
     ``cs`` is the pipeline's ``CompiledSpec`` (names the lam/spend/
     budget axes); ``ledger`` an optional CarbonLedger used to meter the
-    window's operational gCO2e at its CI.  Reads device arrays - call
-    only after the stream has been drained.
+    window's operational gCO2e at its CI; ``host`` tags the row with
+    the writing process's label in a multi-host run (each host logs its
+    OWN slice of every window - n/revenue/h2d are per-host there, while
+    lam/spend/budget are the globally stitched values every host agrees
+    on).  Reads device arrays - call only after the stream has been
+    drained.
     """
     lam_names = _names_or(getattr(cs, "k_names", ()), "global")
     bud_names = _names_or(getattr(cs, "budget_names", ()), "global")
 
-    lam = _axis_dict(lam_names, np.asarray(result.lam_after))
+    lam = _axis_dict(lam_names, _host_np(result.lam_after))
     if result.tr_spend is not None:  # geotenants: tenant + region axes
-        tr = np.asarray(result.tr_spend)
+        tr = _host_np(result.tr_spend)
         spend = _axis_dict(bud_names,
                            np.concatenate([tr.sum(axis=1),
                                            tr.sum(axis=0)]))
     elif result.region_spend is not None:
-        spend = _axis_dict(bud_names, np.asarray(result.region_spend))
+        spend = _axis_dict(bud_names, _host_np(result.region_spend))
     elif result.tenant_spend is not None:
-        spend = _axis_dict(bud_names, np.asarray(result.tenant_spend))
+        spend = _axis_dict(bud_names, _host_np(result.tenant_spend))
     else:
-        spend = {"global": float(np.sum(np.asarray(result.spend)))}
+        spend = {"global": float(np.sum(_host_np(result.spend)))}
     budget = _axis_dict(
         bud_names,
         result.k_budget if result.k_budget is not None else result.budget)
 
     flops = (None if result.flops is None
-             else float(np.asarray(result.flops)))
+             else float(_host_np(result.flops)))
     gco2e = None
     if ledger is not None and flops is not None:
         from repro.core.pfec import energy_from_flops
         gco2e = energy_from_flops(flops, ledger.cfg) * ledger.window_ci(t)
 
-    return {
+    row = {} if host is None else {"host": str(host)}
+    row.update({
         "window": int(t),
         "n": int(result.n_valid),
         "bucket": (None if result.bucket is None
@@ -101,7 +118,8 @@ def window_event(t: int, result, submit_ms: float | None = None, *,
         "stall_ms": round(float(result.stall_ms), 3),
         "submit_ms": (None if submit_ms is None
                       else round(float(submit_ms), 3)),
-    }
+    })
+    return row
 
 
 class WindowEventLog:

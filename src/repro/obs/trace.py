@@ -90,9 +90,11 @@ class Tracer:
     """Collects host spans; exports Chrome trace-event JSON."""
 
     def __init__(self, enabled: bool = True, *, annotate: bool = False,
+                 process_label: str | None = None,
                  clock_ns=time.perf_counter_ns):
         self.enabled = bool(enabled)
         self.annotate = bool(annotate)
+        self.process_label = process_label
         self.clock_ns = clock_ns
         self.events: list = []
 
@@ -129,6 +131,10 @@ class Tracer:
         meta = [{"name": "thread_name", "ph": "M", "pid": pid,
                  "tid": tid, "args": {"name": tname}}
                 for tid, tname in sorted(tids.items())]
+        if self.process_label:  # one named track group per host
+            meta.insert(0, {"name": "process_name", "ph": "M",
+                            "pid": pid,
+                            "args": {"name": self.process_label}})
         return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
 
     def write(self, path: str) -> str:
@@ -146,6 +152,31 @@ def _jsonable(v):
         return v
     except TypeError:
         return str(v)
+
+
+def merge_chrome_traces(paths, out_path: str | None = None) -> dict:
+    """Merge per-host trace files into ONE Chrome trace-event object.
+
+    Each host of a multi-host run writes its own trace
+    (``Tracer(process_label=...).write``); pids are distinct processes,
+    so concatenating the event lists yields one timeline in which every
+    host appears as its own named track group (the ``process_name``
+    metadata events survive the merge).  Timestamps are
+    ``perf_counter_ns``-based and therefore NOT cross-host aligned -
+    the merged view answers "what did each host do", not "who was
+    first by a microsecond".
+    """
+    events: list = []
+    for p in paths:
+        with open(p) as f:
+            events.extend(json.load(f).get("traceEvents", []))
+    merged = {"traceEvents": events, "displayTimeUnit": "ms"}
+    if out_path is not None:
+        d = os.path.dirname(os.path.abspath(out_path))
+        os.makedirs(d, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(merged, f)
+    return merged
 
 
 NULL_TRACER = Tracer(enabled=False)

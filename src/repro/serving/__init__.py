@@ -85,6 +85,35 @@ A map of the unified allocator core and the layers over it:
       ``StreamStats.steady_compiles`` audits the zero-recompile
       guarantee and ``StreamStats.h2d_bytes`` the transfer budget
       over a finished run.
+  distributed.multihost   the MULTI-HOST request mesh over all of the
+      above: ``initialize()`` brings up ``jax.distributed`` from
+      ``GREENFLOW_COORDINATOR`` / ``_NUM_PROCESSES`` / ``_PROCESS_ID``
+      (gloo CPU collectives configured first), after which
+      ``launch.mesh.make_request_mesh()`` spans every process and the
+      SAME fused pipeline runs unchanged - its guard prefix sums,
+      per-axis spends and nearline dual updates stitch globally
+      through order-fixed all_gather reductions
+      (``distributed.sharding.ordered_psum``), so every host agrees
+      BITWISE on lambda and every decision.  Windows are never
+      shipped: arrivals are pure (seed, t) functions every host
+      evaluates, ``pipeline.window_layout`` is the canonical padded
+      layout all hosts derive from (n, bucket) alone, and
+      ``MultihostSource`` wraps any RequestSource to materialize ONLY
+      this host's ``launch.mesh.process_shard_rows`` slice of each
+      window (``WindowChunk.shard`` carries the slice geometry into
+      ``serve_window``).  Elastic re-sharding is reshard-on-restore:
+      ``checkpoint_stream`` persists the tiny {cursor, dual chain,
+      seed} state, a DIFFERENT-sized group restores it
+      (``restore_stream`` + ``ShiftedSource``) and replays from the
+      in-flight window bitwise - the fixed GLOBAL shard count (pad
+      quantum lcm's ``mesh_num_shards``) makes the numerics
+      process-count-invariant.  Per-host flight-recorder labels
+      (``Obs(host=...)``) tag JSONL events and name Perfetto track
+      groups; ``merge_chrome_traces`` folds every host's trace into
+      one timeline.  ``launch/serve.py --processes/--process-id/
+      --coordinator`` is the CLI bring-up (runbook in its module
+      docstring); tests/test_multihost.py pins the parity, stitching
+      and elastic gates with real subprocess meshes.
   carbon.*                the gCO2e side: intensity traces, the
       CarbonBudget / CarbonBudgetController wrappers (both
       spec-buildable via ``from_spec``), and the CarbonLedger
@@ -122,7 +151,12 @@ spec vs the single-axis arms + the exact-dual pipeline gate,
 BENCH_geotenants.json) and ``bench_scale.py`` (the streamed geotenants
 pipeline at U >= 100k under 10x-1000x swings: requests/sec, p99 window
 latency, flat peak RSS w.r.t. U and zero steady-state recompiles,
-BENCH_scale.json).
+BENCH_scale.json); ``bench_multihost.py`` (1/2/4/8-process mesh sweep
+at a fixed 8-shard global layout: per-process + aggregate req/s,
+bitwise decision parity vs single-process, merged per-host Perfetto
+trace, hardware-gated scaling assertion, BENCH_multihost.json) and
+``bench_truncate.py`` (the Pallas cascade-truncation kernel vs the XLA
+baseline at production batch sizes, BENCH_truncate.json).
 """
 import importlib
 

@@ -58,6 +58,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharding import ordered_psum
+
 GUARD_PASSES = 4
 
 
@@ -148,7 +150,7 @@ def downgrade_guard(decisions: jnp.ndarray, costs: jnp.ndarray,
     n_prefix = jnp.cumsum(valid)  # inclusive, local
     n_local = n_prefix[-1] if decisions.shape[0] else jnp.float32(0.0)
     if axis_name is not None:
-        n_total = jax.lax.psum(n_local, axis_name)
+        n_total = ordered_psum(n_local, axis_name)
         n_prefix = n_prefix + _exclusive_shard_offset(n_local, axis_name)
     else:
         n_total = n_local
@@ -176,8 +178,8 @@ def downgrade_guard(decisions: jnp.ndarray, costs: jnp.ndarray,
     spend_local = jnp.sum(cd)
     changed = jnp.sum(((decisions != orig) & (valid > 0)).astype(jnp.int32))
     if axis_name is not None:
-        spend = jax.lax.psum(spend_local, axis_name)
-        downgraded = jax.lax.psum(changed, axis_name)
+        spend = ordered_psum(spend_local, axis_name)
+        downgraded = ordered_psum(changed, axis_name)
     else:
         spend, downgraded = spend_local, changed
     return decisions, downgraded, spend
@@ -230,8 +232,8 @@ def downgrade_guard_chain(decisions, costs, plans,
     changed = jnp.sum(((decisions != orig) & (valid > 0))
                       .astype(jnp.int32))
     if axis_name is not None:
-        spends = [jax.lax.psum(s, axis_name) for s in spends]
-        changed = jax.lax.psum(changed, axis_name)
+        spends = [ordered_psum(s, axis_name) for s in spends]
+        changed = ordered_psum(changed, axis_name)
     return decisions, changed, spends
 
 
@@ -266,7 +268,7 @@ def _downgrade_guard_k(decisions, costs, budget, cheap, valid, k_of,
         prefix = jnp.stack(prefixes, axis=1)  # (b, K)
         local = jnp.stack(totals)  # (K,)
         if axis_name is not None:
-            total = jax.lax.psum(local, axis_name)
+            total = ordered_psum(local, axis_name)
             prefix = prefix + _exclusive_shard_offset(local, axis_name)
         else:
             total = local
@@ -294,8 +296,8 @@ def _downgrade_guard_k(decisions, costs, budget, cheap, valid, k_of,
                              for k in range(k_n)])  # (K,)
     changed = jnp.sum(((decisions != orig) & (valid > 0)).astype(jnp.int32))
     if axis_name is not None:
-        spend = jax.lax.psum(spend_local, axis_name)
-        downgraded = jax.lax.psum(changed, axis_name)
+        spend = ordered_psum(spend_local, axis_name)
+        downgraded = ordered_psum(changed, axis_name)
     else:
         spend, downgraded = spend_local, changed
     return decisions, downgraded, spend

@@ -103,9 +103,64 @@ from repro.core.reward_model import (RewardModelConfig, chain_prefix_plan,
                                      reward_matrix_grouped)
 from repro.distributed.compat import shard_map
 from repro.distributed.sharding import REQUEST_AXIS as AXIS
+from repro.distributed.sharding import ordered_psum
 from repro.serving.guard import (_exclusive_shard_offset, downgrade_guard,
                                  downgrade_guard_chain)
 from repro.serving.spec import ConstraintSpec, spec_from_legacy
+
+
+def _local_np(arr) -> np.ndarray:
+    """Device array -> THIS process's rows, as numpy.
+
+    Single-process (fully addressable) arrays convert wholesale.  A
+    request-sharded global array of a multi-process mesh yields the
+    concatenation of its ADDRESSABLE shards in request order: each host
+    reads exactly the window rows it serves, and the read never moves
+    data across hosts.
+    """
+    if getattr(arr, "is_fully_addressable", True):
+        return np.asarray(arr)
+    shards = sorted(arr.addressable_shards,
+                    key=lambda s: s.index[0].start or 0)
+    return np.concatenate([np.asarray(s.data) for s in shards])
+
+
+def window_layout(n: int, b: int, t_n: int | None = None):
+    """The canonical padded layout of an n-request window in a b slot
+    bucket: ``(perm, valid, k_of)``.
+
+    ``perm[pos]`` is the ORIGINAL request index at padded position
+    ``pos`` (0 on padding slots), ``valid`` masks real requests, and
+    ``k_of`` maps positions to tenants (``None`` without tenants).
+    Plain windows pad at the end; tenant windows carry ``t_n`` equal
+    blocks of ``b // t_n`` slots each, padded at the end of EACH block
+    so per-tenant guard walks stay aligned with their budgets.
+
+    Extracted to module level because the multi-host window protocol
+    depends on every host deriving the SAME layout from ``(n, b)``
+    alone: each host materializes only its own contiguous slice of
+    these positions and the stitched collectives see one consistent
+    global window.
+    """
+    if t_n is None:
+        valid = np.zeros(b, np.float32)
+        valid[:n] = 1.0
+        perm = np.concatenate(
+            [np.arange(n, dtype=np.intp), np.zeros(b - n, np.intp)])
+        return perm, valid, None
+    if n % t_n:
+        raise ValueError(f"window size {n} not divisible by "
+                         f"{t_n} tenants")
+    if b % t_n:
+        raise ValueError(f"bucket {b} not divisible by {t_n} tenants")
+    n_t, bt = n // t_n, b // t_n
+    valid = np.zeros((t_n, bt), np.float32)
+    valid[:, :n_t] = 1.0
+    perm = np.zeros((t_n, bt), np.intp)
+    perm[:, :n_t] = (np.arange(t_n)[:, None] * n_t
+                     + np.arange(n_t)[None, :])
+    k_of = np.repeat(np.arange(t_n, dtype=np.int32), bt)
+    return perm.reshape(b), valid.reshape(b), k_of
 
 
 @dataclass
@@ -148,17 +203,17 @@ class WindowResult:
 
     @property
     def decisions_np(self) -> np.ndarray:
-        return np.asarray(self.decisions)[self.valid > 0]
+        return _local_np(self.decisions)[self.valid > 0]
 
     @property
     def revenue_np(self) -> np.ndarray:
-        return np.asarray(self.revenue)[self.valid > 0]
+        return _local_np(self.revenue)[self.valid > 0]
 
     @property
     def regions_np(self) -> np.ndarray | None:
         if self.regions is None:
             return None
-        return np.asarray(self.regions)[self.valid > 0]
+        return _local_np(self.regions)[self.valid > 0]
 
     def stats(self) -> WindowStats:
         return WindowStats(
@@ -206,7 +261,8 @@ class ServingPipeline:
                  n_regions: int | None = None,
                  lam_init: float = 0.0, ledger=None,
                  donate_dual: bool = True,
-                 spec: ConstraintSpec | None = None, obs=None):
+                 spec: ConstraintSpec | None = None, obs=None,
+                 multihost: bool | None = None):
         if spec is None:
             spec = spec_from_legacy(
                 float(budget_per_window), tenant_budgets=tenant_budgets,
@@ -225,6 +281,18 @@ class ServingPipeline:
         self.dual_cfg = dual_cfg or DualDescentConfig()
         self.guard = guard
         self.mesh = mesh
+        # multi-process request mesh (repro.distributed.multihost): the
+        # window pass runs over GLOBAL arrays assembled from each host's
+        # slice; auto-detected from jax.distributed state, overridable
+        # for tests
+        self.multihost = (bool(multihost) if multihost is not None
+                          else mesh is not None
+                          and jax.process_count() > 1)
+        if self.multihost and mesh is None:
+            raise ValueError("multihost serving needs a request mesh")
+        self._params_mh = None  # replicated global params (built lazily)
+        self._layout_mh = None  # replicated global g_of/n3_of tables
+        self._mh_lam = False  # lam chain converted to a global array?
         # legacy-compatible views of the compiled spec
         self.tenant_mode = "priced" if cs.tenant_priced else "shared"
         self.tenant_budgets = (
@@ -295,14 +363,16 @@ class ServingPipeline:
                   guard: bool = True, mesh=None, pad_quantum: int = 32,
                   bucketing: str = "linear", lam_init: float = 0.0,
                   ledger=None,
-                  donate_dual: bool = True, obs=None) -> "ServingPipeline":
+                  donate_dual: bool = True, obs=None,
+                  multihost: bool | None = None) -> "ServingPipeline":
         """Build the pipeline from a declarative ConstraintSpec (the
         compiled total budget seeds ``budget_per_window``)."""
         return cls(server, reward_params, reward_cfg,
                    spec.compile().total_budget, dual_cfg=dual_cfg,
                    guard=guard, mesh=mesh, pad_quantum=pad_quantum,
                    bucketing=bucketing, lam_init=lam_init, ledger=ledger,
-                   donate_dual=donate_dual, spec=spec, obs=obs)
+                   donate_dual=donate_dual, spec=spec, obs=obs,
+                   multihost=multihost)
 
     # -- fused pass -----------------------------------------------------------
 
@@ -329,7 +399,7 @@ class ServingPipeline:
         local_total = prefix[-1] if flops_mass.shape[0] \
             else jnp.float32(0.0)
         if axis is not None:
-            total = jax.lax.psum(local_total, axis)
+            total = ordered_psum(local_total, axis)
             prefix = prefix + _exclusive_shard_offset(local_total, axis)
         else:
             total = local_total
@@ -355,6 +425,14 @@ class ServingPipeline:
         tb = self.tenant_budgets
         r_n = self.n_regions
         mode = cs.mode
+        # chunk tables ride REQUEST-SHARDED through a multi-process mesh
+        # (each host uploads only its own rows; ``rows`` then index the
+        # shard-local slice) - the single-process path keeps replicated
+        # tables + the padded-perm gather.  Both gather identical
+        # values, so results stay bitwise equal across the two layouts.
+        tspec = ({"p": P(None, AXIS, None), "ck": P(None, AXIS, None),
+                  "g_of": P(), "n3_of": P()}
+                 if self.multihost else P())
 
         if mode == "geotenants":
             t_n = len(tb)
@@ -412,7 +490,7 @@ class ServingPipeline:
                     any_tied = jnp.any(tied_ir & is_tied[:, None],
                                        axis=0).astype(jnp.float32)
                     if axis is not None:
-                        fixed = jax.lax.psum(fixed, axis)
+                        fixed = ordered_psum(fixed, axis)
                         any_tied = jax.lax.pmax(any_tied, axis)
                     cap = jnp.maximum(
                         budgets[t_n:] / jnp.maximum(scales, 1e-30)
@@ -458,11 +536,11 @@ class ServingPipeline:
                         ).astype(jnp.float32)
                 tr_spend = (oh_t * cd[:, None]).T @ oh_r  # (T, R)
                 if axis is not None:
-                    tr_spend = jax.lax.psum(tr_spend, axis)
+                    tr_spend = ordered_psum(tr_spend, axis)
                 spend = jnp.sum(tr_spend)
                 flops = jnp.sum(jnp.take(costs, dec) * valid)
                 if axis is not None:
-                    flops = jax.lax.psum(flops, axis)
+                    flops = ordered_psum(flops, axis)
                 rev = self._execute(tables, dec, rows, valid)
                 return (rewards, dec, rev, spend, flops, dg,
                         jnp.sum(tr_spend, axis=1), region,
@@ -471,7 +549,7 @@ class ServingPipeline:
             if self.mesh is not None:
                 fn = shard_map(
                     fn, mesh=self.mesh,
-                    in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS),
+                    in_specs=(P(), tspec, P(AXIS), P(AXIS), P(AXIS),
                               P(AXIS), P(), P(), P()),
                     out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(),
                                P(), P(AXIS), P(), P()))
@@ -547,7 +625,7 @@ class ServingPipeline:
                     region_spend = None
                     spend = jnp.sum(jnp.take(opt_costs, dec_m) * valid)
                     if axis is not None:
-                        spend = jax.lax.psum(spend, axis)
+                        spend = ordered_psum(spend, axis)
                 else:
                     cheap_k = jnp.arange(r_n) * j_n + cheap
                     dec_m, dg, region_spend = downgrade_guard(
@@ -558,7 +636,7 @@ class ServingPipeline:
                 regions = dec_m // j_n
                 flops = jnp.sum(jnp.take(costs, dec) * valid)
                 if axis is not None:
-                    flops = jax.lax.psum(flops, axis)
+                    flops = ordered_psum(flops, axis)
                 rev = self._execute(tables, dec, rows, valid)
                 return (rewards, dec, rev, spend, flops, dg, None,
                         regions, region_spend)
@@ -566,7 +644,7 @@ class ServingPipeline:
             if self.mesh is not None:
                 fn = shard_map(
                     fn, mesh=self.mesh,
-                    in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS),
+                    in_specs=(P(), tspec, P(AXIS), P(AXIS), P(AXIS),
                               P(), P(), P()),
                     out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(),
                                P(), P(AXIS), P()))
@@ -595,7 +673,7 @@ class ServingPipeline:
                     dg = jnp.int32(0)
                     spend = jnp.sum(jnp.take(costs_eff, dec) * valid)
                     if axis is not None:
-                        spend = jax.lax.psum(spend, axis)
+                        spend = ordered_psum(spend, axis)
                 else:
                     dec, dg, tenant_spend = downgrade_guard(
                         dec, costs_eff, budgets, cheap, mask, k_of=k_of,
@@ -603,7 +681,7 @@ class ServingPipeline:
                     spend = jnp.sum(tenant_spend)
                 flops = jnp.sum(jnp.take(costs, dec) * valid)
                 if axis is not None:
-                    flops = jax.lax.psum(flops, axis)
+                    flops = ordered_psum(flops, axis)
                 rev = self._execute(tables, dec, rows, valid)
                 return (rewards, dec, rev, spend, flops, dg, tenant_spend,
                         None, None)
@@ -611,7 +689,7 @@ class ServingPipeline:
             if self.mesh is not None:
                 fn = shard_map(
                     fn, mesh=self.mesh,
-                    in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS),
+                    in_specs=(P(), tspec, P(AXIS), P(AXIS), P(AXIS),
                               P(AXIS), P(), P(), P()),
                     out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(),
                                P(), P(), P()))
@@ -627,20 +705,20 @@ class ServingPipeline:
                 dg = jnp.int32(0)
                 spend = jnp.sum(jnp.take(costs_eff, dec) * valid)
                 if axis is not None:
-                    spend = jax.lax.psum(spend, axis)
+                    spend = ordered_psum(spend, axis)
             else:
                 dec, dg, spend = downgrade_guard(
                     dec, costs_eff, budget, cheap, mask, axis_name=axis)
             flops = jnp.sum(jnp.take(costs, dec) * valid)
             if axis is not None:
-                flops = jax.lax.psum(flops, axis)
+                flops = ordered_psum(flops, axis)
             rev = self._execute(tables, dec, rows, valid)
             return rewards, dec, rev, spend, flops, dg, None, None, None
 
         if self.mesh is not None:
             fn = shard_map(
                 fn, mesh=self.mesh,
-                in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS), P(), P(),
+                in_specs=(P(), tspec, P(AXIS), P(AXIS), P(AXIS), P(), P(),
                           P()),
                 out_specs=(P(AXIS), P(AXIS), P(AXIS), P(), P(), P(), P(),
                            P(), P()))
@@ -766,6 +844,42 @@ class ServingPipeline:
             b = q * (1 << max(0, (b + q - 1) // q - 1).bit_length())
         return b
 
+    def window_bucket(self, n: int) -> int:
+        """Padded size of an n-request window - the GLOBAL bucket every
+        host of a multi-process mesh derives identically from n alone
+        (tenant windows bucket per block; see ``window_layout``)."""
+        if self.tenant_budgets is not None:
+            t_n = len(self.tenant_budgets)
+            if n % t_n:
+                raise ValueError(f"window size {n} not divisible by "
+                                 f"{t_n} tenants")
+            return self._bucket(n // t_n) * t_n
+        return self._bucket(n)
+
+    # -- multi-process array assembly ----------------------------------------
+
+    def _repl(self, x):
+        """Host value -> fully-replicated global array on the mesh
+        (every process passes the same bytes - pure (seed, t) windows
+        and the replicated dual chain guarantee it)."""
+        from jax.experimental import multihost_utils
+        return multihost_utils.host_local_array_to_global_array(
+            np.asarray(x), self.mesh, P())
+
+    def _shard_rows(self, x):
+        """This host's rows of a request-sharded (b, ...) array -> the
+        global array (rows stay on the host that produced them)."""
+        from jax.experimental import multihost_utils
+        return multihost_utils.host_local_array_to_global_array(
+            np.asarray(x), self.mesh, P(AXIS))
+
+    def _shard_tables(self, x):
+        """This host's (G, rows, cap) chunk-table slice -> the global
+        (G, b, cap) array sharded along the row axis."""
+        from jax.experimental import multihost_utils
+        return multihost_utils.host_local_array_to_global_array(
+            np.asarray(x), self.mesh, P(None, AXIS, None))
+
     def compile_count(self) -> int:
         """Total jit cache entries (XLA traces) across every window fn
         this pipeline ever built - the delta per window lands in
@@ -834,11 +948,30 @@ class ServingPipeline:
                 "g_of": self._tables["g_of"],
                 "n3_of": self._tables["n3_of"]}
 
+    def _mh_tables(self, tables: dict) -> dict:
+        """A host-local (already padded + sentineled) chunk-table slice
+        -> the global row-sharded tables of the multi-process pass.
+        The (G,)/(J,) layout vectors are replicated once and cached."""
+        if "p" not in tables:
+            raise ValueError("multihost serving needs the compact (k3) "
+                             "chunk-table layout")
+        p = np.asarray(tables["p"], np.int32)
+        ck = np.asarray(tables["ck"], np.float32)
+        self._h2d_window += int(p.nbytes + ck.nbytes)
+        if self._layout_mh is None:
+            self._layout_mh = {
+                "g_of": self._repl(self._tables["g_of"]),
+                "n3_of": self._repl(self._tables["n3_of"]),
+            }
+        return {"p": self._shard_tables(p),
+                "ck": self._shard_tables(ck), **self._layout_mh}
+
     def serve_window(self, ctx: np.ndarray, rows: np.ndarray, *,
                      lam=None, update_lam: bool = True, budget=None,
                      cost_scale=None, dual_budget=None,
                      dual_cost_scale=None,
-                     tables: dict | None = None) -> WindowResult:
+                     tables: dict | None = None,
+                     shard=None) -> WindowResult:
         """Serve one traffic window.
 
         ctx (n, d_context) raw contexts, rows (n,) user indices into the
@@ -870,8 +1003,24 @@ class ServingPipeline:
         different (budget, scale) than the online pass - pass the NEXT
         window's values to warm-start the price where the grid is about
         to be (the CI-forecast warm-start; defaults: the online values).
+
+        ``shard`` (a ``repro.distributed.multihost.HostWindowSlice``,
+        normally carried by a ``MultihostSource`` chunk) switches the
+        call to the MULTI-PROCESS window protocol: ``ctx``/``rows``/
+        ``tables`` are this host's ALREADY-PADDED slice of the global
+        window (``shard`` names the global n/bucket and the local
+        valid/k_of), the pass runs over global arrays assembled from
+        every host's slice, and the stitched collectives make lambda,
+        spends and counters replicated - bitwise equal on every host.
         """
-        n = len(rows)
+        if shard is not None and not self.multihost:
+            raise ValueError("serve_window(shard=...) needs a pipeline "
+                             "built over the multi-process mesh "
+                             "(multihost=True)")
+        if self.multihost and shard is None:
+            raise ValueError("a multihost pipeline serves host slices: "
+                             "pass shard= (use a MultihostSource)")
+        n = len(rows) if shard is None else int(shard.n)
         ctx = np.asarray(ctx, np.float32)
         rows = np.asarray(rows, np.int32)
         if self._stream_only and tables is None and n:
@@ -960,53 +1109,50 @@ class ServingPipeline:
                 self.ledger.record_result(res)
             return res
 
-        k_of = None
-        if tb is not None:
-            # tenant windows carry T equal blocks; padding must land at
-            # the END OF EACH BLOCK so per-tenant guard walks and prices
-            # see blocks aligned with their budgets
-            t_n = len(tb)
-            if n % t_n:
-                raise ValueError(f"window size {n} not divisible by "
-                                 f"{t_n} tenants")
-            n_t = n // t_n
-            bt = self._bucket(n_t)
-            b = bt * t_n
-            ctx_b = np.zeros((t_n, bt, ctx.shape[1]), np.float32)
-            rows_b = np.zeros((t_n, bt), np.int32)
-            valid = np.zeros((t_n, bt), np.float32)
-            ctx_b[:, :n_t] = ctx.reshape(t_n, n_t, -1)
-            rows_b[:, :n_t] = rows.reshape(t_n, n_t)
-            valid[:, :n_t] = 1.0
-            ctx, rows = ctx_b.reshape(b, -1), rows_b.reshape(b)
-            valid = valid.reshape(b)
-            k_of = np.repeat(np.arange(t_n, dtype=np.int32), bt)
-            # padded position -> original request index (per-block pad)
-            perm = np.zeros((t_n, bt), np.intp)
-            perm[:, :n_t] = (np.arange(t_n)[:, None] * n_t
-                             + np.arange(n_t)[None, :])
-            perm = perm.reshape(b)
-        else:
-            b = self._bucket(n)
-            if b != n:
-                ctx = np.concatenate(
-                    [ctx, np.zeros((b - n, ctx.shape[1]), np.float32)])
-                rows = np.concatenate([rows, np.zeros(b - n, np.int32)])
-            valid = np.zeros(b, np.float32)
-            valid[:n] = 1.0
-            perm = np.concatenate(
-                [np.arange(n, dtype=np.intp), np.zeros(b - n, np.intp)])
         chunked = tables is not None
+        if shard is not None:
+            # multi-process window: the source already laid out this
+            # host's padded slice (window_layout positions lo..hi); the
+            # global (n, b) pair keys the SAME bucket on every host
+            if not chunked:
+                raise ValueError("multihost serving streams chunk "
+                                 "tables; materialized (U, J) serving "
+                                 "is single-process only")
+            b = int(shard.b)
+            valid = np.asarray(shard.valid, np.float32)
+            k_of = (None if shard.k_of is None
+                    else np.asarray(shard.k_of, np.int32))
+            perm = None
+        else:
+            # tenant windows carry T equal blocks, padded at the end of
+            # EACH block so per-tenant guard walks and prices see blocks
+            # aligned with their budgets; plain windows pad at the end
+            b = self.window_bucket(n)
+            perm, valid, k_of = window_layout(
+                n, b, None if tb is None else len(tb))
+            if b != n:
+                m = valid > 0
+                ctx_p = np.zeros((b, ctx.shape[1]), np.float32)
+                rows_p = np.zeros(b, np.int32)
+                ctx_p[m] = ctx[perm[m]]
+                rows_p[m] = rows[perm[m]]
+                ctx, rows = ctx_p, rows_p
         self._h2d_window = int(ctx.nbytes + rows.nbytes + valid.nbytes
                                + (k_of.nbytes if k_of is not None else 0))
         with self.obs.span("h2d", n=n, b=b):
-            if chunked:
+            if shard is not None:
+                run_tables = self._mh_tables(tables)
+                ctx_j = self._shard_rows(ctx)
+                rows_j = self._shard_rows(rows.astype(np.int32))
+            elif chunked:
                 run_tables = self._pad_chunk_tables(tables, n, b)
                 rows = perm.astype(np.int32)  # gather within padded chunk
+                ctx_j = jnp.asarray(ctx)
+                rows_j = jnp.asarray(rows, jnp.int32)
             else:
                 run_tables = self._tables
-            ctx_j = jnp.asarray(ctx)
-            rows_j = jnp.asarray(rows, jnp.int32)
+                ctx_j = jnp.asarray(ctx)
+                rows_j = jnp.asarray(rows, jnp.int32)
         key = (b, b != n, chunked)
         if key not in self._fns:
             self._fns[key] = (self._build_main_fn(b, b != n),
@@ -1014,12 +1160,30 @@ class ServingPipeline:
             self._built.extend(self._fns[key])
         main_fn, dual_fn = self._fns[key]
         c0 = self.compile_count()
+        params = self.reward_params
+        if shard is not None:
+            # global twins of host-resident state, built once: params
+            # replicate to every host's devices; the lambda chain is
+            # converted in place and stays global from then on (dual-fn
+            # outputs over the process-spanning mesh are global already)
+            if self._params_mh is None:
+                self._params_mh = jax.tree_util.tree_map(
+                    self._repl, self.reward_params)
+            params = self._params_mh
+            if not self._mh_lam:
+                self.lam = self._repl(self.lam)
+                self._lam_rec = self._repl(self._lam_rec)
+                self._mh_lam = True
+            _c = self._repl  # replicated scalars / (K,) vectors
+            _k = self._shard_rows  # request-sharded per-position maps
+        else:
+            _c = _k = jnp.asarray
         if lam is None:
             lam_in = self.lam
             lam_before_rec = self._lam_rec
         else:
-            lam_in = jnp.broadcast_to(
-                jnp.asarray(lam, jnp.float32), jnp.shape(self.lam))
+            lam_in = _c(np.broadcast_to(np.asarray(lam, np.float32),
+                                        np.shape(self.lam)))
             lam_before_rec = lam_in
         # the dual fn DONATES its lambda argument: hand it the chain
         # buffer only when this call advances the chain; otherwise (a
@@ -1031,26 +1195,27 @@ class ServingPipeline:
             lam_dual = lam_in
         else:
             lam_dual = jnp.copy(lam_in)
-        valid_j = jnp.asarray(valid)
+        valid_j = _k(valid) if shard is not None else jnp.asarray(valid)
+        k_of_j = None if k_of is None else _k(k_of)
 
         if combined:
-            bud_j = jnp.asarray(bud_vec)
-            sc_j = jnp.asarray(sc_vec)
-            args = (jnp.asarray(k_of), lam_in, bud_j, sc_j)
+            bud_j = _c(np.asarray(bud_vec, np.float32))
+            sc_j = _c(np.asarray(sc_vec, np.float32))
+            args = (k_of_j, lam_in, bud_j, sc_j)
         elif geo:
-            bud_j = jnp.asarray(bud_vec)
-            sc_j = jnp.asarray(sc_vec)
+            bud_j = _c(np.asarray(bud_vec, np.float32))
+            sc_j = _c(np.asarray(sc_vec, np.float32))
             args = (lam_in, bud_j, sc_j)
         elif tb is not None:
-            bud_j = jnp.asarray(bud_vec)
-            sc_j = jnp.float32(sc)
-            args = (jnp.asarray(k_of), lam_in, bud_j, sc_j)
+            bud_j = _c(np.asarray(bud_vec, np.float32))
+            sc_j = _c(np.float32(sc))
+            args = (k_of_j, lam_in, bud_j, sc_j)
         else:
-            bud_j, sc_j = jnp.float32(bud), jnp.float32(sc)
+            bud_j, sc_j = _c(np.float32(bud)), _c(np.float32(sc))
             args = (lam_in, bud_j, sc_j)
         with self.obs.span("dispatch", n=n, b=b):
-            out = main_fn(self.reward_params, run_tables,
-                          ctx_j, rows_j, valid_j, *args)
+            out = main_fn(params, run_tables, ctx_j, rows_j, valid_j,
+                          *args)
         (rewards, dec, rev, spend, flops, dg, t_spend, regions,
          r_spend) = out[:9]
         tr_spend = out[9] if len(out) > 9 else None
@@ -1064,37 +1229,35 @@ class ServingPipeline:
         with self.obs.span("dual_update", n=n, b=b):
             if combined:
                 d_bud = bud_j if dual_budget is None \
-                    else jnp.asarray(np.asarray(dual_budget,
-                                                np.float32).reshape(-1))
+                    else _c(np.asarray(dual_budget,
+                                       np.float32).reshape(-1))
                 d_sc = sc_j if dual_cost_scale is None \
-                    else jnp.asarray(np.asarray(dual_cost_scale,
-                                                np.float32))
-                lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
+                    else _c(np.asarray(dual_cost_scale, np.float32))
+                lam_new = dual_fn(rewards, valid_j, k_of_j,
                                   lam_dual, d_bud, d_sc)
             elif geo:
                 d_bud = bud_j if dual_budget is None \
-                    else jnp.asarray(np.asarray(dual_budget, np.float32))
+                    else _c(np.asarray(dual_budget, np.float32))
                 d_sc = sc_j if dual_cost_scale is None \
-                    else jnp.asarray(np.asarray(dual_cost_scale,
-                                                np.float32))
+                    else _c(np.asarray(dual_cost_scale, np.float32))
                 lam_new = dual_fn(rewards, valid_j, lam_dual, d_bud, d_sc)
             elif tb is not None:
                 d_bud = bud_j if dual_budget is None \
-                    else jnp.asarray(np.asarray(dual_budget,
-                                                np.float32).reshape(-1))
+                    else _c(np.asarray(dual_budget,
+                                       np.float32).reshape(-1))
                 d_sc = sc_j if dual_cost_scale is None \
-                    else jnp.float32(dual_cost_scale)
+                    else _c(np.float32(dual_cost_scale))
                 if cs.tenant_priced:
-                    lam_new = dual_fn(rewards, valid_j, jnp.asarray(k_of),
+                    lam_new = dual_fn(rewards, valid_j, k_of_j,
                                       lam_dual, d_bud, d_sc)
                 else:  # shared price descends on the TOTAL budget
                     lam_new = dual_fn(rewards, valid_j, lam_dual,
                                       jnp.sum(d_bud), d_sc)
             else:
-                d_bud = bud_j if dual_budget is None else jnp.float32(
-                    dual_budget)
-                d_sc = sc_j if dual_cost_scale is None else jnp.float32(
-                    dual_cost_scale)
+                d_bud = bud_j if dual_budget is None else _c(
+                    np.float32(dual_budget))
+                d_sc = sc_j if dual_cost_scale is None else _c(
+                    np.float32(dual_cost_scale))
                 lam_new = dual_fn(rewards, valid_j, lam_dual, d_bud, d_sc)
         if update_lam:
             self.lam = lam_new

@@ -206,14 +206,17 @@ class StreamStats:
 
     @property
     def total_spend(self) -> float:
-        return float(sum(float(r.spend) for r in self.windows))
+        from repro.obs.events import _host_np
+        return float(sum(float(np.sum(_host_np(r.spend)))
+                         for r in self.windows))
 
     def overshoot(self, c_min: float) -> float:
         """Max relative spend overshoot vs. max(budget, n*c_min)."""
+        from repro.obs.events import _host_np
         worst = 0.0
         for r in self.windows:
             cap = max(r.budget, r.n_valid * c_min)
-            worst = max(worst, float(r.spend) / cap - 1.0)
+            worst = max(worst, float(np.sum(_host_np(r.spend))) / cap - 1.0)
         return worst
 
     @property
@@ -321,10 +324,11 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
             if streaming:
                 chunk = source.window(t, n)
                 out = (chunk.ctx, chunk.rows, chunk.tables,
-                       int(getattr(chunk, "h2d_bytes", 0)))
+                       int(getattr(chunk, "h2d_bytes", 0)),
+                       getattr(chunk, "shard", None))
             else:
                 ctx, rows = source(t, n)
-                out = (ctx, rows, None, 0)
+                out = (ctx, rows, None, 0, None)
             return out + ((clock() - p0) * 1e3,)
 
     t0 = clock()
@@ -333,13 +337,13 @@ def run_stream(pipeline: ServingPipeline, sizes: list[int],
     last = len(sizes) - 1
 
     def _serve(t: int, item, stall: float):
-        ctx, rows, tables, h2d, prep = item
+        ctx, rows, tables, h2d, shard, prep = item
         d0 = clock()
         lam = None if lam_trace is None else lam_trace[t]
         t_next = min(t + 1, last)  # final window: nothing left to aim at
         with obs.span("serve", t=t, n=sizes[t]):
             res = pipeline.serve_window(
-                ctx, rows, lam=lam, tables=tables,
+                ctx, rows, lam=lam, tables=tables, shard=shard,
                 budget=None if budget_trace is None else budget_trace[t],
                 cost_scale=None if scale_trace is None
                 else scale_trace[t],

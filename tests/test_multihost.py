@@ -1,0 +1,526 @@
+"""Multi-host request mesh: bring-up, cross-host window routing,
+stitched guard/dual collectives, and elastic re-sharding.
+
+The acceptance gates (ISSUE PR 9):
+  * an 8-process subprocess mesh streams windows whose decisions, lam
+    traces and per-axis spends are BITWISE identical to the
+    single-process reference sharded over the same 8 devices - for the
+    plain pipeline AND the combined tenant x region (geotenants) spec -
+    with zero steady-state recompiles on every host;
+  * every host agrees bitwise with every other host on the replicated
+    lam/spend chain (the ordered_psum stitching);
+  * a stream checkpointed by a 2-host group resumes on a 4-host group
+    (elastic join) and continues bitwise-identically to the
+    uninterrupted reference (reshard-on-restore + (seed, t) replay).
+
+True multi-process collectives are exercised by spawning N child
+processes that join one ``jax.distributed`` group over the loopback
+coordinator, each with ``8/N`` fake host devices so the GLOBAL shard
+count is always 8 - bitwise parity across different world sizes only
+holds at a fixed shard count, because the all_gather-based reductions
+sum in shard order.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# Self-contained child: builds the cheap random-score serving stack
+# (the test_serving.py sharded-parity stack) over a replay source and
+# streams it - single-process reference or multi-host member, plain or
+# geotenants, with an optional elastic checkpoint/resume phase.
+CHILD = textwrap.dedent("""
+    import json, os, sys
+    import numpy as np
+
+    from repro.distributed import multihost as mh
+
+    dist = mh.initialize()
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cascade.engine import CascadeServer
+    from repro.core.action_chain import (ModelInstance, StageSpec,
+                                         generate_action_chains)
+    from repro.core.reward_model import RewardModelConfig, reward_model_init
+    from repro.data.request_source import TableReplaySource
+    from repro.launch.mesh import make_request_mesh, process_shard_rows
+    from repro.serving.pipeline import ServingPipeline, window_layout
+    from repro.serving.stream import run_stream
+
+    mode = os.environ["MH_MODE"]          # plain | geotenants
+    phase = os.environ.get("MH_PHASE", "")  # "" | a | b (elastic)
+
+    rng = np.random.default_rng(0)
+    u, i = 40, 150
+    scores = {k: rng.normal(size=(u, i)).astype(np.float32)
+              for k in ("DSSM", "YDNN", "DIN", "DIEN")}
+    clicks = (rng.random((u, i)) < 0.15).astype(np.float32)
+    n2 = tuple(int(x) for x in np.linspace(0.2 * i, 0.5 * i, 4))
+    n3 = tuple(int(x) for x in np.linspace(8, 0.2 * i, 4))
+    chains = generate_action_chains((
+        StageSpec("recall", (ModelInstance("DSSM", 13e3),), (i,), 4),
+        StageSpec("prerank", (ModelInstance("YDNN", 123e3),), n2, 4),
+        StageSpec("rank", (ModelInstance("DIN", 7020e3),
+                           ModelInstance("DIEN", 7098e3)), n3, 4),
+    ))
+    server = CascadeServer(stage_scores=scores, chains=chains,
+                           clicks=clicks, expose=8)
+    ctx = np.random.default_rng(5).normal(size=(u, 12)).astype(np.float32)
+    src = TableReplaySource.from_server(server, ctx, seed=7,
+                                        device_tables=False)
+    rcfg = RewardModelConfig(n_stages=3, max_models=2, n_scale_groups=4,
+                             d_context=12, d_feature=16, d_hidden=16,
+                             d_state=8)
+    params = dict(reward_model_init(jax.random.PRNGKey(0), rcfg))
+    params["label_norm"] = jnp.asarray(
+        np.linspace(1.0, 3.0, chains.n_chains).astype(np.float32))
+    budget = 0.5 * float(chains.costs.max()) * 64
+    mesh = make_request_mesh()
+
+    bt = st_tr = None
+    if mode == "geotenants":
+        from repro.serving.spec import (ConstraintSpec, GlobalAxis,
+                                        RegionAxis, TenantAxis)
+        sizes = [48, 96, 48, 64]
+        per = 0.5 * float(chains.costs.max())
+        spec = ConstraintSpec([
+            TenantAxis((per * 24, per * 24), priced=True),
+            RegionAxis(2), GlobalAxis(pricing="carbon"),
+        ])
+        bt = [np.concatenate([np.full(2, per * n / 2),
+                              np.full(2, 0.6 * per * n)]).astype(np.float32)
+              for n in sizes]
+        st_tr = [np.array([1.0, 1.3], np.float32)] * len(sizes)
+        pipe = ServingPipeline.from_spec(src.universe, params, rcfg,
+                                         spec, mesh=mesh)
+    else:
+        sizes = [64, 192, 50, 64, 96, 64]
+        pipe = ServingPipeline(src.universe, params, rcfg, budget,
+                               mesh=mesh)
+
+    t0 = 0
+    if phase == "a":      # elastic leg 1: serve a prefix, checkpoint
+        sizes = sizes[:3]
+    elif phase == "b":    # elastic leg 2: restore, resume the suffix
+        ck = mh.restore_stream(os.environ["MH_CKPT"], pipe)
+        t0 = ck.t_next
+        src = mh.ShiftedSource(src, t0)
+        bt, st_tr = (None if bt is None else bt[t0:],
+                     None if st_tr is None else st_tr[t0:])
+        sizes = sizes[t0:]
+
+    source = mh.MultihostSource(src, pipe) if dist else src
+    stats = run_stream(pipe, sizes, source, prefetch=0,
+                       budget_trace=bt, scale_trace=st_tr)
+    if phase == "a" and jax.process_index() == 0:
+        mh.checkpoint_stream(os.environ["MH_CKPT"], pipe,
+                             t_next=len(sizes), seed=src.seed)
+
+    t_n = (None if pipe.tenant_budgets is None
+           else len(pipe.tenant_budgets))
+    windows = []
+    for t, (r, n) in enumerate(zip(stats.windows, sizes)):
+        if dist:
+            b = pipe.window_bucket(n)
+            perm, valid, _ = window_layout(n, b, t_n)
+            rows_g = np.concatenate(
+                [np.arange(lo, hi) for lo, hi in
+                 process_shard_rows(pipe.mesh, b)])
+            req = perm[rows_g[valid[rows_g] > 0]]
+        else:
+            req = np.arange(n)
+        row = {
+            "req": req.tolist(),
+            "dec": np.asarray(r.decisions_np).tolist(),
+            "lam": np.asarray(mh._host_value(r.lam_after),
+                              np.float64).reshape(-1).tolist(),
+            "spend": np.asarray(mh._host_value(r.spend),
+                                np.float64).reshape(-1).tolist(),
+        }
+        if mode == "geotenants":
+            row["regions"] = np.asarray(r.regions_np).tolist()
+            row["tr"] = np.asarray(mh._host_value(r.tr_spend),
+                                   np.float64).reshape(-1).tolist()
+        windows.append(row)
+    out = {"host": mh.host_report(), "t0": t0,
+           "steady_compiles": int(stats.steady_compiles),
+           "windows": windows}
+    with open(os.environ["MH_OUT"], "w") as f:
+        json.dump(out, f)
+    print("CHILD OK", mh.host_report())
+""")
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("localhost", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _launch(n_procs: int, tmp_path, mode: str, phase: str = "",
+            timeout: int = 600) -> list[dict]:
+    """Spawn a jax.distributed group of ``n_procs`` children (8/N fake
+    devices each -> always 8 global shards) and gather their digests;
+    ``n_procs=1`` runs the identically-sharded single-process
+    reference."""
+    assert 8 % n_procs == 0
+    port = _free_port()
+    procs = []
+    for pid in range(n_procs):
+        out = str(tmp_path / f"mh_{mode}{phase}_{pid}.json")
+        env = dict(os.environ)
+        env.update({
+            "PYTHONPATH": os.path.join(REPO, "src"),
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": ("--xla_force_host_platform_device_count="
+                          f"{8 // n_procs}"),
+            "MH_MODE": mode, "MH_PHASE": phase, "MH_OUT": out,
+            "MH_CKPT": str(tmp_path / "stream_ckpt.json"),
+        })
+        if n_procs > 1:
+            env.update({
+                "GREENFLOW_COORDINATOR": f"localhost:{port}",
+                "GREENFLOW_NUM_PROCESSES": str(n_procs),
+                "GREENFLOW_PROCESS_ID": str(pid),
+            })
+        procs.append((out, subprocess.Popen(
+            [sys.executable, "-c", CHILD], env=env,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True)))
+    digests = []
+    for out, p in procs:
+        o, _ = p.communicate(timeout=timeout)
+        assert p.returncode == 0, f"child {out} failed:\n{o[-4000:]}"
+        with open(out) as f:
+            digests.append(json.load(f))
+    return digests
+
+
+def _stitch(children: list[dict], t: int, key: str) -> np.ndarray:
+    """Per-host local rows -> the global request-order vector."""
+    req = np.concatenate([np.asarray(c["windows"][t]["req"], np.int64)
+                          for c in children])
+    val = np.concatenate([np.asarray(c["windows"][t][key])
+                          for c in children])
+    order = np.argsort(req)
+    assert (req[order] == np.arange(len(req))).all()
+    return val[order]
+
+
+def _assert_group_matches_reference(ref: dict, children: list[dict],
+                                    geotenants: bool = False,
+                                    ref_offset: int = 0) -> None:
+    for t in range(len(children[0]["windows"])):
+        rw = ref["windows"][t + ref_offset]
+        for c in children:  # every host agrees bitwise on global state
+            cw = c["windows"][t]
+            assert cw["lam"] == rw["lam"], \
+                (t, c["host"]["process_index"], cw["lam"], rw["lam"])
+            assert cw["spend"] == rw["spend"], \
+                (t, c["host"]["process_index"])
+            if geotenants:
+                assert cw["tr"] == rw["tr"], (t, c["host"])
+        np.testing.assert_array_equal(
+            _stitch(children, t, "dec"), np.asarray(rw["dec"]),
+            err_msg=f"decisions w{t}")
+        if geotenants:
+            np.testing.assert_array_equal(
+                _stitch(children, t, "regions"),
+                np.asarray(rw["regions"]), err_msg=f"regions w{t}")
+
+
+# ---------------------------------------------------------------------------
+# Subprocess-mesh acceptance gates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_multihost_8process_bitwise_plain(tmp_path):
+    """8 coordinator-joined processes (1 device each) serve the plain
+    stream bitwise-identically to the single-process 8-shard reference:
+    stitched guard prefix sums, global dual chain, decisions - and zero
+    steady-state recompiles on EVERY host."""
+    ref = _launch(1, tmp_path, "plain")[0]
+    children = _launch(8, tmp_path, "plain")
+    # (the reference may pay a one-time donated-lam relayout retrace per
+    # bucket; the multihost path replicates lam globally BEFORE window 0,
+    # so its steady state must be exactly zero)
+    for c in children:
+        assert c["steady_compiles"] == 0, c["host"]
+        assert c["host"]["process_count"] == 8
+        assert c["host"]["global_devices"] == 8
+    _assert_group_matches_reference(ref, children)
+
+
+@pytest.mark.slow
+def test_multihost_bitwise_geotenants(tmp_path):
+    """The combined tenant x region spec over 2 hosts: per-tenant AND
+    per-region prices/spends ((T + R,) budget vectors) stitch globally
+    to the reference bitwise - including the (T, R) spend matrix and
+    every request's serving region."""
+    ref = _launch(1, tmp_path, "geotenants")[0]
+    children = _launch(2, tmp_path, "geotenants")
+    for c in children:
+        assert c["steady_compiles"] == 0, c["host"]
+    _assert_group_matches_reference(ref, children, geotenants=True)
+
+
+@pytest.mark.slow
+def test_multihost_elastic_join_leave_resume(tmp_path):
+    """Elastic re-sharding mid-stream: a 2-host group serves windows
+    0..2 and checkpoints {cursor, dual chain, seed}; a 4-host group
+    (hosts JOINED) restores, replays the in-flight window and serves
+    3..5 bitwise-identically to the uninterrupted reference - windows
+    are pure (seed, t) functions, so nothing but the tiny checkpoint
+    crosses the restart.  The SAME checkpoint then resumes on a lone
+    process (hosts LEFT), again bitwise: restore is group-size
+    agnostic in both directions."""
+    ref = _launch(1, tmp_path, "plain")[0]
+    a = _launch(2, tmp_path, "plain", phase="a")
+    assert all(len(c["windows"]) == 3 for c in a)
+    _assert_group_matches_reference(ref, a)  # prefix already bitwise
+    b = _launch(4, tmp_path, "plain", phase="b")
+    assert all(c["t0"] == 3 for c in b)
+    _assert_group_matches_reference(ref, b, ref_offset=3)
+    down = _launch(1, tmp_path, "plain", phase="b")
+    assert all(c["t0"] == 3 for c in down)
+    _assert_group_matches_reference(ref, down, ref_offset=3)
+
+
+# ---------------------------------------------------------------------------
+# Host-side routing geometry (single-process, cheap)
+# ---------------------------------------------------------------------------
+
+
+def _cheap_stack(mesh=None, tenants=None):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cascade.engine import CascadeServer
+    from repro.core.action_chain import (ModelInstance, StageSpec,
+                                         generate_action_chains)
+    from repro.core.reward_model import (RewardModelConfig,
+                                         reward_model_init)
+    from repro.data.request_source import TableReplaySource
+    from repro.serving.pipeline import ServingPipeline
+
+    rng = np.random.default_rng(0)
+    u, i = 30, 80
+    scores = {k: rng.normal(size=(u, i)).astype(np.float32)
+              for k in ("DSSM", "YDNN", "DIN", "DIEN")}
+    clicks = (rng.random((u, i)) < 0.15).astype(np.float32)
+    chains = generate_action_chains((
+        StageSpec("recall", (ModelInstance("DSSM", 13e3),), (i,), 2),
+        StageSpec("prerank", (ModelInstance("YDNN", 123e3),), (24, 40), 2),
+        StageSpec("rank", (ModelInstance("DIN", 7020e3),), (8, 16), 2),
+    ))
+    server = CascadeServer(stage_scores=scores, chains=chains,
+                           clicks=clicks, expose=8)
+    ctx = np.random.default_rng(5).normal(size=(u, 12)).astype(np.float32)
+    src = TableReplaySource.from_server(server, ctx, seed=7,
+                                        device_tables=False)
+    rcfg = RewardModelConfig(n_stages=3, max_models=1, n_scale_groups=2,
+                             d_context=12, d_feature=8, d_hidden=8,
+                             d_state=8)
+    params = dict(reward_model_init(jax.random.PRNGKey(0), rcfg))
+    params["label_norm"] = jnp.asarray(
+        np.linspace(1.0, 3.0, chains.n_chains).astype(np.float32))
+    budget = 0.5 * float(chains.costs.max()) * 64
+    pipe = ServingPipeline(src.universe, params, rcfg, budget,
+                           mesh=mesh, tenant_budgets=tenants,
+                           tenant_mode=("priced" if tenants is not None
+                                        else "shared"))
+    return src, pipe
+
+
+def test_multihost_source_scatters_exact_table_slices():
+    """Single-process MultihostSource geometry: local rows tile per
+    shard, pad rows carry the sentinel fill, and every valid row's
+    context/table columns are exactly the inner source's rows for the
+    globally laid-out users."""
+    from repro.distributed.multihost import MultihostSource
+    from repro.launch.mesh import make_request_mesh
+    from repro.serving.pipeline import window_layout
+
+    mesh = make_request_mesh(1)
+    src, pipe = _cheap_stack(mesh=mesh)
+    msrc = MultihostSource(src, pipe)
+    t, n = 3, 50
+    chunk = msrc.window(t, n)
+    b = pipe.window_bucket(n)
+    perm, valid, _ = window_layout(n, b, None)
+    assert chunk.shard.n == n and chunk.shard.b == b
+    np.testing.assert_array_equal(chunk.shard.valid, valid)
+    np.testing.assert_array_equal(chunk.rows, np.arange(b))
+    users = src.arrivals(t, n)
+    inner = src.window_for_users(users[perm[valid > 0]])
+    m = valid > 0
+    np.testing.assert_array_equal(chunk.ctx[m], inner.ctx)
+    np.testing.assert_array_equal(chunk.tables["p"][:, m, :],
+                                  inner.tables["p"])
+    np.testing.assert_array_equal(chunk.tables["ck"][:, m, :],
+                                  inner.tables["ck"])
+    # pad rows: the _pad_chunk_tables sentinel fill, masked by valid
+    assert (chunk.tables["p"][:, ~m, :] == pipe._cap).all()
+    assert (chunk.tables["ck"][:, ~m, :] == 0).all()
+    assert (chunk.ctx[~m] == 0).all()
+
+
+def test_multihost_source_tenant_blocks():
+    """Tenant windows lay out per-tenant padded blocks; the routed
+    slice carries the matching k_of labels."""
+    from repro.distributed.multihost import MultihostSource
+    from repro.launch.mesh import make_request_mesh
+    from repro.serving.pipeline import window_layout
+
+    mesh = make_request_mesh(1)
+    src, pipe = _cheap_stack(
+        mesh=mesh, tenants=np.asarray([100.0, 100.0], np.float32))
+    msrc = MultihostSource(src, pipe)
+    n = 36
+    chunk = msrc.window(0, n)
+    b = pipe.window_bucket(n)
+    _, valid, k_of = window_layout(n, b, 2)
+    np.testing.assert_array_equal(chunk.shard.k_of, k_of)
+    np.testing.assert_array_equal(chunk.shard.valid, valid)
+    assert chunk.n == n  # shard-aware WindowChunk.n is the GLOBAL count
+    assert len(chunk.rows) == b
+
+
+def test_window_layout_invariants():
+    """Every host derives the same layout from (n, b) alone: plain
+    windows pad at the end, tenant windows pad per block, and the valid
+    entries of perm enumerate requests in order."""
+    from repro.serving.pipeline import window_layout
+
+    perm, valid, k_of = window_layout(50, 64, None)
+    assert k_of is None
+    np.testing.assert_array_equal(perm[valid > 0], np.arange(50))
+    assert valid.sum() == 50 and (valid[:50] == 1).all()
+
+    perm, valid, k_of = window_layout(36, 48, 2)
+    np.testing.assert_array_equal(perm[valid > 0], np.arange(36))
+    np.testing.assert_array_equal(np.bincount(k_of[valid > 0]), [18, 18])
+    with pytest.raises(ValueError):
+        window_layout(35, 48, 2)  # n not divisible by tenants
+    with pytest.raises(ValueError):
+        window_layout(36, 49, 2)  # b not divisible by tenants
+
+
+def test_process_shard_rows_single_process():
+    from repro.launch.mesh import (make_request_mesh, mesh_local_shards,
+                                   mesh_num_shards, process_shard_rows)
+
+    mesh = make_request_mesh(1)
+    assert mesh_num_shards(mesh) == mesh_local_shards(mesh) == 1
+    assert process_shard_rows(mesh, 64) == [(0, 64)]
+    assert mesh_num_shards(None) == 1 and mesh_local_shards(None) == 1
+
+
+# ---------------------------------------------------------------------------
+# Elastic checkpoint + bring-up plumbing (single-process, cheap)
+# ---------------------------------------------------------------------------
+
+
+def test_stream_checkpoint_roundtrip(tmp_path):
+    """checkpoint_stream -> restore_stream carries the dual chain
+    bitwise (float32 -> float64 json -> float32 is exact) and the
+    cursor/seed; ShiftedSource replays the global window clock."""
+    import jax.numpy as jnp
+
+    from repro.distributed.multihost import (ShiftedSource,
+                                             checkpoint_stream,
+                                             restore_stream)
+
+    src, pipe = _cheap_stack()
+    _serve_one(pipe, src, 0, 40)
+    lam_saved = np.asarray(pipe.lam)
+    path = checkpoint_stream(str(tmp_path / "ck.json"), pipe,
+                             t_next=4, seed=src.seed)
+    pipe.lam = jnp.zeros_like(pipe.lam)  # clobber, then restore
+    ck = restore_stream(path, pipe)
+    assert ck.t_next == 4 and ck.seed == src.seed
+    np.testing.assert_array_equal(np.asarray(pipe.lam), lam_saved)
+
+    shifted = ShiftedSource(src, 4)
+    np.testing.assert_array_equal(shifted.arrivals(0, 32),
+                                  src.arrivals(4, 32))
+    a, b = shifted.window(1, 24), src.window(5, 24)
+    np.testing.assert_array_equal(a.ctx, b.ctx)
+    np.testing.assert_array_equal(a.tables["p"], b.tables["p"])
+
+
+def _serve_one(pipe, src, t, n):
+    chunk = src.window(t, n)
+    return pipe.serve_window(chunk.ctx, chunk.rows, tables=chunk.tables)
+
+
+def test_initialize_noop_without_coordinator(monkeypatch):
+    from repro.distributed import multihost as mh
+
+    for k in ("GREENFLOW_COORDINATOR", "GREENFLOW_NUM_PROCESSES",
+              "GREENFLOW_PROCESS_ID"):
+        monkeypatch.delenv(k, raising=False)
+    assert mh.initialize() is False
+    assert mh.initialize(num_processes=1) is False
+    # num_processes alone (no coordinator anywhere) stays a no-op too
+    assert mh.initialize(num_processes=4) is False
+
+
+def test_host_report_and_label():
+    from repro.distributed import multihost as mh
+
+    rep = mh.host_report()
+    assert rep["process_count"] == 1 and rep["process_index"] == 0
+    assert rep["local_devices"] == rep["global_devices"] >= 1
+    assert mh.host_label() == "host0"
+    assert mh.host_label(3) == "host3"
+
+
+# ---------------------------------------------------------------------------
+# Per-host flight-recorder labels
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_process_label_and_merge(tmp_path):
+    from repro.obs import Tracer, merge_chrome_traces
+
+    paths = []
+    for h in range(2):
+        tr = Tracer(process_label=f"host{h}")
+        with tr.span("serve", t=0):
+            pass
+        paths.append(tr.write(str(tmp_path / f"trace{h}.json")))
+    merged = merge_chrome_traces(
+        paths, out_path=str(tmp_path / "merged.json"))
+    names = [e["args"]["name"] for e in merged["traceEvents"]
+             if e.get("name") == "process_name"]
+    assert sorted(names) == ["host0", "host1"]
+    with open(tmp_path / "merged.json") as f:
+        again = json.load(f)
+    assert len(again["traceEvents"]) == len(merged["traceEvents"])
+    spans = [e for e in again["traceEvents"] if e.get("ph") == "X"]
+    assert len(spans) == 2 and len({e["pid"] for e in
+                                    merged["traceEvents"]}) == 1
+
+
+def test_window_event_host_label():
+    from repro.obs import Obs, window_event
+
+    src, pipe = _cheap_stack()
+    r = _serve_one(pipe, src, 0, 32)
+    row = window_event(0, r, 1.0, host="host5")
+    assert row["host"] == "host5"
+    assert window_event(0, r, 1.0).get("host") is None
+    obs = Obs(host="host2")
+    assert obs.tracer.process_label == "host2"
