@@ -203,7 +203,6 @@ def run(*, windows: int = 24, requests: int = 48, n_tenants: int = 3,
     t_of = np.concatenate([np.repeat(np.arange(n_tenants), n // n_tenants)
                            for n in sizes])
     n_req = len(rows)
-    ridx = np.arange(n_req)
     R = pred[rows]
     r_geo = np.tile(R, (1, 2))  # option m = r*J + j, region-major
     true_rev = exp.revenue_eval[rows]
@@ -409,7 +408,6 @@ def _pipeline_matches_oracle(server, params, rcfg, exp, sizes, rows,
     from repro.serving.spec import (ConstraintSpec, GlobalAxis,
                                     RegionAxis, TenantAxis)
 
-    windows = len(sizes)
     r_n = len(region_names)
     # budgets in the spec are per-window references; the check pins
     # prices, so only the shapes matter

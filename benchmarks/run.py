@@ -60,7 +60,7 @@ def bench_serving_latency(exp, reward_params, reward_cfg) -> list[dict]:
     dual_us = (time.perf_counter() - t0) / 20 * 1e6
 
     al = jax.jit(lambda rw, l: allocate(rw, costs, l))
-    d = al(r, lam).block_until_ready()
+    al(r, lam).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(50):
         d = al(r, lam).block_until_ready()

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import os
 import pickle
-import time
 
 import numpy as np
 
@@ -207,7 +206,7 @@ def fig5_traffic_spikes(exp, reward_params, reward_cfg) -> list[dict]:
     for t, mult in enumerate(traffic):
         n_t = int(base_req * mult)
         idx = rng.integers(0, n_eval, n_t)
-        decisions = ctl.step_window(pred_eval[idx])
+        ctl.step_window(pred_eval[idx])
         s = ctl.stats[-1]
         # the guard's guarantee: spend <= max(budget, n_t * cheapest) -
         # Eq. 3b serves every request, so the floor scales with traffic

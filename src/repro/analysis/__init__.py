@@ -1,0 +1,51 @@
+"""greenflow-check: invariant-enforcing static analysis for the repo.
+
+The serving stack's headline guarantees -- bitwise-deterministic
+decisions across any host split, zero steady-state recompiles, no
+hidden host<->device syncs, an allocation-free donated dual chain --
+were each broken at least once by an innocent-looking diff (PRs 2, 4,
+7, 9).  This package rejects those bug classes at lint time:
+
+  GF001  raw ``lax.psum`` in serving/distributed code -- use
+         ``distributed.sharding.ordered_psum`` (order-fixed all_gather;
+         the bitwise cross-host guarantee, PR 9)
+  GF002  implicit host syncs (``.item()``, ``jax.device_get``,
+         ``np.*`` / ``float()`` inside traced scopes) in the hot-path
+         modules (PR 7/8's overlap + telemetry invariants)
+  GF003  ``jnp.mean`` in dual-price arithmetic (XLA strength-reduction
+         reassociation; PR 4's K=1 bit-parity bug)
+  GF004  jit hygiene: ``static_argnames`` naming nonexistent params
+         (PR 2) and reads of donated buffers after a
+         ``donate_argnums`` call (PR 7/9)
+  GF005  unseeded nondeterminism (wall clocks, global RNG) in
+         pure-window code -- timing goes through the injectable
+         ``clock``, randomness through (seed, t) (PR 8/9)
+  GF006  ``-0.0`` canonicalization via ``+ 0.0`` -- XLA folds the add;
+         use ``jnp.where`` (PR 7)
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis [paths ...]
+        # lint (default paths: src); exit 1 on unsuppressed findings
+    python -m repro.analysis --format json --out report.json src
+    python -m repro.analysis --rules GF001,GF004 src/repro/serving
+    python -m repro.analysis --list-rules
+    python -m repro.analysis --jaxpr-audit plain,geotenants
+        # trace the fused serve_window pass and assert: no f64, no
+        # host callbacks, declared donations honored, bounded
+        # transfer count
+
+Suppressions are inline and MUST carry a written justification::
+
+    x = lax.psum(g, ax)  # gf: allow[GF001] training-only gradient path
+
+An empty justification or a pragma that suppresses nothing is itself a
+finding (GF000).  The AST layer is pure stdlib; jax is only imported
+by the ``--jaxpr-audit`` layer (``repro.analysis.jaxpr_audit``).
+"""
+from repro.analysis.lint import (Finding, lint_file, lint_paths,
+                                 lint_source, render_json, render_text,
+                                 summarize)
+
+__all__ = ["Finding", "lint_file", "lint_paths", "lint_source",
+           "render_json", "render_text", "summarize"]

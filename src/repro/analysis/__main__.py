@@ -1,0 +1,95 @@
+"""CLI: ``python -m repro.analysis`` (see package docstring)."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import lint
+from repro.analysis.rules import BY_CODE, RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="greenflow-check: invariant lint + jaxpr audit")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src)")
+    ap.add_argument("--format", choices=("text", "json"),
+                    default="text")
+    ap.add_argument("--out", default=None,
+                    help="also write the report to this file")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule codes (default: all)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="list suppressed findings in text output")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--jaxpr-audit", default=None, metavar="SPECS",
+                    help="trace the fused serve_window pass for these "
+                         "comma-separated specs (plain,geotenants) and "
+                         "audit the lowerings; skips the AST lint "
+                         "unless paths are also given")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in RULES:
+            print(f"{r.CODE}  {r.TITLE}\n       {r.RATIONALE}")
+        return 0
+
+    rules = None
+    if args.rules:
+        codes = [c.strip().upper() for c in args.rules.split(",")]
+        unknown = [c for c in codes if c not in BY_CODE]
+        if unknown:
+            ap.error(f"unknown rules {unknown}; known: "
+                     f"{sorted(BY_CODE)}")
+        rules = [BY_CODE[c] for c in codes]
+
+    findings: list = []
+    ran_lint = False
+    if args.paths or not args.jaxpr_audit:
+        paths = args.paths or ["src"]
+        findings = lint.lint_paths(paths, rules=rules)
+        ran_lint = True
+
+    audit = None
+    if args.jaxpr_audit:
+        from repro.analysis.jaxpr_audit import SPECS, run_audit
+        specs = tuple(s.strip() for s in args.jaxpr_audit.split(",")
+                      if s.strip()) or SPECS
+        audit = run_audit(specs)
+
+    if args.format == "json":
+        report = lint.render_json(findings, audit=audit)
+    else:
+        parts = []
+        if ran_lint:
+            parts.append(lint.render_text(
+                findings, show_suppressed=args.show_suppressed))
+        if audit is not None:
+            for c in audit["checks"]:
+                status = "ok" if c["ok"] else "FAIL"
+                parts.append(f"jaxpr-audit {c['name']}: {status} "
+                             f"({c['invars']} invars, "
+                             f"donated={c['donated']})")
+                parts.extend(f"  - {p}" for p in c["problems"])
+            parts.append("jaxpr-audit: %s" % (
+                "clean" if audit["ok"] else "FAILED"))
+        report = "\n".join(parts)
+    print(report)
+    if args.out:
+        parent = os.path.dirname(args.out)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(args.out, "w", encoding="utf-8") as f:
+            f.write(lint.render_json(findings, audit=audit)
+                    if args.out.endswith(".json") else report)
+
+    bad = any(not f.suppressed for f in findings)
+    if audit is not None and not audit["ok"]:
+        bad = True
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

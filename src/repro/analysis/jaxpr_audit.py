@@ -1,0 +1,250 @@
+"""Trace-time auditor for the fused ``serve_window`` pass.
+
+The AST rules catch what source text shows; this layer checks what XLA
+actually sees.  It builds a tiny UNTRAINED serving stack (fabricated
+seeded stage scores -- tracing needs shapes and dtypes, not trained
+weights), runs one window through ``ServingPipeline.serve_window`` to
+populate the jit cache, captures the exact arguments of a second
+window by wrapping the cached callables, and then statically audits
+every (main, dual) jitted fn via ``jax.make_jaxpr`` + ``.lower()``:
+
+* **no f64** -- no ``convert_element_type`` to float64 and no f64/c128
+  intermediate anywhere in the jaxpr (an accidental x64 upcast doubles
+  transfer bytes and breaks cross-backend bit parity);
+* **no host callbacks** -- no ``pure_callback`` / ``io_callback`` /
+  debug-print primitives (each is a hidden host round-trip per window);
+* **donations honored** -- every ``donate_argnums`` declaration must
+  survive lowering as a ``tf.aliasing_output`` input alias, and the
+  "Some donated buffers were not usable" warning is promoted to a
+  failure (PR 9's silent un-donation relayout);
+* **bounded transfers** -- the flattened argument count of each jitted
+  fn stays under a fixed cap (closure-capture leaks show up here as an
+  exploding invar list).
+
+``audit_jitted`` is the reusable core (the analyzer's own tests point
+it at deliberately broken toy jits); ``run_audit`` drives the plain
+and geotenants specs end to end for CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+# the per-fn invar cap: reward params contribute ~40 leaves, window
+# arrays ~10; anything past this is a closure-capture leak
+MAX_INVARS = 128
+
+_CALLBACK_PRIMS = ("pure_callback", "io_callback", "callback",
+                   "outside_call", "debug_callback", "debug_print")
+_BAD_DTYPES = ("float64", "complex128")
+
+
+@dataclasses.dataclass
+class AuditResult:
+    name: str
+    problems: list
+    invars: int = 0
+    donated: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return not self.problems
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self) | {"ok": self.ok}
+
+
+def _iter_eqns(jaxpr):
+    """Walk every eqn, descending into pjit/scan/cond/... sub-jaxprs."""
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        j = getattr(j, "jaxpr", j)  # ClosedJaxpr -> Jaxpr
+        for eqn in j.eqns:
+            yield eqn
+            for v in eqn.params.values():
+                if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+                    stack.append(v)
+                elif isinstance(v, (list, tuple)):
+                    stack.extend(x for x in v
+                                 if hasattr(x, "eqns")
+                                 or hasattr(x, "jaxpr"))
+
+
+def audit_jitted(fn, args, *, name="fn", expect_donation=False,
+                 max_invars=MAX_INVARS) -> AuditResult:
+    """Statically audit one jitted callable against concrete args."""
+    import jax
+
+    problems = []
+    closed = jax.make_jaxpr(fn)(*args)
+    for eqn in _iter_eqns(closed):
+        prim = eqn.primitive.name
+        if prim in _CALLBACK_PRIMS:
+            problems.append(
+                f"host callback `{prim}` at {eqn.source_info.traceback}"
+                if eqn.source_info else f"host callback `{prim}`")
+        if prim == "convert_element_type" \
+                and str(eqn.params.get("new_dtype")) in _BAD_DTYPES:
+            problems.append("f64 convert_element_type")
+        for v in eqn.outvars:
+            dt = getattr(getattr(v, "aval", None), "dtype", None)
+            if dt is not None and str(dt) in _BAD_DTYPES:
+                problems.append(
+                    f"f64 intermediate: {prim} -> {v.aval.str_short()}")
+                break
+    invars = len(closed.jaxpr.invars)
+    if invars > max_invars:
+        problems.append(
+            f"unbounded transfer set: {invars} flattened args "
+            f"(cap {max_invars}) -- closure-capture leak?")
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        lowered = fn.lower(*args) if hasattr(fn, "lower") else None
+        hlo = lowered.as_text() if lowered is not None else ""
+    for w in caught:
+        if "donated buffers were not usable" in str(w.message):
+            problems.append(f"donation dropped at lowering: {w.message}")
+    donated = "tf.aliasing_output" in hlo
+    if expect_donation and not donated:
+        problems.append(
+            "declared donation left no input/output alias in the "
+            "lowered module (silent un-donation, PR 9)")
+    # dedupe, keep order
+    problems = list(dict.fromkeys(problems))
+    return AuditResult(name=name, problems=problems, invars=invars,
+                       donated=donated)
+
+
+# ---------------------------------------------------------------------------
+# The serve_window audit: tiny untrained stack + capture
+# ---------------------------------------------------------------------------
+
+SPECS = ("plain", "geotenants")
+
+
+def build_audit_stack(mode: str = "plain", *, seed: int = 0):
+    """A minimal UNTRAINED serving stack: fabricated seeded stage
+    scores + random clicks + init-only reward params.  Shapes mirror
+    the tiny test stacks; tracing never looks at the values."""
+    import jax
+    import numpy as np
+
+    from repro.cascade.engine import CascadeServer
+    from repro.core.action_chain import (ModelInstance, StageSpec,
+                                         generate_action_chains)
+    from repro.core.reward_model import (RewardModelConfig,
+                                         reward_model_init)
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.spec import (ConstraintSpec, RegionAxis,
+                                    TenantAxis)
+
+    rng = np.random.default_rng(seed)
+    u, i = 40, 150
+    scores = {k: rng.normal(size=(u, i)).astype(np.float32)
+              for k in ("DSSM", "YDNN", "DIN", "DIEN")}
+    clicks = (rng.random((u, i)) < 0.15).astype(np.float32)
+    n2 = tuple(int(x) for x in np.linspace(0.2 * i, 0.5 * i, 4))
+    n3 = tuple(int(x) for x in np.linspace(8, 0.2 * i, 4))
+    chains = generate_action_chains((
+        StageSpec("recall", (ModelInstance("DSSM", 13e3),), (i,), 4),
+        StageSpec("prerank", (ModelInstance("YDNN", 123e3),), n2, 4),
+        StageSpec("rank", (ModelInstance("DIN", 7020e3),
+                           ModelInstance("DIEN", 7098e3)), n3, 4),
+    ))
+    server = CascadeServer(stage_scores=scores, chains=chains,
+                           clicks=clicks, expose=8)
+    rcfg = RewardModelConfig(n_stages=3, max_models=2, n_scale_groups=4,
+                             d_context=12, d_feature=16, d_hidden=16,
+                             d_state=8)
+    params = dict(reward_model_init(jax.random.PRNGKey(0), rcfg))
+    budget = 0.5 * float(chains.costs.max()) * 64
+    if mode == "plain":
+        pipe = ServingPipeline(server, params, rcfg, budget)
+        extra = {}
+    elif mode == "geotenants":
+        t_n, r_n = 2, 2
+        spec = ConstraintSpec([
+            TenantAxis(tuple(budget / t_n for _ in range(t_n)),
+                       priced=True),
+            RegionAxis(r_n),
+        ])
+        pipe = ServingPipeline.from_spec(server, params, rcfg, spec)
+        extra = {
+            "budget": np.full(t_n + r_n, budget / 2, np.float32),
+            "cost_scale": np.ones(r_n, np.float32),
+        }
+    else:
+        raise ValueError(f"unknown audit spec {mode!r} "
+                         f"(choose from {SPECS})")
+
+    def window(t):
+        w = np.random.default_rng((seed, t))
+        n = 64
+        return (w.normal(size=(n, 12)).astype(np.float32),
+                w.integers(0, u, n).astype(np.int32))
+
+    return pipe, window, extra
+
+
+class _Capture:
+    """Wraps a cached jitted fn; records a pre-donation copy of the
+    args of every call, then forwards."""
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.calls = []
+
+    def __call__(self, *args):
+        import jax
+        import jax.numpy as jnp
+
+        self.calls.append(jax.tree_util.tree_map(
+            lambda x: jnp.copy(x) if isinstance(x, jax.Array) else x,
+            args))
+        return self.fn(*args)
+
+    def lower(self, *args):
+        return self.fn.lower(*args)
+
+
+def audit_pipeline(pipe, window, extra, *, mode="plain") -> list:
+    """Run two windows (populate the jit cache, then capture args) and
+    audit every cached (main, dual) callable."""
+    pipe.serve_window(*window(0), **extra)
+    captures = {}
+    for key, fns in list(pipe._fns.items()):
+        wrapped = tuple(_Capture(f) if callable(f) else f for f in fns)
+        pipe._fns[key] = wrapped
+        captures[key] = wrapped
+    pipe.serve_window(*window(1), **extra)
+    results = []
+    for key, fns in captures.items():
+        for role, cap in zip(("main", "dual"), fns):
+            if not isinstance(cap, _Capture) or not cap.calls:
+                continue
+            expect_don = role == "dual" and pipe.donate_dual
+            results.append(audit_jitted(
+                cap.fn, cap.calls[0],
+                name=f"{mode}/{role}{tuple(key) if key else ''}",
+                expect_donation=expect_don))
+    if not results:
+        results.append(AuditResult(
+            name=f"{mode}/(none)",
+            problems=["no jitted fns captured -- pipeline cache layout "
+                      "changed under the auditor"]))
+    return results
+
+
+def run_audit(specs=SPECS) -> dict:
+    """Audit the fused pass for each named spec; returns a JSON-ready
+    report with ``ok`` per fn and overall."""
+    results = []
+    for mode in specs:
+        pipe, window, extra = build_audit_stack(mode)
+        results.extend(audit_pipeline(pipe, window, extra, mode=mode))
+    return {
+        "ok": all(r.ok for r in results),
+        "checks": [r.to_dict() for r in results],
+    }

@@ -1,0 +1,369 @@
+"""AST lint engine behind greenflow-check.
+
+The engine is deliberately boring: pure stdlib (ast + tokenize), no jax
+import, so ``python -m repro.analysis src`` runs anywhere the repo
+checks out.  Rules live one-per-module under ``repro.analysis.rules``;
+each exports
+
+    CODE        "GFxxx"
+    TITLE       one-line summary (shown by --list-rules)
+    RATIONALE   the PR history behind the rule (shown by --list-rules)
+    applies(mod)   -> bool      mod is the repo-relative module path
+                                ("serving/pipeline.py")
+    check(ctx)     -> iterable of (line, col, message)
+
+and the engine handles file walking, pragma suppression and reporting.
+
+Suppression grammar (a finding is only suppressed with a WRITTEN
+justification — an empty reason is itself a finding, GF000):
+
+    x = jax.lax.psum(g, axis)  # gf: allow[GF001] training-only gradient
+
+    # gf: allow[GF002,GF005] host replay boundary, windows are seeded
+    arr = np.asarray(chunk)
+
+A trailing pragma covers its own line; a standalone comment line covers
+the next code line.  Pragmas that suppress nothing are reported (GF000)
+so stale allowances cannot rot in place.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+from pathlib import PurePath
+
+META_RULE = "GF000"  # meta findings: malformed / unused pragmas
+
+PRAGMA_RE = re.compile(
+    r"#\s*gf:\s*allow\[(?P<codes>[A-Za-z0-9_,\s]*)\]\s*(?P<why>.*)$")
+
+
+# ---------------------------------------------------------------------------
+# Findings + pragmas
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    suppressed: bool = False
+    justification: str = ""
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def format(self) -> str:
+        tag = " (suppressed: %s)" % self.justification \
+            if self.suppressed else ""
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule} {self.message}{tag}")
+
+
+@dataclasses.dataclass
+class Pragma:
+    line: int  # line the pragma comment sits on
+    target: int | None  # line whose findings it suppresses
+    codes: tuple
+    justification: str
+    used: set = dataclasses.field(default_factory=set)
+
+
+def parse_pragmas(src: str) -> list[Pragma]:
+    """Extract ``# gf: allow[...]`` pragmas via the tokenizer (so the
+    grammar inside string literals is never misread as a pragma)."""
+    pragmas: list[Pragma] = []
+    code_lines: set[int] = set()
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    except tokenize.TokenError:
+        return []
+    for tok in tokens:
+        if tok.type in (tokenize.NAME, tokenize.NUMBER, tokenize.STRING,
+                        tokenize.OP):
+            code_lines.add(tok.start[0])
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = PRAGMA_RE.search(tok.string)
+        if not m:
+            continue
+        codes = tuple(c.strip().upper() for c in m["codes"].split(",")
+                      if c.strip())
+        standalone = tok.string.strip() == tok.line.strip()
+        pragmas.append(Pragma(
+            line=tok.start[0],
+            target=None if standalone else tok.start[0],
+            codes=codes, justification=m["why"].strip()))
+    # a standalone pragma covers the next line that carries code
+    for p in pragmas:
+        if p.target is None:
+            later = [ln for ln in code_lines if ln > p.line]
+            p.target = min(later) if later else None
+    return pragmas
+
+
+def _apply_pragmas(findings: list[Finding], pragmas: list[Pragma],
+                   path: str) -> list[Finding]:
+    for f in findings:
+        for p in pragmas:
+            if p.target == f.line and f.rule in p.codes:
+                if not p.justification:
+                    continue  # unjustified pragmas never suppress
+                f.suppressed = True
+                f.justification = p.justification
+                p.used.add(f.rule)
+                break
+    meta: list[Finding] = []
+    for p in pragmas:
+        if not p.codes:
+            meta.append(Finding(META_RULE, path, p.line, 0,
+                                "gf: allow[] pragma names no rules"))
+            continue
+        if not p.justification:
+            meta.append(Finding(
+                META_RULE, path, p.line, 0,
+                f"gf: allow[{','.join(p.codes)}] pragma carries no "
+                "justification -- every suppression must say WHY"))
+            continue
+        stale = [c for c in p.codes if c not in p.used]
+        if stale:
+            meta.append(Finding(
+                META_RULE, path, p.line, 0,
+                f"gf: allow[{','.join(stale)}] suppresses nothing "
+                "(stale pragma -- remove it or fix the rule id)"))
+    return sorted(findings + meta, key=lambda f: (f.line, f.col, f.rule))
+
+
+# ---------------------------------------------------------------------------
+# Module context + shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def module_path(path: str) -> str:
+    """Repo-relative module path used for rule scoping: the part after
+    the last ``repro`` directory ("serving/pipeline.py"); files outside
+    the package (benchmarks, tests, fixtures) keep their last two
+    components."""
+    parts = PurePath(path).parts
+    if "repro" in parts:
+        i = len(parts) - 1 - parts[::-1].index("repro")
+        tail = parts[i + 1:]
+        if tail:
+            return "/".join(tail)
+    return "/".join(parts[-2:]) if len(parts) > 1 else parts[0]
+
+
+def dotted(node) -> str | None:
+    """'jax.lax.psum' for an Attribute chain, 'psum' for a Name."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _is_jit_name(name: str | None) -> bool:
+    """Callables that produce traced/compiled functions: ``jax.jit``,
+    local wrappers conventionally named ``*_jit``, ``shard_map``,
+    ``pmap``."""
+    if not name:
+        return False
+    if name == "jit" or name.endswith(".jit") or name.endswith("_jit"):
+        return True
+    last = name.rsplit(".", 1)[-1]
+    return last in ("shard_map", "pmap")
+
+
+def _decorator_is_jit(dec) -> bool:
+    if _is_jit_name(dotted(dec)):
+        return True
+    if isinstance(dec, ast.Call):
+        if _is_jit_name(dotted(dec.func)):
+            return True
+        # @partial(jax.jit, ...) / @functools.partial(jit, ...)
+        fname = dotted(dec.func)
+        if fname and fname.rsplit(".", 1)[-1] == "partial" and dec.args:
+            return _is_jit_name(dotted(dec.args[0]))
+    return False
+
+
+def scope_statements(scope):
+    """Statements belonging to ``scope`` (not descending into nested
+    function/class scopes)."""
+    stack = list(getattr(scope, "body", []))
+    while stack:
+        st = stack.pop()
+        yield st
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            continue
+        for child in ast.iter_child_nodes(st):
+            if isinstance(child, ast.stmt):
+                stack.append(child)
+
+
+def traced_defs(tree) -> set:
+    """Function defs the engine considers TRACED: decorated with a jit
+    wrapper, or passed by name into a jit/shard_map/pmap call within an
+    enclosing scope (the ``fn = shard_map(fn, ...); return jax.jit(fn)``
+    builder idiom)."""
+    traced: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_decorator_is_jit(d) for d in node.decorator_list):
+                traced.add(node)
+    scopes = [n for n in ast.walk(tree)
+              if isinstance(n, (ast.Module, ast.FunctionDef,
+                                ast.AsyncFunctionDef, ast.ClassDef))]
+    for scope in scopes:
+        defs: dict = {}
+        for st in scope_statements(scope):
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(st.name, []).append(st)
+        if not defs:
+            continue
+        for n in ast.walk(scope):
+            if isinstance(n, ast.Call) and _is_jit_name(dotted(n.func)):
+                for a in n.args:
+                    if isinstance(a, ast.Name) and a.id in defs:
+                        traced.update(defs[a.id])
+    return traced
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """Everything a rule's ``check`` gets to look at."""
+
+    tree: ast.Module
+    src: str
+    mod: str  # repo-relative module path ("serving/pipeline.py")
+    path: str  # path as given (reporting only)
+    _traced: set | None = None
+    _parents: dict | None = None
+
+    @property
+    def traced(self) -> set:
+        if self._traced is None:
+            self._traced = traced_defs(self.tree)
+        return self._traced
+
+    @property
+    def parents(self) -> dict:
+        """child ast node -> parent node, for scope lookups."""
+        if self._parents is None:
+            self._parents = {c: p for p in ast.walk(self.tree)
+                             for c in ast.iter_child_nodes(p)}
+        return self._parents
+
+    def enclosing_scope(self, node):
+        cur = self.parents.get(node)
+        while cur is not None and not isinstance(
+                cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+            cur = self.parents.get(cur)
+        return cur if cur is not None else self.tree
+
+    def calls(self):
+        for n in ast.walk(self.tree):
+            if isinstance(n, ast.Call):
+                yield n
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+
+def all_rules() -> list:
+    from repro.analysis.rules import RULES
+    return list(RULES)
+
+
+def lint_source(src: str, path: str, *, rules=None) -> list[Finding]:
+    """Lint one module's source. ``path`` scopes the rules (see
+    ``module_path``); fixtures pass a virtual path."""
+    rules = all_rules() if rules is None else rules
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding(META_RULE, path, e.lineno or 0, e.offset or 0,
+                        f"syntax error: {e.msg}")]
+    ctx = ModuleContext(tree=tree, src=src, mod=module_path(path),
+                        path=path)
+    findings = []
+    for rule in rules:
+        if not rule.applies(ctx.mod):
+            continue
+        for line, col, msg in rule.check(ctx):
+            findings.append(Finding(rule.CODE, path, line, col, msg))
+    return _apply_pragmas(findings, parse_pragmas(src), path)
+
+
+def lint_file(path: str, *, rules=None) -> list[Finding]:
+    with open(path, encoding="utf-8") as f:
+        return lint_source(f.read(), path, rules=rules)
+
+
+def iter_python_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith(".")
+                             and d != "__pycache__")
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def lint_paths(paths, *, rules=None) -> list[Finding]:
+    findings: list[Finding] = []
+    for p in iter_python_files(paths):
+        findings.extend(lint_file(p, rules=rules))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Reporting
+# ---------------------------------------------------------------------------
+
+
+def summarize(findings: list[Finding]) -> dict:
+    by_rule: dict = {}
+    for f in findings:
+        if not f.suppressed:
+            by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    return {
+        "findings": len(findings),
+        "unsuppressed": sum(not f.suppressed for f in findings),
+        "suppressed": sum(f.suppressed for f in findings),
+        "by_rule": dict(sorted(by_rule.items())),
+    }
+
+
+def render_text(findings: list[Finding], *, show_suppressed=False) -> str:
+    lines = [f.format() for f in findings
+             if show_suppressed or not f.suppressed]
+    s = summarize(findings)
+    lines.append(f"greenflow-check: {s['unsuppressed']} finding(s), "
+                 f"{s['suppressed']} suppressed")
+    return "\n".join(lines)
+
+
+def render_json(findings: list[Finding], *, audit: dict | None = None,
+                ) -> str:
+    doc = {"summary": summarize(findings),
+           "findings": [f.to_dict() for f in findings]}
+    if audit is not None:
+        doc["jaxpr_audit"] = audit
+    return json.dumps(doc, indent=2, sort_keys=True)

@@ -1,0 +1,15 @@
+"""Rule registry: one module per invariant, ordered by code."""
+from repro.analysis.rules import (gf001_ordered_collectives,
+                                  gf002_host_syncs,
+                                  gf003_mean_reassociation,
+                                  gf004_jit_hygiene,
+                                  gf005_nondeterminism,
+                                  gf006_signed_zero)
+
+RULES = (gf001_ordered_collectives, gf002_host_syncs,
+         gf003_mean_reassociation, gf004_jit_hygiene,
+         gf005_nondeterminism, gf006_signed_zero)
+
+BY_CODE = {r.CODE: r for r in RULES}
+
+__all__ = ["RULES", "BY_CODE"]

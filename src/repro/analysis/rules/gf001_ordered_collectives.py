@@ -1,0 +1,36 @@
+"""GF001: raw ``psum`` in serving/distributed code.
+
+``lax.psum`` reduces in whatever order the backend's ring/tree picks,
+which varies with topology and process count -- float addition is not
+associative, so a raw psum breaks the bitwise cross-host decision
+parity PR 9's multi-host mesh guarantees.  The sanctioned collective is
+``repro.distributed.sharding.ordered_psum`` (all_gather + a local
+``jnp.sum`` over the fixed shard axis), which every host evaluates in
+the same order.
+"""
+from repro.analysis.lint import dotted
+
+CODE = "GF001"
+TITLE = "raw psum in serving/distributed code (use ordered_psum)"
+RATIONALE = ("PR 9: cross-host bitwise decision parity relies on "
+             "order-fixed all_gather reductions; backend psum order "
+             "varies with topology.")
+
+_SCOPE = ("serving/", "distributed/", "cascade/", "data/")
+_RAW = ("psum", "psum_scatter")
+
+
+def applies(mod: str) -> bool:
+    return any(mod.startswith(p) for p in _SCOPE)
+
+
+def check(ctx):
+    for call in ctx.calls():
+        name = dotted(call.func)
+        if not name:
+            continue
+        if name.rsplit(".", 1)[-1] in _RAW:
+            yield (call.lineno, call.col_offset,
+                   f"raw `{name}` reduces in backend ring order and "
+                   "breaks cross-host bitwise parity -- use "
+                   "distributed.sharding.ordered_psum")

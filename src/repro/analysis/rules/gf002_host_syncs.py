@@ -1,0 +1,82 @@
+"""GF002: implicit host<->device syncs in hot-path modules.
+
+The streaming serving path promises zero hidden synchronization between
+window submit and the post-drain flush (PR 7/8: telemetry reads device
+arrays only after the stream drains; the window pass overlaps with
+chunk prefetch).  ``.item()`` / ``jax.device_get`` block on the device
+anywhere they appear; ``np.*`` / ``float()`` / ``int()`` on a TRACED
+value silently devolve to a transfer + retrace hazard, so those are
+flagged inside statically-detected traced scopes (jit / shard_map
+wrapped defs).
+"""
+import ast
+
+from repro.analysis.lint import dotted
+
+CODE = "GF002"
+TITLE = "implicit host sync on the serving hot path"
+RATIONALE = ("PR 7/8: the fused window pass and its telemetry are "
+             "sync-free until the stream drains; a stray .item()/"
+             "np.asarray stalls the overlap the throughput numbers "
+             "depend on.")
+
+HOT = ("serving/pipeline.py", "serving/stream.py", "serving/guard.py",
+       "cascade/engine.py", "data/request_source.py")
+
+_SYNC_ATTRS = ("item", "block_until_ready")
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def applies(mod: str) -> bool:
+    return mod in HOT
+
+
+def _static_arg(node) -> bool:
+    """Casts of static metadata (shapes, dims, constants) never sync."""
+    if isinstance(node, ast.Constant):
+        return True
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(n, ast.Call) and dotted(n.func) == "len":
+            return True
+    return False
+
+
+def check(ctx):
+    seen = set()
+    # module-wide: unconditional device blocks
+    for call in ctx.calls():
+        f = call.func
+        if isinstance(f, ast.Attribute) and f.attr in _SYNC_ATTRS \
+                and not call.args:
+            seen.add(id(call))
+            yield (call.lineno, call.col_offset,
+                   f"`.{f.attr}()` blocks on the device -- hot-path "
+                   "modules must stay sync-free until the stream "
+                   "drains")
+        elif dotted(f) in ("jax.device_get", "device_get"):
+            seen.add(id(call))
+            yield (call.lineno, call.col_offset,
+                   "`jax.device_get` forces a device->host transfer on "
+                   "the hot path")
+    # traced scopes: host-library calls and value casts
+    for fdef in ctx.traced:
+        for call in ast.walk(fdef):
+            if not isinstance(call, ast.Call) or id(call) in seen:
+                continue
+            name = dotted(call.func)
+            if not name:
+                continue
+            root = name.split(".", 1)[0]
+            if root in ("np", "numpy", "onp"):
+                yield (call.lineno, call.col_offset,
+                       f"host `{name}` inside the traced fn "
+                       f"`{fdef.name}` forces a transfer and breaks "
+                       "tracing -- use jnp")
+            elif name in ("float", "int", "bool") and call.args \
+                    and not _static_arg(call.args[0]):
+                yield (call.lineno, call.col_offset,
+                       f"`{name}()` on a traced value inside "
+                       f"`{fdef.name}` is a hidden host sync (only "
+                       "static metadata like .shape may be cast)")

@@ -1,0 +1,37 @@
+"""GF003: ``jnp.mean`` in dual-price arithmetic.
+
+XLA strength-reduces ``mean`` into ``sum * (1/n)`` and is free to
+reassociate the product through neighbouring expressions; PR 4 hit
+exactly this when unifying the scalar (K=1) and vectorized dual cores
+-- the two mathematically-identical norms compiled to different float
+programs and broke the K=1 bit-parity gate.  Dual-price / lambda
+arithmetic must build its divisors explicitly (``jnp.sum`` plus a
+structured scalar factor), or carry a pragma explaining why this
+``mean`` is the reference expression both paths share.
+"""
+from repro.analysis.lint import dotted
+
+CODE = "GF003"
+TITLE = "jnp.mean in dual-price/lambda arithmetic (reassociation hazard)"
+RATIONALE = ("PR 4: mean -> sum*(1/n) strength reduction reassociates "
+             "under XLA and broke scalar-vs-vectorized K=1 bitwise "
+             "parity; dual arithmetic structures its divisors "
+             "explicitly.")
+
+_SCOPE = ("core/primal_dual.py", "serving/pipeline.py",
+          "serving/guard.py", "serving/spec.py", "carbon/controller.py")
+_MEAN = ("jnp.mean", "jax.numpy.mean")
+
+
+def applies(mod: str) -> bool:
+    return mod in _SCOPE
+
+
+def check(ctx):
+    for call in ctx.calls():
+        if dotted(call.func) in _MEAN:
+            yield (call.lineno, call.col_offset,
+                   "`jnp.mean` in dual-price arithmetic reassociates "
+                   "under XLA strength reduction (PR 4's K=1 parity "
+                   "bug) -- use jnp.sum with an explicit structured "
+                   "divisor, or justify with a pragma")

@@ -1,0 +1,191 @@
+"""GF004: jit hygiene -- dead static_argnames and use-after-donation.
+
+Two historical bug classes share this rule:
+
+* ``static_argnames`` naming a parameter the wrapped function does not
+  have (PR 2): jax silently ignores the name, the argument stays
+  traced, and every distinct value recompiles -- the exact retrace
+  storm the bucketing work exists to prevent.
+* Reading a buffer after passing it to a ``donate_argnums`` position
+  (PR 7/9): donation invalidates the array; steady-state code that
+  still reads it either crashes or silently un-donates (XLA inserts a
+  copy and the "allocation-free dual chain" claim quietly dies).
+
+Both checks are literal-only: dynamically-computed argnames/argnums are
+skipped rather than guessed at.
+"""
+import ast
+
+from repro.analysis.lint import _is_jit_name, dotted
+
+CODE = "GF004"
+TITLE = "jit hygiene: dead static_argnames / read-after-donation"
+RATIONALE = ("PR 2: a misspelled static_argnames is silently ignored "
+             "and retraces per value; PR 7/9: reading a donated buffer "
+             "un-donates it (or crashes), breaking the allocation-free "
+             "dual chain.")
+
+
+def applies(mod: str) -> bool:
+    return mod.endswith(".py")
+
+
+def _literal_strs(node):
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _literal_ints(node):
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _params(fdef):
+    a = fdef.args
+    pos = [p.arg for p in a.posonlyargs + a.args]
+    return pos, [p.arg for p in a.kwonlyargs], a.vararg, a.kwarg
+
+
+def _defs_by_name(tree):
+    defs = {}
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(n.name, []).append(n)
+    return defs
+
+
+def _jit_call_targets(ctx):
+    """(call, fdef) pairs: jit-ish Call nodes plus the def they wrap --
+    from ``@partial(jax.jit, ...)`` decorators or ``jit(f, ...)`` with
+    ``f`` resolvable by name."""
+    defs = _defs_by_name(ctx.tree)
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in n.decorator_list:
+                if isinstance(dec, ast.Call) and (
+                        _is_jit_name(dotted(dec.func))
+                        or (dotted(dec.func) or "").rsplit(".", 1)[-1]
+                        == "partial" and dec.args
+                        and _is_jit_name(dotted(dec.args[0]))):
+                    yield dec, n
+        elif isinstance(n, ast.Call) and _is_jit_name(dotted(n.func)):
+            for a in n.args[:1]:
+                if isinstance(a, ast.Name):
+                    for fdef in defs.get(a.id, []):
+                        yield n, fdef
+
+
+def _check_static_args(ctx):
+    for call, fdef in _jit_call_targets(ctx):
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+        pos, kwonly, vararg, kwarg = _params(fdef)
+        if "static_argnames" in kw and kwarg is None:
+            names = _literal_strs(kw["static_argnames"])
+            for name in names or []:
+                if name not in pos and name not in kwonly:
+                    yield (call.lineno, call.col_offset,
+                           f"static_argnames names `{name}` but "
+                           f"`{fdef.name}` has no such parameter -- "
+                           "jax ignores it silently and the argument "
+                           "retraces per value (PR 2)")
+        if "static_argnums" in kw and vararg is None:
+            for i in _literal_ints(kw["static_argnums"]) or []:
+                if i >= len(pos) or i < -len(pos):
+                    yield (call.lineno, call.col_offset,
+                           f"static_argnums {i} is out of range for "
+                           f"`{fdef.name}` ({len(pos)} positional "
+                           "parameters)")
+
+
+def _donating_jits(ctx):
+    """name -> donated positions, for literal donate_argnums only."""
+    donators: dict = {}
+    for n in ast.walk(ctx.tree):
+        # g = jax.jit(f, donate_argnums=(0,))
+        if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call) \
+                and _is_jit_name(dotted(n.value.func)):
+            kw = {k.arg: k.value for k in n.value.keywords if k.arg}
+            if "donate_argnums" not in kw:
+                continue
+            nums = _literal_ints(kw["donate_argnums"])
+            if not nums:
+                continue
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    donators[t.id] = tuple(nums)
+        # @partial(jax.jit, donate_argnums=(0,)) on a def
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in n.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                if not (_is_jit_name(dotted(dec.func))
+                        or ((dotted(dec.func) or "")
+                            .rsplit(".", 1)[-1] == "partial" and dec.args
+                            and _is_jit_name(dotted(dec.args[0])))):
+                    continue
+                kw = {k.arg: k.value for k in dec.keywords if k.arg}
+                nums = _literal_ints(kw.get("donate_argnums")) \
+                    if "donate_argnums" in kw else None
+                if nums:
+                    donators[n.name] = tuple(nums)
+    return donators
+
+
+def _check_donated_reads(ctx):
+    donators = _donating_jits(ctx)
+    if not donators:
+        return
+    for call in ctx.calls():
+        fname = dotted(call.func)
+        if fname not in donators:
+            continue
+        scope = ctx.enclosing_scope(call)
+        names = [n for n in ast.walk(scope) if isinstance(n, ast.Name)]
+        for pos in donators[fname]:
+            if pos >= len(call.args):
+                continue
+            arg = call.args[pos]
+            if not isinstance(arg, ast.Name):
+                continue
+            # first re-binding after the donating call clears the hazard
+            stores = [n.lineno for n in names
+                      if n.id == arg.id
+                      and isinstance(n.ctx, (ast.Store, ast.Del))
+                      and n.lineno >= call.lineno]
+            horizon = min(stores) if stores else None
+            for n in names:
+                if n.id != arg.id or not isinstance(n.ctx, ast.Load):
+                    continue
+                if n.lineno <= call.lineno:
+                    continue
+                if horizon is not None and n.lineno > horizon:
+                    continue
+                yield (n.lineno, n.col_offset,
+                       f"`{arg.id}` is read after being donated to "
+                       f"`{fname}` (argnum {pos}) -- donation "
+                       "invalidates the buffer; keep a jnp.copy record "
+                       "like the dual chain's _lam_rec (PR 7/9)")
+                break  # one report per donated arg is enough
+
+
+def check(ctx):
+    yield from _check_static_args(ctx)
+    yield from _check_donated_reads(ctx)

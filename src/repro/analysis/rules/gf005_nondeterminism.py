@@ -1,0 +1,70 @@
+"""GF005: unseeded nondeterminism in pure-window code.
+
+The multi-host mesh (PR 9) never ships a request: every host evaluates
+the same pure (seed, t) arrival functions and must agree bitwise; the
+streaming driver (PR 8) takes an injectable ``clock`` so timing tests
+are deterministic.  Wall-clock reads and unseeded RNG inside the
+window-production modules break both -- timing goes through the
+injected ``clock``, randomness through ``np.random.default_rng((seed,
+t))`` / ``jax.random.PRNGKey``.
+"""
+from repro.analysis.lint import dotted
+
+CODE = "GF005"
+TITLE = "unseeded nondeterminism in pure-window code"
+RATIONALE = ("PR 8/9: hosts recompute identical windows from (seed, t) "
+             "and timing is injected via run_stream(clock=...); "
+             "wall-clock or global-RNG reads desynchronize hosts and "
+             "flake the deterministic timing tests.")
+
+_SCOPE = ("serving/pipeline.py", "serving/stream.py", "serving/guard.py",
+          "cascade/engine.py", "data/request_source.py",
+          "distributed/multihost.py")
+
+_CLOCKS = {"time.time", "time.monotonic", "time.perf_counter",
+           "time.process_time", "time.time_ns", "time.monotonic_ns",
+           "time.perf_counter_ns"}
+_DATETIME = {"datetime.now", "datetime.datetime.now", "datetime.today",
+             "datetime.utcnow", "datetime.datetime.utcnow",
+             "datetime.datetime.today", "date.today",
+             "datetime.date.today"}
+_SEEDED_NP = {"default_rng", "Generator", "SeedSequence", "PCG64",
+              "Philox", "MT19937", "bit_generator"}
+
+
+def applies(mod: str) -> bool:
+    return mod in _SCOPE
+
+
+def check(ctx):
+    for call in ctx.calls():
+        name = dotted(call.func)
+        if not name:
+            continue
+        if name in _CLOCKS:
+            yield (call.lineno, call.col_offset,
+                   f"wall-clock `{name}()` in pure-window code -- "
+                   "timing must flow through the injected `clock` "
+                   "(run_stream(clock=...))")
+        elif name in _DATETIME:
+            yield (call.lineno, call.col_offset,
+                   f"`{name}()` reads the wall clock -- pure-window "
+                   "code must be a function of (seed, t)")
+        elif name.startswith("random."):
+            yield (call.lineno, call.col_offset,
+                   f"stdlib `{name}` draws from the unseeded global "
+                   "RNG -- windows are pure (seed, t) functions; use "
+                   "np.random.default_rng((seed, t))")
+        elif name.startswith(("np.random.", "numpy.random.")):
+            attr = name.rsplit(".", 1)[-1]
+            if attr in _SEEDED_NP:
+                if attr == "default_rng" and not call.args:
+                    yield (call.lineno, call.col_offset,
+                           "`default_rng()` without a seed is "
+                           "entropy-seeded -- derive the seed from "
+                           "(seed, t)")
+                continue
+            yield (call.lineno, call.col_offset,
+                   f"`{name}` uses numpy's GLOBAL RNG -- windows are "
+                   "pure (seed, t) functions; use "
+                   "np.random.default_rng((seed, t))")

@@ -1,0 +1,48 @@
+"""GF006: ``-0.0`` canonicalization via ``+ 0.0``.
+
+``x + 0.0`` looks like it normalizes ``-0.0`` to ``+0.0`` (IEEE-754:
+``-0.0 + 0.0 == +0.0``), and it does -- until XLA's algebraic
+simplifier folds the add away entirely, at which point ``-0.0``
+survives into sort keys and monotone float-bit encodings and flips
+orderings.  PR 7 hit this in the device twin of the chunk-table
+compactor (two-key ``lax.sort`` over monotone float bits): the fix is
+an explicit select, ``jnp.where(x == 0, 0.0, x)``, which XLA does not
+fold.
+"""
+import ast
+
+from repro.analysis.lint import dotted
+
+CODE = "GF006"
+TITLE = "-0.0 canonicalization via `+ 0.0` (XLA folds it)"
+RATIONALE = ("PR 7: the jitted chunk-table compactor needed -0.0 "
+             "canonicalized before monotone-bit sorting; `+ 0.0` is "
+             "folded by the algebraic simplifier, `where` is not.")
+
+
+def applies(mod: str) -> bool:
+    return mod.endswith(".py")
+
+
+def _is_float_zero(node) -> bool:
+    return (isinstance(node, ast.Constant)
+            and isinstance(node.value, float) and node.value == 0.0)
+
+
+def check(ctx):
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, ast.BinOp) and isinstance(n.op, (ast.Add,
+                                                          ast.Sub)):
+            if _is_float_zero(n.right) or (isinstance(n.op, ast.Add)
+                                           and _is_float_zero(n.left)):
+                yield (n.lineno, n.col_offset,
+                       "`+ 0.0` / `- 0.0` is folded away by XLA and "
+                       "does NOT canonicalize -0.0 -- use "
+                       "jnp.where(x == 0, 0.0, x) (PR 7)")
+        elif isinstance(n, ast.Call) and dotted(n.func) in ("jnp.add",
+                                                            "lax.add"):
+            if any(_is_float_zero(a) for a in n.args):
+                yield (n.lineno, n.col_offset,
+                       "`add(x, 0.0)` is folded away by XLA and does "
+                       "NOT canonicalize -0.0 -- use jnp.where "
+                       "(PR 7)")

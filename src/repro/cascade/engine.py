@@ -352,6 +352,9 @@ def _desc_perm(scores: np.ndarray, ids: np.ndarray) -> np.ndarray:
     or -inf).  Other dtypes fall back to np.lexsort.
     """
     if scores.dtype == np.float32:
+        # gf: allow[GF006] host-NumPy path: the add executes eagerly
+        # so -0.0 really becomes +0.0; only the jitted twin needs the
+        # where form (_desc_perm_jax uses it)
         s = scores + 0.0  # canonicalize -0.0 to +0.0
         b = s.view(np.int32)
         mono = b ^ ((b >> 31) & np.int32(0x7FFFFFFF))  # float order -> int
@@ -541,7 +544,6 @@ def _simulate_k3_numpy(stage_scores: dict, lay: dict, clicks: np.ndarray,
       compact list of length cap = max(n3) per distinct n2 serves every
       chain, and all chain arithmetic runs on (U, cap) arrays.
     """
-    u_n = clicks.shape[0]
     gk = lay["group_key"]
     g_n = len(gk)
     p_sorted, clicks_sorted, cap = _compact_group_tables(

@@ -121,7 +121,7 @@ def lm_train_cell(arch_id: str, cfg: lm.LMConfig, shape_name: str,
         # ZeRO-2-style: keep accumulated grads in the params' (FSDP x TP)
         # layout - forces reduce-scatter instead of replicated all-reduce
         # and caps the fp32 grad buffer at params_bytes / n_shards.
-        from repro.distributed.sharding import constrain, current_mesh
+        from repro.distributed.sharding import current_mesh
         if current_mesh() is None:
             return grads
         return jax.tree_util.tree_map(

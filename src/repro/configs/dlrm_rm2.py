@@ -63,7 +63,7 @@ def _hybrid_train_cell(cfg, params, pspec, batch, bspec, b) -> DryRunCell:
     import jax
     from repro.configs.base import _adam_specs
     from repro.training.optimizer import AdamW
-    from repro.training.trainer import TrainState, init_state
+    from repro.training.trainer import TrainState
 
     opt = AdamW(weight_decay=0.0)
 

@@ -5,8 +5,6 @@ MoE 32 experts top-8.  ~1.3B total / ~0.4B active params.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import base

@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import BATCH, DryRunCell, _adam_specs

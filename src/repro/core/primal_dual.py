@@ -195,6 +195,8 @@ def dual_descent(rewards: jnp.ndarray, costs: jnp.ndarray, budget,
         # an all-masked (empty) window carries no information: floor
         # n_eff so the step normalization cannot explode and slam the
         # price to 0
+        # gf: allow[GF003] THE scalar reference expression: the vector
+        # path below reproduces this exact float program (PR 4)
         norm = jnp.maximum(n_eff, 1.0) * jnp.mean(costs) ** 2 + 1e-30
     else:
         cm = _as_cost_map(costs)
@@ -216,6 +218,9 @@ def dual_descent(rewards: jnp.ndarray, costs: jnp.ndarray, budget,
         active = (cm > 0).astype(jnp.float32)
         cnt = jnp.maximum(jnp.sum(active, axis=0), 1.0)
         corr = (jnp.float32(cm.shape[0]) / cnt) ** 2
+        # gf: allow[GF003] deliberately the scalar path's mean times a
+        # separate (M/cnt)^2 correction so K=1 stays bitwise (PR 4;
+        # folding the correction INTO the mean is the hazard)
         base = jnp.maximum(n_k, 1.0) * jnp.mean(cm, axis=0) ** 2 + 1e-30
         norm = jnp.broadcast_to(base * corr, lam0.shape)
 

@@ -17,8 +17,7 @@ Ablation switches (`recursive`, `multi_basis`) reproduce paper Table 4.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Sequence
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ Ali-CCP is samplable without materializing it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -255,7 +255,6 @@ class StreamingWorld:
         from scipy.special import ndtr  # Phi, vectorized
         cfg = self.cfg
         ids = np.asarray(ids, np.int64)
-        n = len(ids)
         z = _hash_normal(cfg.seed, _H_TASTE, ids[:, None],
                          np.arange(cfg.d_latent)[None, :]) \
             / np.sqrt(cfg.d_latent)

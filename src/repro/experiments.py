@@ -19,7 +19,6 @@ examples/.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 
 import jax
@@ -32,7 +31,6 @@ from repro.core.action_chain import (ActionChainSet, ModelInstance, StageSpec,
                                      generate_action_chains)
 from repro.core.baselines import (StageActionSpace, cras_allocation,
                                   equal_allocation)
-from repro.core.pfec import pfec_report
 from repro.core.primal_dual import allocate, dual_bisect
 from repro.core.reward_model import (RewardModelConfig, chain_label_norm,
                                      denormalize_rewards, field_rce,

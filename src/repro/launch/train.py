@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_arch
@@ -26,8 +25,6 @@ from repro.training.trainer import (Trainer, TrainerConfig, build_train_step,
 
 
 def make_pipeline(mod, cfg, global_batch: int, seed: int):
-    rng_proto = np.random.default_rng(seed)
-
     def fn(rng, step, lo, hi):
         b = mod.smoke_batch(rng, cfg)
         return {k: np.asarray(v) for k, v in b.items()}

@@ -10,7 +10,6 @@ serialize trivially in the checkpoint layer.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Callable, Sequence
 
 import jax

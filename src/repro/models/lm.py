@@ -21,7 +21,7 @@ pattern).  Entry points: ``forward`` / ``loss_fn`` (train),
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -298,7 +298,6 @@ def _attention(cfg: LMConfig, q, k, v, mask):
     scale = cfg.query_scale or 1.0 / math.sqrt(cfg.d_head)
     groups = cfg.n_heads // cfg.n_kv_heads
     b, t = q.shape[0], q.shape[1]
-    s = k.shape[1]
     qg = q.reshape(b, t, cfg.n_kv_heads, groups, cfg.d_head)
     logits = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32) * scale
     if cfg.attn_softcap:

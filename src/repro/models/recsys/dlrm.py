@@ -17,7 +17,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.flops import dense_flops, mlp_flops
+from repro.core.flops import mlp_flops
 from repro.models import layers as L
 from repro.models.embedding import (sharded_embedding_apply,
                                     sharded_embedding_apply_2d)

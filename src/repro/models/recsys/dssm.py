@@ -11,9 +11,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.flops import dense_flops, mlp_flops
+from repro.core.flops import mlp_flops
 from repro.models import layers as L
-from repro.models.embedding import fixed_bag
 
 
 @dataclass(frozen=True)

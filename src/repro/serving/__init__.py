@@ -141,6 +141,40 @@ A map of the unified allocator core and the layers over it:
       ``run_stream(..., clock=...)`` injects the timing clock so
       tests pin prep/stall/submit attribution deterministically.
 
+Invariants (enforced at lint time by ``repro.analysis`` -- the
+greenflow-check suite; ``python -m repro.analysis src`` and the CI
+static-analysis job reject violations, ``--jaxpr-audit`` re-checks the
+lowered fused pass):
+
+  GF001  ordered collectives.  Serving/distributed code never calls raw
+      ``lax.psum``: backend ring/tree reduction order varies with
+      topology, and float addition is not associative.  Cross-host
+      stitching goes through ``distributed.sharding.ordered_psum``
+      (all_gather + local sum over the fixed shard axis) -- the bitwise
+      decision/lambda parity the PR 9 mesh guarantees.
+  GF002  no hidden host syncs.  The hot-path modules (pipeline, stream,
+      guard, engine, request_source) keep ``.item()`` /
+      ``jax.device_get`` / host numpy out of the window path: the
+      prefetch overlap (PR 7) and the telemetry-off bitwise guarantee
+      (PR 8) both assume device arrays are only read post-drain.
+  GF003  no ``jnp.mean`` in dual-price arithmetic.  XLA strength-
+      reduces mean to sum*(1/n) and reassociates the divisor chain;
+      PR 4's scalar-vs-vectorized K=1 bit-parity broke exactly this
+      way.  Dual norms structure their divisors explicitly (the two
+      sanctioned reference expressions carry justified pragmas).
+  GF004  jit hygiene.  ``static_argnames`` must name real parameters
+      (a typo is silently ignored and retraces per value -- PR 2), and
+      a buffer passed at a ``donate_argnums`` position is never read
+      afterwards (the dual chain rebinds, with ``_lam_rec`` as the
+      readable bitwise copy -- PR 7/9).
+  GF005  pure windows.  Window-producing code is a function of
+      (seed, t): no wall clocks (timing is injected via ``run_stream
+      (clock=...)``, PR 8) and no global RNG (every host must derive
+      identical arrivals, PR 9).
+  GF006  signed-zero canonicalization uses ``jnp.where``, never
+      ``+ 0.0`` -- XLA folds the add and -0.0 leaks into the monotone
+      float-bit sort keys (PR 7's device compactor).
+
 ``launch/serve.py`` is the CLI front end (--scenario ... --source
 table|generated|memmap --tenant-mode shared|priced --geo-split
 flow|argmax --shards N); benchmarks: ``bench_serve.py`` (fused pass vs

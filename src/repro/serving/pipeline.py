@@ -460,6 +460,9 @@ class ServingPipeline:
                 r_max = jnp.max(jnp.abs(rewards))
                 if axis is not None:  # shard-invariant scale
                     r_max = jax.lax.pmax(r_max, axis)
+                # gf: allow[GF003] tie-break scale only: eps_green
+                # orders regions at lam=0 and never enters the dual
+                # update, so reassociation cannot drift the price
                 eps_green = 1e-6 * r_max / (jnp.mean(opt_costs) + 1e-30)
                 u_ir = q_ir + eps_green * scales[None, :]  # green floor
                 r0 = jnp.argmin(u_ir, axis=1)  # (b,)
@@ -570,6 +573,9 @@ class ServingPipeline:
                 r_max = jnp.max(jnp.abs(rewards))
                 if axis is not None:  # shard-invariant scale
                     r_max = jax.lax.pmax(r_max, axis)
+                # gf: allow[GF003] tie-break scale only: eps_green
+                # orders regions at lam=0 and never enters the dual
+                # update, so reassociation cannot drift the price
                 eps_green = 1e-6 * r_max / (jnp.mean(opt_costs) + 1e-30)
                 if flow:
                     # per-flop priced cost per region; the eps_green

@@ -24,8 +24,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax
-
 from repro.training import checkpoint as ckpt_lib
 
 

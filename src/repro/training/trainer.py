@@ -18,14 +18,14 @@ from __future__ import annotations
 
 import signal
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.training import checkpoint as ckpt_lib
-from repro.training.optimizer import AdamW, clip_by_global_norm
+from repro.training.optimizer import clip_by_global_norm
 
 
 @dataclass
